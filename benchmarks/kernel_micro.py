@@ -1,0 +1,108 @@
+"""Kernel microbenchmarks.
+
+This container is CPU-only, so the numbers that matter for the TPU target
+are STRUCTURAL, not wall-clock: per-kernel VMEM working set, arithmetic
+intensity, and the modeled v5e time per call (roofline of the kernel's own
+flops/bytes).  Wall-clock here times the pure-jnp reference path on CPU —
+useful only as a relative shape-scaling sanity check, clearly labelled.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.roofline import HW_V5E
+
+RNG = np.random.default_rng(0)
+
+
+def _t(*s, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(s), dtype)
+
+
+def _wall(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def flash_attention_model(rows):
+    print("\n== flash attention kernel model (v5e) ==")
+    print(f"{'B,S,H,D':>18s} {'flops':>10s} {'bytes':>10s} {'AI':>6s} "
+          f"{'v5e_us':>8s} {'vmem_kb':>8s} {'cpu_ref_us':>10s}")
+    for (B, S, H, D) in [(1, 1024, 8, 128), (1, 4096, 8, 128),
+                         (4, 2048, 16, 128)]:
+        bq = bk = 256
+        flops = 4 * B * H * S * S * D * 0.5             # causal half
+        byts = 2 * B * S * H * D * 2 * 3                # q,k,v read + o write
+        vmem = (bq + 2 * bk) * D * 2 + bq * (D + 2) * 4
+        v5e_us = max(flops / HW_V5E.peak_flops,
+                     byts / HW_V5E.hbm_bw) * 1e6
+        q = _t(B, S, H, D)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        f = jax.jit(lambda q, p: ref.flash_attention_ref(
+            q, q, q, p, p, causal=True))
+        cpu = _wall(f, q, pos)
+        ai = flops / byts
+        print(f"{f'{B},{S},{H},{D}':>18s} {flops:10.2e} {byts:10.2e} "
+              f"{ai:6.0f} {v5e_us:8.1f} {vmem / 1024:8.0f} {cpu:10.0f}")
+        rows.append((f"fa_{B}x{S}x{H}x{D}", cpu, f"v5e_us={v5e_us:.1f}"))
+
+
+def decode_attention_model(rows):
+    print("\n== flash-decode kernel model (v5e, memory-bound) ==")
+    for (B, Hkv, G, D, C) in [(8, 8, 1, 128, 32768), (128, 8, 12, 128, 32768)]:
+        flops = 4 * B * Hkv * G * C * D
+        byts = B * C * Hkv * D * 2 * 2                  # stream K+V once
+        v5e_us = max(flops / HW_V5E.peak_flops, byts / HW_V5E.hbm_bw) * 1e6
+        ai = flops / byts
+        print(f"B={B} HkvxG={Hkv}x{G} C={C}: AI={ai:.1f} flop/B "
+              f"-> v5e {v5e_us:.0f} us/call ({'memory' if ai < 240 else 'compute'}-bound)")
+        rows.append((f"dec_{B}x{Hkv}x{G}x{C}", v5e_us, f"AI={ai:.1f}"))
+
+
+def recurrence_model(rows):
+    print("\n== rglru / mlstm kernel model ==")
+    B, S, W = 8, 4096, 4096
+    byts = 2 * B * S * W * 4 + B * S * W * 4            # a,b read + h write
+    flops = 2 * B * S * W
+    v5e_us = byts / HW_V5E.hbm_bw * 1e6
+    print(f"rglru B={B} S={S} W={W}: AI={flops / byts:.2f} "
+          f"(pure streaming) -> v5e {v5e_us:.0f} us")
+    rows.append(("rglru_model", v5e_us, f"AI={flops / byts:.2f}"))
+
+    a = jnp.asarray(RNG.uniform(0.5, 0.99, (2, 512, 256)), jnp.float32)
+    b = _t(2, 512, 256)
+    cpu = _wall(jax.jit(lambda a, b: ref.rglru_scan_ref(a, b)), a, b)
+    rows.append(("rglru_cpu_ref", cpu, "jnp associative_scan"))
+
+    B, S, H, Dh, Tc = 1, 4096, 4, 512, 128
+    intra = 2 * B * H * S * Tc * Dh * 2
+    inter = 2 * B * H * (S // Tc) * (Dh * Dh * Tc * 2)
+    byts = 3 * B * S * H * Dh * 2 * 2
+    ai = (intra + inter) / byts
+    v5e_us = max((intra + inter) / HW_V5E.peak_flops,
+                 byts / HW_V5E.hbm_bw) * 1e6
+    print(f"mlstm chunkwise Tc={Tc}: AI={ai:.0f} -> v5e {v5e_us:.0f} us "
+          f"(vs O(S^2) parallel form: "
+          f"{2 * B * H * S * S * Dh * 2 / HW_V5E.peak_flops * 1e6:.0f} us)")
+    rows.append(("mlstm_model", v5e_us, f"AI={ai:.0f}"))
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    flash_attention_model(rows)
+    decode_attention_model(rows)
+    recurrence_model(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

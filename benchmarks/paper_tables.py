@@ -1,0 +1,69 @@
+"""The paper's published numbers (Tables 4.2-4.9), used for side-by-side
+comparison in every benchmark.  Values are per-device averages in ms except
+skip (fraction), esd (divisor) and power (mW)."""
+
+# Table 4.2 — one-second one-node
+T42 = {
+    "pixel3":    dict(processing=385, wait=211, overhead=26, turnaround=972,
+                      esd=2.8, skip=0.592, power=19.175),
+    "pixel6":    dict(processing=389, wait=208, overhead=27, turnaround=974,
+                      esd=2.6, skip=0.145, power=35.935),
+    "oneplus8":  dict(processing=411, wait=166, overhead=20, turnaround=947,
+                      esd=0.0, skip=0.0, power=110.208),
+    "findx2pro": dict(processing=352, wait=150, overhead=22, turnaround=874,
+                      esd=0.0, skip=0.0, power=172.817),
+}
+
+# Table 4.3 — one-second two-node (master*, worker) runs
+T43 = [
+    ("findx2pro*", "oneplus8",
+     dict(master_turn=662, worker_turn=976, worker_esd=2.5, worker_skip=0.261)),
+    ("findx2pro*", "pixel6",
+     dict(master_turn=670, worker_turn=996, worker_esd=5.0, worker_skip=0.805)),
+    ("pixel6*", "pixel3",
+     dict(master_turn=831, worker_turn=981, worker_esd=6.0, worker_skip=0.987)),
+]
+
+# Table 4.4 — one-second three-node (findx2pro master, segmentation)
+T44 = [
+    ("findx2pro*", ("pixel6", "oneplus8"),
+     dict(master_turn=655, worker_turns=(980, 891))),
+    ("findx2pro*", ("pixel6", "pixel3"),
+     dict(master_turn=652, worker_turns=(942, 922))),
+]
+
+# Table 4.5 — two-second one-node
+T45 = {
+    "pixel3":    dict(download=893, processing=766, turnaround=1952,
+                      esd=2.7, skip=0.371),
+    "pixel6":    dict(download=759, processing=783, turnaround=1925,
+                      esd=0.0, skip=0.0),
+    "oneplus8":  dict(download=598, processing=763, turnaround=1828,
+                      esd=0.0, skip=0.0),
+    "findx2pro": dict(download=613, processing=649, turnaround=1644,
+                      esd=0.0, skip=0.0),
+}
+
+# Table 4.6 — two-second two-node
+T46 = [
+    ("findx2pro*", "oneplus8", dict(master_turn=1189, worker_turn=1836)),
+    ("findx2pro*", "pixel6", dict(master_turn=1197, worker_turn=1901)),
+    ("pixel6*", "pixel3", dict(master_turn=1637, worker_turn=1919)),
+]
+
+# Table 4.7 — two-second three-node, no early stopping anywhere
+T47 = [
+    ("findx2pro*", ("pixel6", "oneplus8"),
+     dict(master_turn=1238, worker_turns=(1604, 1398))),
+    ("findx2pro*", ("pixel6", "pixel3"),
+     dict(master_turn=1210, worker_turns=(1605, 1660))),
+]
+
+# Tables 4.8/4.9 — per-video average power (mW), one-node rows
+T48_POWER_1S = {"pixel3": 19.175, "pixel6": 35.935, "oneplus8": 110.208,
+                "findx2pro": 172.817}
+T49_POWER_2S = {"pixel3": 96.031, "pixel6": 57.537, "oneplus8": 217.600,
+                "findx2pro": 353.838}
+# battery % consumed per 1600 s run (Table 4.8, one-node)
+T48_BATTERY = {"pixel3": 0.08, "pixel6": 0.05, "oneplus8": 0.05,
+               "findx2pro": 0.05}

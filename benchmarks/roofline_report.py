@@ -1,0 +1,95 @@
+"""Roofline report: aggregate experiments/dryrun/*.json into the §Roofline
+table (EXPERIMENTS.md) and pick the hillclimb candidates."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(outdir="experiments/dryrun"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells, mesh="single"):
+    rows = []
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c.get("skip"):
+            rows.append((c["arch"], c["shape"], "SKIP", "", "", "", "", ""))
+            continue
+        if not c["ok"]:
+            rows.append((c["arch"], c["shape"], "FAIL", "", "", "", "", ""))
+            continue
+        r = c["roofline"]
+        rows.append((c["arch"], c["shape"],
+                     f"{r['compute_s']:.2e}", f"{r['memory_s']:.2e}",
+                     f"{r['collective_s']:.2e}", r["dominant"],
+                     f"{r['useful_ratio']:.2f}",
+                     f"{r['roofline_fraction']:.4f}"))
+    return rows
+
+
+def print_table(cells, mesh="single"):
+    print(f"\n== roofline baselines ({mesh}-pod) ==")
+    hdr = ("arch", "shape", "compute_s", "memory_s", "coll_s", "dominant",
+           "useful", "roofline")
+    rows = table(cells, mesh)
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    print("  ".join(h.ljust(w[i]) for i, h in enumerate(hdr)))
+    for r in rows:
+        print("  ".join(str(x).ljust(w[i]) for i, x in enumerate(r)))
+
+
+def candidates(cells):
+    """Pick the three hillclimb cells: worst roofline fraction, most
+    collective-bound, most representative of the paper's technique."""
+    ok = [c for c in cells if c["mesh"] == "single" and c["ok"]
+          and not c.get("skip")]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda c: (c["roofline"]["collective_s"]
+                                  / max(c["roofline"]["compute_s"], 1e-12)))
+    # the paper's technique is deadline-driven *serving*: the decode cells
+    # are its pod analogue; take the biggest-footprint decode cell
+    serving = [c for c in ok if c["shape"] in ("decode_32k", "long_500k")]
+    rep = max(serving,
+              key=lambda c: c["memory"].get("bytes_per_device", 0)) \
+        if serving else worst
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    cells = load()
+    if not cells:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return rows
+    for mesh in ("single", "multi"):
+        print_table(cells, mesh)
+    cands = candidates(cells)
+    print("\n== hillclimb candidates ==")
+    for why, c in cands.items():
+        print(f"{why:22s} {c['arch']} x {c['shape']} "
+              f"(dominant={c['roofline']['dominant']}, "
+              f"frac={c['roofline']['roofline_fraction']:.4f})")
+        rows.append((f"roofline_{why}",
+                     c["roofline"]["roofline_fraction"],
+                     f"{c['arch']}x{c['shape']}"))
+    n_ok = sum(1 for c in cells if c["ok"] and not c.get("skip"))
+    n_skip = sum(1 for c in cells if c.get("skip"))
+    n_fail = sum(1 for c in cells if not c["ok"])
+    print(f"\ncells: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    rows.append(("dryrun_cells_ok", n_ok, f"skip={n_skip},fail={n_fail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

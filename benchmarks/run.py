@@ -1,0 +1,38 @@
+"""Benchmark orchestrator: one module per paper table/figure + the
+scale/roofline deliverables.  Prints a final ``name,value,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only turnaround,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ["turnaround", "energy", "esd_sweep", "kernel_micro",
+           "serving_bench", "roofline_report"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    rows = []
+    for name in (only or MODULES):
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        print(f"\n######## {name} ########")
+        t0 = time.time()
+        mod.main(rows)
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+
+    print("\n======== CSV ========")
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

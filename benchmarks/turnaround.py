@@ -1,0 +1,132 @@
+"""Turnaround benchmarks: paper Tables 4.2-4.7 side by side with ours.
+
+One function per paper table; each runs the EDA runtime on the calibrated
+device profiles with the dynamic-ESD controller discovering the per-device
+ESD (the paper tuned these manually) and prints ours|paper columns.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.config import EDAConfig
+from repro.core.runtime import EDARuntime, PAPER_DEVICES
+
+from benchmarks import paper_tables as P
+
+N_PAIRS = 300
+
+
+def _rt(master, workers=(), gran=1.0, simdl=0.35, seg=False):
+    m = replace(PAPER_DEVICES[master], dynamic_esd=True)
+    ws = [replace(PAPER_DEVICES[w], dynamic_esd=True) for w in workers]
+    rt = EDARuntime(eda=EDAConfig(granularity_s=gran,
+                                  simulate_download_s=simdl,
+                                  segmentation=seg, dynamic_esd=True),
+                    master=m, workers=ws)
+    rt.run(N_PAIRS)
+    return rt
+
+
+def _fmt(ours, paper):
+    return f"{ours:6.0f}|{paper:6.0f}"
+
+
+def one_node_1s(rows):
+    print("\n== Table 4.2: 1 s one-node (ours|paper) ==")
+    print(f"{'device':10s} {'proc ms':>13s} {'turn ms':>13s} "
+          f"{'esd':>10s} {'skip %':>13s}")
+    for name, p in P.T42.items():
+        rt = _rt(name)
+        s = rt.ledger.summarise()[0]
+        esd = rt.esd_values()[name]
+        esd = 0.0 if esd <= 1.05 else esd
+        print(f"{name:10s} {_fmt(s.processing_ms, p['processing'])} "
+              f"{_fmt(s.turnaround_ms, p['turnaround'])} "
+              f"{esd:4.1f}|{p['esd']:4.1f} "
+              f"{_fmt(100 * s.skip_rate, 100 * p['skip'])}")
+        rows.append(("t42_" + name, s.turnaround_ms,
+                     f"paper={p['turnaround']}"))
+
+
+def two_node_1s(rows):
+    print("\n== Table 4.3: 1 s two-node (ours|paper turnaround) ==")
+    for master, worker, p in P.T43:
+        rt = _rt(master.rstrip("*"), [worker])
+        by = {s.device: s for s in rt.ledger.summarise()}
+        m, w = by[master.rstrip("*")], by[worker]
+        print(f"{master:12s} {_fmt(m.turnaround_ms, p['master_turn'])}   "
+              f"{worker:10s} {_fmt(w.turnaround_ms, p['worker_turn'])} "
+              f"skip {100 * w.skip_rate:4.1f}|{100 * p['worker_skip']:4.1f}%")
+        rows.append((f"t43_{master}{worker}", w.turnaround_ms,
+                     f"paper={p['worker_turn']}"))
+
+
+def three_node_1s(rows):
+    print("\n== Table 4.4: 1 s three-node + segmentation ==")
+    for master, workers, p in P.T44:
+        rt = _rt(master.rstrip("*"), list(workers), seg=True)
+        by = {s.device: s for s in rt.ledger.summarise()}
+        m = by[master.rstrip("*")]
+        cols = [f"{master} {_fmt(m.turnaround_ms, p['master_turn'])}"]
+        for w, pt in zip(workers, p["worker_turns"]):
+            cols.append(f"{w} {_fmt(by[w].turnaround_ms, pt)}")
+        print("   ".join(cols))
+        rows.append((f"t44_{'_'.join(workers)}", m.turnaround_ms,
+                     f"paper={p['master_turn']}"))
+
+
+def one_node_2s(rows):
+    print("\n== Table 4.5: 2 s one-node (ours|paper) ==")
+    for name, p in P.T45.items():
+        rt = _rt(name, gran=2.0, simdl=0.0)
+        s = rt.ledger.summarise()[0]
+        print(f"{name:10s} dl {_fmt(s.download_ms, p['download'])} "
+              f"proc {_fmt(s.processing_ms, p['processing'])} "
+              f"turn {_fmt(s.turnaround_ms, p['turnaround'])} "
+              f"skip {100 * s.skip_rate:4.1f}|{100 * p['skip']:4.1f}%")
+        rows.append(("t45_" + name, s.turnaround_ms,
+                     f"paper={p['turnaround']}"))
+
+
+def two_node_2s(rows):
+    print("\n== Table 4.6: 2 s two-node ==")
+    for master, worker, p in P.T46:
+        rt = _rt(master.rstrip("*"), [worker], gran=2.0, simdl=0.0)
+        by = {s.device: s for s in rt.ledger.summarise()}
+        m, w = by[master.rstrip("*")], by[worker]
+        print(f"{master:12s} {_fmt(m.turnaround_ms, p['master_turn'])}   "
+              f"{worker:10s} {_fmt(w.turnaround_ms, p['worker_turn'])}")
+        rows.append((f"t46_{master}{worker}", w.turnaround_ms,
+                     f"paper={p['worker_turn']}"))
+
+
+def three_node_2s(rows):
+    print("\n== Table 4.7: 2 s three-node + segmentation (no ESD) ==")
+    for master, workers, p in P.T47:
+        rt = _rt(master.rstrip("*"), list(workers), gran=2.0, simdl=0.0,
+                 seg=True)
+        by = {s.device: s for s in rt.ledger.summarise()}
+        m = by[master.rstrip("*")]
+        esds = rt.esd_values()
+        no_esd = all(v <= 1.05 for v in esds.values())
+        cols = [f"{master} {_fmt(m.turnaround_ms, p['master_turn'])}"]
+        for w, pt in zip(workers, p["worker_turns"]):
+            cols.append(f"{w} {_fmt(by[w].turnaround_ms, pt)}")
+        print("   ".join(cols) + f"   no-ESD={no_esd} (paper: True)")
+        rows.append((f"t47_{'_'.join(workers)}", m.turnaround_ms,
+                     f"paper={p['master_turn']},no_esd={no_esd}"))
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    one_node_1s(rows)
+    two_node_1s(rows)
+    three_node_1s(rows)
+    one_node_2s(rows)
+    two_node_2s(rows)
+    three_node_2s(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

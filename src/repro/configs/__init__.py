@@ -1,0 +1,30 @@
+"""Per-architecture configs (assigned pool + the paper's own workloads).
+
+Importing this package registers every arch with ``repro.config``.
+"""
+from repro.configs import (  # noqa: F401
+    whisper_base,
+    starcoder2_7b,
+    starcoder2_3b,
+    qwen1_5_32b,
+    command_r_plus_104b,
+    xlstm_350m,
+    deepseek_v2_236b,
+    granite_moe_1b_a400m,
+    recurrentgemma_9b,
+    internvl2_2b,
+    eda_vision,
+)
+
+ASSIGNED = [
+    "whisper-base",
+    "starcoder2-7b",
+    "qwen1.5-32b",
+    "starcoder2-3b",
+    "command-r-plus-104b",
+    "xlstm-350m",
+    "deepseek-v2-236b",
+    "granite-moe-1b-a400m",
+    "recurrentgemma-9b",
+    "internvl2-2b",
+]

@@ -1,0 +1,38 @@
+"""whisper-base [audio] — enc-dec transformer backbone, conv frontend STUB.
+
+6L (x2: encoder+decoder) d_model=512 8H (kv=8) d_ff=2048 vocab=51865
+[arXiv:2212.04356].  The audio frontend (log-mel + conv) is a stub per the
+task statement: ``input_specs()`` supplies precomputed frame embeddings.
+Positional encoding is sinusoidal (computed, any length) instead of Whisper's
+learned decoder table so that synthetic long shapes lower cleanly; noted in
+DESIGN.md §2.
+"""
+from repro.config import ModelConfig, register_arch
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="encdec",
+        num_layers=6,               # decoder layers
+        num_encoder_layers=6,
+        encoder_seq=1500,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=51865,
+        attention="full",
+        rope=False,                 # sinusoidal absolute positions
+        qkv_bias=True,
+        o_bias=True,
+        norm="layernorm",
+        norm_eps=1e-5,
+        mlp="gelu_mlp",
+        mlp_bias=True,
+        tie_embeddings=True,
+    )
+
+
+register_arch("whisper-base", config)

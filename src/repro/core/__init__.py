@@ -1,0 +1,18 @@
+"""The paper's primary contribution: EDA's four optimisation techniques as a
+deadline-driven distributed analytics runtime.
+
+  scheduler     capacity-aware master/worker placement (paper section 3.2.5)
+  early_stop    ESD deadline policy + dynamic-ESD AIMD controller (section 6)
+  segmentation  equal-split / exact-merge of streams (section 3.2.4)
+  pipeline      simultaneous download + analysis (double-buffered ingest)
+  runtime       master loop + event clock reproducing the section 4.2 tables
+  telemetry     per-segment turnaround decomposition ledger
+  energy        energy proxy model (section 4.2.3)
+"""
+from repro.core.early_stop import DynamicESD, EarlyStopPolicy, budget_mask  # noqa: F401
+from repro.core.runtime import (EDARuntime, DeviceProfile, PAPER_DEVICES,   # noqa: F401
+                                SimExecutor)
+from repro.core.scheduler import CapacityScheduler, WorkerState, HardwareInfo  # noqa: F401
+from repro.core.segmentation import (Segment, SegmentResult, merge_results,    # noqa: F401
+                                     split_video)
+from repro.core.telemetry import Ledger, SegmentRecord  # noqa: F401

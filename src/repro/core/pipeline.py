@@ -1,0 +1,69 @@
+"""Simultaneous download + analysis: double-buffered ingest.
+
+The paper's first optimisation overlaps downloading the next video pair with
+analysing the current one.  In the event-clock runtime this overlap is
+inherent (download times advance on the pair clock, device availability on
+each device's own clock).  For *real* execution — the e2e example driving
+actual JAX inference over synthetic dash-cam frames — this module provides
+the host-side machinery:
+
+  * :class:`DoubleBuffer` — a one-slot-lookahead prefetcher running the
+    ingest callable on a background thread while the caller consumes the
+    previous item (the paper's master download thread).
+  * :func:`overlapped` — iterator adaptor: ``for item in overlapped(src)``
+    guarantees ingest of item i+1 overlaps the loop body of item i.
+
+On a pod the same pattern becomes host->device transfer overlap: the data
+pipeline (``repro.data.prefetch``) calls ``jax.device_put`` inside the
+background thread so dispatch of step i hides H2D of step i+1.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Optional, TypeVar
+
+T = TypeVar("T")
+
+_SENTINEL = object()
+
+
+class DoubleBuffer:
+    """One-producer one-consumer lookahead buffer (depth configurable)."""
+
+    def __init__(self, source: Iterable[T], depth: int = 2,
+                 transform: Optional[Callable[[T], T]] = None) -> None:
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._transform = transform
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._produce, args=(iter(source),), daemon=True)
+        self._thread.start()
+
+    def _produce(self, it: Iterator[T]) -> None:
+        try:
+            for item in it:
+                if self._transform is not None:
+                    item = self._transform(item)
+                self._q.put(item)
+        except BaseException as e:          # surface in consumer
+            self._err = e
+        finally:
+            self._q.put(_SENTINEL)
+
+    def __iter__(self) -> Iterator[T]:
+        return self
+
+    def __next__(self) -> T:
+        item = self._q.get()
+        if item is _SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def overlapped(source: Iterable[T], depth: int = 2,
+               transform: Optional[Callable[[T], T]] = None) -> Iterator[T]:
+    """``for x in overlapped(gen())`` — ingest overlaps the loop body."""
+    return iter(DoubleBuffer(source, depth=depth, transform=transform))

@@ -1,0 +1,164 @@
+"""Per-segment timing decomposition and the turnaround ledger (paper §4.2.1).
+
+The paper decomposes each video's life into six time types measured in ms:
+
+  download    dash cam -> master (simulated 350 ms at 1 s granularity)
+  transfer    master -> worker video payload
+  return      worker -> master result payload
+  processing  frame extraction + inference + result write
+  wait        arrival at device -> processing start (queueing + system)
+  overhead    residual: turnaround - (sum of the above)
+
+``turnaround`` is download-start -> result-at-master; *near real-time* means
+turnaround <= video length.  The ledger reproduces the paper's per-device
+averages (Tables 4.2-4.7) and the skip-rate accounting (§4.2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+MS = float
+
+
+@dataclass
+class SegmentRecord:
+    video_id: str
+    stream: str                     # "outer" | "inner"
+    device: str
+    download_ms: MS = 0.0
+    transfer_ms: MS = 0.0
+    return_ms: MS = 0.0
+    processing_ms: MS = 0.0
+    wait_ms: MS = 0.0
+    overhead_ms: MS = 0.0
+    turnaround_ms: MS = 0.0
+    video_len_ms: MS = 0.0
+    esd: float = 0.0
+    frames_total: int = 0
+    frames_processed: int = 0
+    is_master: bool = False
+    energy_j: float = 0.0
+
+    @property
+    def frames_skipped(self) -> int:
+        return self.frames_total - self.frames_processed
+
+    @property
+    def skip_rate(self) -> float:
+        if self.frames_total == 0:
+            return 0.0
+        return self.frames_skipped / self.frames_total
+
+    @property
+    def real_time(self) -> bool:
+        return self.turnaround_ms <= self.video_len_ms
+
+    def close(self, turnaround_ms: MS) -> None:
+        """Set turnaround and derive overhead as the residual (§4.2.1)."""
+        self.turnaround_ms = turnaround_ms
+        accounted = (self.download_ms + self.transfer_ms + self.return_ms
+                     + self.processing_ms + self.wait_ms)
+        self.overhead_ms = max(turnaround_ms - accounted, 0.0)
+
+
+@dataclass
+class DeviceSummary:
+    device: str
+    is_master: bool
+    n: int
+    download_ms: MS
+    transfer_ms: MS
+    return_ms: MS
+    processing_ms: MS
+    wait_ms: MS
+    overhead_ms: MS
+    turnaround_ms: MS
+    esd: float
+    skip_rate: float
+    avg_power_mw: float
+    energy_j: float
+
+    def row(self) -> dict:
+        return {
+            "device": self.device + ("*" if self.is_master else ""),
+            "download_ms": round(self.download_ms),
+            "transfer_ms": round(self.transfer_ms),
+            "return_ms": round(self.return_ms),
+            "processing_ms": round(self.processing_ms),
+            "wait_ms": round(self.wait_ms),
+            "overhead_ms": round(self.overhead_ms),
+            "turnaround_ms": round(self.turnaround_ms),
+            "esd": self.esd,
+            "skip_rate": f"{100 * self.skip_rate:.1f}%",
+            "avg_power_mw": round(self.avg_power_mw, 1),
+        }
+
+
+class Ledger:
+    """Collects SegmentRecords; summarises per device like the paper tables."""
+
+    def __init__(self) -> None:
+        self.records: List[SegmentRecord] = []
+
+    def add(self, rec: SegmentRecord) -> None:
+        self.records.append(rec)
+
+    # ------------------------------------------------------------------
+    def by_device(self) -> Dict[str, List[SegmentRecord]]:
+        out: Dict[str, List[SegmentRecord]] = {}
+        for r in self.records:
+            out.setdefault(r.device, []).append(r)
+        return out
+
+    def summarise(self, wall_s: Optional[float] = None) -> List[DeviceSummary]:
+        sums = []
+        for dev, recs in sorted(self.by_device().items()):
+            n = len(recs)
+            mean = lambda f: sum(f(r) for r in recs) / n
+            frames_total = sum(r.frames_total for r in recs)
+            frames_done = sum(r.frames_processed for r in recs)
+            energy = sum(r.energy_j for r in recs)
+            # per-video average power (the paper's mW metric): energy per
+            # video over the video's wall length
+            video_s = mean(lambda r: r.video_len_ms) / 1000.0
+            sums.append(DeviceSummary(
+                device=dev,
+                is_master=any(r.is_master for r in recs),
+                n=n,
+                download_ms=mean(lambda r: r.download_ms),
+                transfer_ms=mean(lambda r: r.transfer_ms),
+                return_ms=mean(lambda r: r.return_ms),
+                processing_ms=mean(lambda r: r.processing_ms),
+                wait_ms=mean(lambda r: r.wait_ms),
+                overhead_ms=mean(lambda r: r.overhead_ms),
+                turnaround_ms=mean(lambda r: r.turnaround_ms),
+                esd=max(r.esd for r in recs),
+                skip_rate=(1 - frames_done / frames_total) if frames_total else 0.0,
+                avg_power_mw=1000.0 * (energy / n) / max(video_s, 1e-9),
+                energy_j=energy,
+            ))
+        return sums
+
+    def real_time_fraction(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.real_time for r in self.records) / len(self.records)
+
+    def mean_turnaround_ms(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.turnaround_ms for r in self.records) / len(self.records)
+
+    # ------------------------------------------------------------------
+    def table(self, wall_s: Optional[float] = None) -> str:
+        rows = [s.row() for s in self.summarise(wall_s)]
+        if not rows:
+            return "(empty ledger)"
+        cols = list(rows[0].keys())
+        widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+        head = " | ".join(c.ljust(widths[c]) for c in cols)
+        sep = "-+-".join("-" * widths[c] for c in cols)
+        body = "\n".join(" | ".join(str(r[c]).ljust(widths[c]) for c in cols)
+                         for r in rows)
+        return f"{head}\n{sep}\n{body}"

@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic dash-cam video + LM token sources, prefetch."""
+from repro.data.synthetic import (  # noqa: F401
+    DashCamSource,
+    VideoPair,
+    lm_batches,
+    synth_frames,
+)
+from repro.data.prefetch import device_prefetch  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the assigned architectures' compute hot spots.
+
+The paper's own contribution is system-level (scheduling/deadline policy --
+see ``repro.core``), so these kernels serve the transformer/recurrent inner
+loops of the assigned architecture pool: flash attention (prefill + decode),
+the RG-LRU linear recurrence, and the chunkwise mLSTM.
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``tests/test_kernels.py``
+sweeps shapes/dtypes in ``interpret=True`` mode against the oracles.
+"""

@@ -1,0 +1,102 @@
+"""Flash-decode for TPU (Pallas): one query token against a blocked KV cache.
+
+The decode hot loop has no query-sequence dim to tile, so MXU rows come from
+the GQA *group*: q is laid out (B, Hkv, G, D) and each grid step computes a
+(G x bk) score panel against one KV block.  Grid ``(B, Hkv, nk)`` with nk
+innermost; running (m, l, acc) in VMEM scratch exactly as prefill flash.
+
+For G = 1 (MHA) this degenerates to a (1 x bk) panel — still correct, VPU
+bound, which matches the decode roofline (decode is memory-bound anyway: the
+kernel's job is to stream K/V through VMEM once, not to saturate the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BK = 512
+
+
+def _dec_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                m_sc, l_sc, acc_sc, *, window: int, nk: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bk, D)
+    qp = qpos_ref[0]                              # (1,) int32 current position
+    kp = kpos_ref[0]                              # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kp >= 0) & (kp <= qp[0])
+    if window:
+        valid &= (qp[0] - kp) < window
+    valid = valid[None, :]                        # (1, bk) broadcast over G
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    m_sc[...] = m_new
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_bhgd(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_pos: jax.Array, kv_pos: jax.Array, *,
+                          window: int = 0, block_k: int = DEFAULT_BK,
+                          scale: float = None,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B,Hkv,G,D); k/v: (B,Hkv,C,D); q_pos: (B,1); kv_pos: (B,C).
+
+    C % block_k == 0 (padded slots carry kv_pos = -1).  ``scale`` defaults to
+    1/sqrt(D); callers that padded D must pass the unpadded value.
+    Returns (B,Hkv,G,D).
+    """
+    B, Hkv, G, D = q.shape
+    C = k.shape[2]
+    bk = min(block_k, C)
+    nk = C // bk
+    grid = (B, Hkv, nk)
+
+    kernel = functools.partial(_dec_kernel, window=window, nk=nk,
+                               scale=scale or 1.0 / (D ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

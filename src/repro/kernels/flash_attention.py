@@ -1,0 +1,120 @@
+"""Blocked flash attention for TPU (Pallas): causal / sliding-window / GQA.
+
+Grid ``(B, Hq, nq, nk)`` — ``nk`` innermost, which on TPU executes
+sequentially per (B, Hq, iq) so the online-softmax running state ``(m, l,
+acc)`` lives in VMEM scratch and carries across KV blocks.  One grid step
+touches
+
+  q block  (bq, D)      VMEM  (revisited, index (b, h, iq))
+  k,v      (bk, D) x2   VMEM  (streamed, kv head = h // G for GQA)
+  pos rows (bq,), (bk,) VMEM
+
+so VMEM working set ~ (bq + 2 bk) * D * 2B + scratch (bq * (D + 2)) * 4B:
+for bq = bk = 256 and D = 128 that is ~0.7 MB, safely inside the ~16 MB/core
+VMEM budget while keeping MXU matmul dims at 256x128 x 128x256.
+
+Masking uses explicit absolute positions (-1 = empty cache slot), which
+makes the same kernel correct for train (pos = iota), prefill, ring-buffer
+sliding-window caches and padded decode caches without host-side branching.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _fa_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+               m_sc, l_sc, acc_sc, *, causal: bool, window: int, nk: int,
+               scale: float):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    qp = qpos_ref[0]                               # (bq,) int32
+    kp = kpos_ref[0]                               # (bk,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = kp[None, :] >= 0
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window:
+        valid &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+    l_sc[...] = l_new
+    acc_sc[...] = acc_new
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         q_pos: jax.Array, kv_pos: jax.Array, *,
+                         causal: bool, window: int = 0,
+                         block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
+                         scale: float = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,S,D); k/v: (B,Hkv,C,D); q_pos: (B,S); kv_pos: (B,C).
+
+    Shapes must already be padded: S % block_q == 0, C % block_k == 0.
+    Padded kv slots carry kv_pos = -1.  ``scale`` defaults to 1/sqrt(D) but
+    callers that padded D must pass the unpadded value.
+    Returns (B,Hq,S,D) in q.dtype.
+    """
+    B, Hq, S, D = q.shape
+    Hkv, C = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, C)
+    nq = S // bq
+    nk = C // bk
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(_fa_kernel, causal=causal, window=window,
+                               nk=nk, scale=scale or 1.0 / (D ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

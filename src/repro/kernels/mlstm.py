@@ -1,0 +1,127 @@
+"""Chunkwise mLSTM (matrix-memory) kernel for TPU (Pallas).
+
+Exact chunkwise decomposition of the stabilised parallel form (xLSTM
+eq. 19-27): grid ``(B*H, nc)`` with the chunk dim innermost/sequential; the
+inter-chunk state ``(C: (Dk,Dv), n: (Dk,), m: scalar)`` carries in VMEM/SMEM
+scratch.  Per chunk of length ``Tc``:
+
+  intra   (Tc x Tc) gated score panel against the chunk's own K/V (MXU),
+  inter   q @ C_prev rescaled by exp(bcum + m_prev - m_t)  (MXU),
+  update  C <- C * exp(g + m_prev - m_new) + K^T (V * w),  g = chunk logF sum.
+
+Equivalence to the quadratic parallel form: the running row max over full
+history splits as max(intra_max_t, bcum_t + m_prev) because
+``m_prev = max_{s<=prev_end}(F_prev - F_s + i_s)`` and F is cumulative —
+both branches are exact, so the kernel matches ``ref.mlstm_ref`` to fp32
+rounding, while compute drops from O(S^2 Dh) to O(S Tc Dh + S Dh^2 / Tc)
+and memory from the O(S^2) score matrix to O(Tc^2 + Dh^2) in VMEM.
+
+VMEM: Tc = 128, Dh = 512 -> q/k/v blocks 3 x 256 KB, C scratch 1 MB, score
+panel 64 KB — ~2 MB total.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_CHUNK = 128
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+                  c_sc, n_sc, m_sc, *, scale: float, tc: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_sc[...] = jnp.zeros_like(c_sc)
+        n_sc[...] = jnp.zeros_like(n_sc)
+        m_sc[0] = NEG_INF
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (Tc, Dh)
+    k = k_ref[0].astype(jnp.float32)               # (Tc, Dh)
+    v = v_ref[0].astype(jnp.float32)               # (Tc, Dh)
+    ig = i_ref[0].astype(jnp.float32)              # (Tc,)
+    logf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))
+    bcum = jnp.cumsum(logf)                        # inclusive (Tc,)
+    g = bcum[tc - 1]
+    m_prev = m_sc[0]
+
+    # ---- intra-chunk gated panel ----
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tc, tc), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tc, tc), 1)
+    tri = cols <= rows
+    dmat = bcum[:, None] - bcum[None, :] + ig[None, :]           # (Tc,Tc)
+    dmat = jnp.where(tri, dmat, NEG_INF)
+    m_intra = jnp.max(dmat, axis=1)                              # (Tc,)
+    m_t = jnp.maximum(jnp.maximum(m_intra, bcum + m_prev), NEG_INF)
+    w_intra = jnp.where(tri, jnp.exp(dmat - m_t[:, None]), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * w_intra
+
+    # ---- inter-chunk contribution from carried state ----
+    coeff = jnp.exp(bcum + m_prev - m_t)                         # (Tc,)
+    h_inter = jax.lax.dot_general(q, c_sc[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_inter = h_inter * coeff[:, None]                           # (Tc, Dv)
+    d_inter = (q @ n_sc[...]) * coeff                            # (Tc,)
+
+    denom = jnp.maximum(jnp.abs(jnp.sum(scores, axis=1) + d_inter),
+                        jnp.exp(-m_t))
+    h = (jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + h_inter) / denom[:, None]
+    o_ref[0] = h.astype(o_ref.dtype)
+
+    # ---- state update (end of chunk) ----
+    w_s = g - bcum + ig                                          # (Tc,)
+    m_new = jnp.maximum(g + m_prev, jnp.max(w_s))
+    scale_old = jnp.exp(g + m_prev - m_new)
+    w = jnp.exp(w_s - m_new)                                     # (Tc,)
+    c_sc[...] = c_sc[...] * scale_old + jax.lax.dot_general(
+        k, v * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_sc[...] = n_sc[...] * scale_old + jnp.sum(k * w[:, None], axis=0)
+    m_sc[0] = m_new
+
+
+def mlstm_chunkwise_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         i_gate: jax.Array, f_gate: jax.Array, *,
+                         head_dim: int, chunk: int = DEFAULT_CHUNK,
+                         interpret: bool = False) -> jax.Array:
+    """q,k,v: (BH, S, Dh); gates: (BH, S); S % chunk == 0.
+
+    ``head_dim`` is the *unpadded* Dh used for the 1/sqrt(Dh) query scale.
+    Returns (BH, S, Dh) in q.dtype.
+    """
+    BH, S, Dh = q.shape
+    tc = min(chunk, S)
+    nc = S // tc
+    grid = (BH, nc)
+
+    kernel = functools.partial(_mlstm_kernel, scale=1.0 / (head_dim ** 0.5),
+                               tc=tc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, Dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, tc, Dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, tc, Dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, tc), lambda b, ic: (b, ic)),
+            pl.BlockSpec((1, tc), lambda b, ic: (b, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, Dh), lambda b, ic: (b, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Dh, Dh), jnp.float32),
+            pltpu.VMEM((Dh,), jnp.float32),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_gate, f_gate)

@@ -1,0 +1,155 @@
+"""jit'd wrappers around the Pallas kernels: padding, layout, dispatch.
+
+The model code calls these with model-native layouts; the wrappers pad to
+block multiples (TPU lane alignment: last dim -> x128), transpose to kernel
+layouts, run the kernel, and slice back.  Padding is constructed so padded
+elements are exactly inert:
+
+  - padded KV slots carry ``kv_pos = -1``  -> masked invalid,
+  - padded query rows carry ``q_pos = -2^30`` -> fail the causal test,
+  - padded feature dims are zero           -> contribute 0 to dot products,
+  - padded time steps sit past the real sequence -> outputs sliced away.
+
+``interpret=True`` executes the kernel bodies in Python on CPU — that is the
+validation mode this container uses; on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import mlstm as mlstm_k
+from repro.kernels import rglru as rglru_k
+
+
+def _block(n: int, max_block: int) -> int:
+    b = 1
+    while b < n and b < max_block:
+        b *= 2
+    return b
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool = False,
+                    block_q: int = fa_k.DEFAULT_BQ,
+                    block_k: int = fa_k.DEFAULT_BK) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,C,Hkv,D); *_pos: (B,S)/(B,C).  -> (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    C = k.shape[1]
+    if S == 1 and causal:
+        return decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                                interpret=interpret, block_k=block_k)
+    scale = 1.0 / (D ** 0.5)
+    bq = _block(S, block_q)
+    bk = _block(C, block_k)
+
+    qT = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), bq, 2), 128, 3)
+    kT = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), bk, 2), 128, 3)
+    vT = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), bk, 2), 128, 3)
+    qp = _pad_to(q_pos.astype(jnp.int32), bq, 1, value=-(2 ** 30))
+    kp = _pad_to(kv_pos.astype(jnp.int32), bk, 1, value=-1)
+
+    out = fa_k.flash_attention_bhsd(qT, kT, vT, qp, kp, causal=causal,
+                                    window=window, block_q=bq, block_k=bk,
+                                    scale=scale, interpret=interpret)
+    return out[:, :, :S, :D].transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret", "block_k"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, kv_pos: jax.Array, *,
+                     window: int = 0, interpret: bool = False,
+                     block_k: int = dec_k.DEFAULT_BK) -> jax.Array:
+    """Single query token: q (B,1,Hq,D) -> (B,1,Hq,D)."""
+    B, S, Hq, D = q.shape
+    assert S == 1, S
+    Hkv, C = k.shape[2], k.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    bk = _block(C, block_k)
+
+    qG = _pad_to(q.reshape(B, Hkv, G, D), 128, 3)
+    kT = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), bk, 2), 128, 3)
+    vT = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), bk, 2), 128, 3)
+    kp = _pad_to(kv_pos.astype(jnp.int32), bk, 1, value=-1)
+
+    out = dec_k.decode_attention_bhgd(qG, kT, vT, q_pos.astype(jnp.int32), kp,
+                                      window=window, block_k=bk, scale=scale,
+                                      interpret=interpret)
+    return out[..., :D].reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_s", "block_w"))
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None, *,
+               interpret: bool = False,
+               block_s: int = rglru_k.DEFAULT_BS,
+               block_w: int = rglru_k.DEFAULT_BW) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t.  a,b: (B,S,W) fp32 -> (B,S,W) fp32."""
+    B, S, W = a.shape
+    bs = _block(S, block_s)
+    bw = _block(max(W, 128), block_w)
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    ap = _pad_to(_pad_to(a.astype(jnp.float32), bs, 1), bw, 2)
+    bp = _pad_to(_pad_to(b.astype(jnp.float32), bs, 1), bw, 2)
+    h0p = _pad_to(h0.astype(jnp.float32), bw, 1)
+    out = rglru_k.rglru_scan_blocked(ap, bp, h0p, block_s=bs, block_w=bw,
+                                     interpret=interpret)
+    return out[:, :S, :W]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret", "chunk"))
+def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    i_gate: jax.Array, f_gate: jax.Array, *,
+                    interpret: bool = False,
+                    chunk: int = mlstm_k.DEFAULT_CHUNK) -> jax.Array:
+    """q,k,v: (B,S,H,Dh); gates: (B,S,H) raw logits.  -> (B,S,H,Dh)."""
+    B, S, H, Dh = q.shape
+    tc = _block(S, chunk)
+
+    def to_bhsd(x):
+        x = x.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+        return _pad_to(_pad_to(x, tc, 1), 128, 2)
+
+    qT, kT, vT = to_bhsd(q), to_bhsd(k), to_bhsd(v)
+    ig = _pad_to(i_gate.transpose(0, 2, 1).reshape(B * H, S), tc, 1)
+    fg = _pad_to(f_gate.transpose(0, 2, 1).reshape(B * H, S), tc, 1)
+
+    out = mlstm_k.mlstm_chunkwise_bhsd(qT, kT, vT, ig, fg, head_dim=Dh,
+                                       chunk=tc, interpret=interpret)
+    out = out[:, :S, :Dh].reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    return out

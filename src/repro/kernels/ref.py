@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel sweeps in ``tests/test_kernels.py``
+assert against (``interpret=True`` execution vs these refs).  They mirror the
+model-side jnp paths (``repro.models.attention.dot_attention``,
+``repro.models.ssm.mlstm_parallel``, ``repro.models.rglru.rglru_scan``) but
+are kept separate so a bug in the model path cannot hide a kernel bug.
+
+Note on fully-masked rows: the refs give softmax-uniform output (mean of V)
+for a query row with no valid key, while the kernels emit zeros.  Such rows
+cannot occur in the model (causal self-attention always sees at least the
+query's own position); the sweeps only generate inputs with >=1 valid key.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill/train) and decode attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, kv_pos: jax.Array, *,
+                        causal: bool, window: int = 0) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,C,Hkv,D); *_pos absolute positions (-1 = empty).
+
+    Returns (B,S,Hq,D).  GQA: Hq must be a multiple of Hkv.
+    """
+    B, S, Hq, D = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scores = jnp.einsum("bskgd,bckd->bskgc", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    valid = kv_pos[:, None, :] >= 0
+    if causal:
+        valid &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        valid &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    mask = jnp.broadcast_to(valid[:, :, None, None, :], scores.shape)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(mask, w, 0.0)   # zero fully-masked rows like the kernel
+    out = jnp.einsum("bskgc,bckd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         q_pos: jax.Array, kv_pos: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """Single-query-token case: q (B,1,Hq,D); q_pos (B,1)."""
+    return flash_attention_ref(q, k, v, q_pos, kv_pos, causal=True,
+                               window=window)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis=1.  a,b: (B,S,W) fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h0z = jnp.zeros_like(b[:, 0])
+    _, hs = jax.lax.scan(step, h0z, (jnp.swapaxes(a, 0, 1),
+                                     jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory) parallel form
+# ---------------------------------------------------------------------------
+
+
+def mlstm_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+              i_gate: jax.Array, f_gate: jax.Array) -> jax.Array:
+    """q,k,v: (B,S,H,Dh); i_gate/f_gate raw logits (B,S,H) -> (B,S,H,Dh).
+
+    Stabilised parallel form (xLSTM eq. 19-27): running row max ``m`` and
+    normaliser ``n = max(|sum scores|, exp(-m))``.
+    """
+    B, S, H, Dh = q.shape
+    qf = q.astype(jnp.float32) / jnp.sqrt(Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))        # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)
+    D = F[:, :, None, :] - F[:, None, :, :] + i_gate.astype(jnp.float32)[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(tri[None, :, :, None], D, -jnp.inf)             # (B,T,S,H)
+    m = jnp.max(D, axis=2, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)
+    dmat = jnp.where(tri[None, :, :, None], jnp.exp(D - m), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * dmat
+    n = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2, keepdims=True)),
+                    jnp.exp(-m))
+    out = jnp.einsum("btsh,bshd->bthd", scores / n, vf)
+    return out.astype(q.dtype)

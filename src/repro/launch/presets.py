@@ -1,0 +1,81 @@
+"""Per-cell ParallelConfig presets (the baseline the roofline table records).
+
+The paper-faithful baseline: DP over the data axes, Megatron TP over the
+model axis, FSDP for everything with optimizer state too big to replicate,
+EP for the MoE archs, remat for the big train cells.  Hillclimb variants
+(EXPERIMENTS.md §Perf) override these via ``--set key=value``.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+
+
+def default_parallel(cfg: ModelConfig, shape: ShapeConfig,
+                     multi_pod: bool = False) -> ParallelConfig:
+    from repro.roofline.analysis import HW_V5E, estimate_memory_per_device
+
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    total, _active = cfg.param_counts()
+    # fp32 Adam (mu+nu) + fp32 master grads ~ 14 B/param; TP shards most of
+    # it 16-way; replicate across data only when that still fits comfortably
+    fsdp = shape.kind == "train" and total * 14 / 16 > 4e9
+    # full remat (save layer boundaries only) + adaptive gradient
+    # accumulation: pick the smallest accum whose analytic per-device HBM
+    # footprint fits v5e — the 104B dense model lands on accum=16
+    # (microbatch of 1 sequence/chip), the 3B on accum=1
+    remat = "full" if shape.kind == "train" else "none"
+    grad_accum = 1
+    opt_state_dtype = "float32"
+    if shape.kind == "train":
+        tp, dp = 16, (32 if multi_pod else 16)
+
+        def fits(accum, sdt):
+            est = estimate_memory_per_device(
+                cfg, shape, tp=tp, dp=dp, fsdp=fsdp, grad_accum=accum,
+                remat=remat, opt_state_dtype=sdt)
+            return (est["total"] < HW_V5E.hbm_bytes
+                    and shape.global_batch % (dp * accum) == 0)
+
+        found = False
+        for sdt in ("float32", "bfloat16"):     # prefer fp32 moments
+            for accum in (1, 2, 4, 8, 16):
+                if fits(accum, sdt):
+                    grad_accum, opt_state_dtype, found = accum, sdt, True
+                    break
+            if found:
+                break
+        if not found:                            # best effort: max both
+            grad_accum, opt_state_dtype = 16, "bfloat16"
+    return ParallelConfig(
+        data_axes=data_axes,
+        model_axis="model",
+        fsdp=fsdp,
+        fsdp_axes=("data",),           # within-pod: cross-pod stays pure DP
+        ep=cfg.moe.enabled,
+        sp=False,
+        remat=remat,
+        scan_layers=True,
+        grad_accum=grad_accum,
+        compress_grads=False,
+        use_kernels=False,             # jnp path lowers on CPU; kernels are
+                                       # the TPU target (interpret-validated)
+        opt_state_dtype=opt_state_dtype,
+    )
+
+
+def apply_overrides(par: ParallelConfig, overrides: dict) -> ParallelConfig:
+    """'key=value' hillclimb overrides from the CLI."""
+    kwargs = {}
+    for k, v in overrides.items():
+        cur = getattr(par, k)
+        if isinstance(cur, bool):
+            kwargs[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            kwargs[k] = int(v)
+        elif isinstance(cur, tuple):
+            kwargs[k] = tuple(s for s in v.split(",") if s)
+        else:
+            kwargs[k] = v
+    return replace(par, **kwargs)

@@ -1,0 +1,138 @@
+"""Training driver.
+
+CPU-scale e2e by default (reduced config, host mesh); the same code path
+drives the production mesh when real devices exist — the launcher only
+changes ``--mesh``.  Fault tolerance: periodic sharded checkpoints
+(restart-safe via atomic rename), ``--resume`` restores the latest complete
+step onto WHATEVER mesh this run has (elastic), and a heartbeat file lets
+``repro.launch.elastic`` supervise and restart the process.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --reduced --steps 100 --batch 8 --seq 64 --ckpt /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.config import ParallelConfig, get_arch
+from repro.data import lm_batches
+from repro.data.prefetch import device_prefetch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.presets import apply_overrides
+from repro.models import transformer as T
+from repro.sharding import rules
+from repro.train import AdamWConfig, checkpoint, init_opt_state, make_train_step
+
+
+def heartbeat(path: str, step: int) -> None:
+    if not path:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path + ".tmp", "w") as f:
+        json.dump({"step": step, "time": time.time()}, f)
+    os.replace(path + ".tmp", path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--heartbeat", default="")
+    ap.add_argument("--kill-at-step", type=int, default=0,
+                    help="fault-injection: hard-exit at this step")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "host":
+        mesh = make_host_mesh(model=args.model_parallel)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    par = ParallelConfig(
+        data_axes=tuple(a for a in mesh.axis_names if a != "model"),
+        grad_accum=args.grad_accum)
+    par = apply_overrides(par, dict(s.split("=", 1) for s in args.set))
+
+    pspecs = rules.param_pspecs(cfg, par, mesh)
+    pshard = rules.shardings(mesh, pspecs)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+
+    start_step = 0
+    if args.resume and args.ckpt and checkpoint.latest_step(args.ckpt) is not None:
+        # elastic restore: re-shard the saved leaves onto THIS run's mesh
+        abstract = {"params": T.abstract_params(cfg)}
+        shardings = {"params": pshard}
+        restored, start_step = checkpoint.restore(
+            args.ckpt, abstract, shardings=shardings)
+        params = restored["params"]
+        opt_state = init_opt_state(params)       # moments restart (cheap)
+        opt_path = os.path.join(args.ckpt, f"step_{start_step:08d}", "opt")
+        print(f"[train] resumed step {start_step} from {args.ckpt}")
+    else:
+        with mesh:
+            params = jax.jit(
+                lambda: T.init_params(cfg, jax.random.key(0)),
+                out_shardings=pshard)()
+            opt_state = init_opt_state(params)
+
+    step_fn = jax.jit(make_train_step(cfg, par, opt_cfg, mesh=mesh),
+                      donate_argnums=(0, 1))
+
+    from repro.config import ShapeConfig
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    bspecs = rules.batch_pspecs(cfg, shape, par, mesh)
+    bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    batches = lm_batches(args.batch, args.seq, cfg.vocab_size,
+                         seed=start_step, steps=args.steps - start_step)
+    t0 = time.time()
+    tokens_done = 0
+    with mesh:
+        for i, batch in enumerate(device_prefetch(batches, sharding=bshard)):
+            step = start_step + i
+            if args.kill_at_step and step == args.kill_at_step:
+                print(f"[train] fault injection: dying at step {step}",
+                      flush=True)
+                os._exit(42)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            tokens_done += args.batch * args.seq
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"tok/s {tokens_done / max(dt, 1e-9):,.0f}", flush=True)
+            heartbeat(args.heartbeat, step)
+            if args.ckpt and (step + 1) % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt, step + 1, {"params": params},
+                                keep=3, blocking=False)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, args.steps, {"params": params}, keep=3)
+    print(f"[train] done: {args.steps} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

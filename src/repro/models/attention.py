@@ -1,0 +1,331 @@
+"""GQA attention (full / causal / sliding-window), KV cache, cross-attention.
+
+The KV cache stores explicit key positions (``pos``, -1 = empty slot) so that
+ring-buffer sliding-window caches and padded decode caches mask correctly
+without host bookkeeping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_rope, dense, dense_params
+from repro.models.param import P
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class RunOpts:
+    """Runtime options threaded through model apply functions."""
+    use_kernels: bool = False     # Pallas path (TPU target)
+    interpret: bool = False       # Pallas interpret mode (CPU validation)
+    remat: str = "none"           # none | full | dots (activation checkpointing)
+    # blocked online-softmax attention in pure jnp (lax.scan over KV chunks):
+    # never materialises the S x C score matrix — the XLA-level analogue of
+    # the flash kernel, usable where Pallas cannot lower (dry-run / any
+    # backend).  0 = dense path.
+    block_kv: int = 0
+    # fully unroll the KV-chunk scan: set by the dry-run calibration pass so
+    # cost_analysis (which counts while bodies once) sees every chunk
+    unroll_scan: bool = False
+    # (q_spec, kv_spec) PartitionSpecs for the (B,S,H,D) activations.  When
+    # head counts don't divide the TP axis, the projections shard on the
+    # fused feature dim and GSPMD computes attention as partial sums over
+    # the *contracted* head-feature dim — all-reducing S x S score tensors
+    # (TBs/step).  Constraining q/k/v to batch(+head-aligned) sharding
+    # forces one cheap qkv all-gather instead.  See EXPERIMENTS.md §Perf.
+    attn_specs: Optional[tuple] = None
+    # bf16-multiply / f32-accumulate attention matmuls (the MXU's native
+    # mode): avoids materialising an f32 copy of the whole KV cache on the
+    # QK^T and PV products — halves+ decode HBM traffic.  Softmax stays f32.
+    mxu_bf16: bool = False
+
+
+DEFAULT_OPTS = RunOpts()
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg: ModelConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    p = {
+        "wq": dense_params(d, cfg.q_dim, "embed", "heads", cfg.qkv_bias),
+        "wk": dense_params(d, cfg.kv_dim, "embed", "kv_heads", cfg.qkv_bias),
+        "wv": dense_params(d, cfg.kv_dim, "embed", "kv_heads", cfg.qkv_bias),
+        "wo": dense_params(cfg.q_dim, d, "heads", "embed", cfg.o_bias),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype: Optional[str] = None) -> dict:
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    if cfg.attention == "sliding" and cfg.window:
+        capacity = min(capacity, cfg.window)
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int,
+                 dtype: Optional[str] = None) -> dict:
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    if cfg.attention == "sliding" and cfg.window:
+        capacity = min(capacity, cfg.window)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, capacity, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct((batch, capacity, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+    }
+
+
+def _write_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array,
+                 positions: jax.Array, cache_index: jax.Array) -> dict:
+    """Write S new entries at (ring) cache_index.
+
+    ``cache_index`` may be a scalar (uniform across the batch: plain decode /
+    chunked prefill) or a per-row vector (continuous batching: each slot is
+    at a different position) — the vector path scatters via a one-hot mask
+    and requires S == 1.
+    """
+    cap = cache["k"].shape[1]
+    k = k.astype(cache["k"].dtype)
+    v = v.astype(cache["v"].dtype)
+    if getattr(cache_index, "ndim", 0) == 1:
+        idx = (cache_index % cap).astype(jnp.int32)           # (B,)
+        hot = jax.nn.one_hot(idx, cap, dtype=jnp.bool_)       # (B, cap)
+
+        def wr(buf, new):                                     # new: (B,1,...)
+            m = hot.reshape(hot.shape + (1,) * (buf.ndim - 2))
+            return jnp.where(m, new, buf)
+
+        return {"k": wr(cache["k"], k), "v": wr(cache["v"], v),
+                "pos": jnp.where(hot, positions.astype(jnp.int32),
+                                 cache["pos"])}
+    idx = cache_index % cap
+    # S is small (decode: 1); wrap-around handled because idx + S <= cap is
+    # guaranteed by the runtime (decode writes one slot at a time).
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions.astype(jnp.int32), idx, axis=1)
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def dot_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, kv_pos: jax.Array,
+                  causal: bool, window: int = 0,
+                  opts: RunOpts = DEFAULT_OPTS) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,C,Hkv,D); *_pos: (B,S)/(B,C) absolute positions.
+
+    Returns (B,S,Hq,D).  Hq must be a multiple of Hkv (GQA).
+    """
+    if opts.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                    window=window, interpret=opts.interpret)
+    if opts.block_kv and k.shape[1] % opts.block_kv == 0 \
+            and k.shape[1] > opts.block_kv:
+        return blocked_dot_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                     window=window, block=opts.block_kv,
+                                     unroll=opts.unroll_scan)
+    B, S, Hq, D = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    if opts.mxu_bf16:
+        # bf16 x bf16 -> f32 accumulate (the MXU's native mode): no f32
+        # copy of the whole K cache is ever materialised
+        scores = jnp.einsum("bskgd,bckd->bskgc", qg.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32)
+    else:
+        scores = jnp.einsum("bskgd,bckd->bskgc", qg.astype(jnp.float32),
+                            k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    valid = kv_pos[:, None, :] >= 0                           # (B,1,C)
+    if causal:
+        valid &= kv_pos[:, None, :] <= q_pos[:, :, None]      # (B,S,C)
+    if window:
+        valid &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    mask = jnp.broadcast_to(valid[:, :, None, None, :], scores.shape)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if opts.mxu_bf16:
+        out = jnp.einsum("bskgc,bckd->bskgd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bskgc,bckd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def blocked_dot_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_pos: jax.Array, kv_pos: jax.Array, *,
+                          causal: bool, window: int = 0,
+                          block: int = 1024, unroll: bool = False) -> jax.Array:
+    """Online-softmax attention over KV chunks (pure jnp flash).
+
+    ``lax.scan`` streams K/V in ``block``-sized chunks carrying the running
+    (m, l, acc); the S x C score matrix never exists — per-chunk score
+    panels are (B,S,H,G,block) transients that XLA fuses, so HBM traffic
+    drops from O(S·C) f32 to O((S + C)·D), the same asymptotics as the
+    Pallas kernel.  This is the beyond-paper memory/collective optimisation
+    measured in EXPERIMENTS.md §Perf.
+    """
+    B, S, Hq, D = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nb = C // block
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    ks = jnp.moveaxis(k.reshape(B, nb, block, Hkv, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, block, Hkv, D), 1, 0)
+    ps = jnp.moveaxis(kv_pos.reshape(B, nb, block), 1, 0)
+
+    def chunk(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs                                 # (B,blk,Hkv,D),(B,blk)
+        s = jnp.einsum("bskgd,bckd->bskgc", qg, kb.astype(jnp.float32)) * scale
+        valid = pb[:, None, :] >= 0
+        if causal:
+            valid &= pb[:, None, :] <= q_pos[:, :, None]
+        if window:
+            valid &= (q_pos[:, :, None] - pb[:, None, :]) < window
+        valid = valid[:, :, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, S, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk, (m0, l0, acc0), (ks, vs, ps),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def make_filled_cache(cfg: ModelConfig, k, v, positions, capacity: int):
+    """Build a ring-consistent cache (slot == pos % cap) from prefill K/V.
+
+    ``capacity`` is the total cache size requested (window-clipped for
+    sliding attention); extra slots are empty (pos = -1) headroom for decode.
+    """
+    B, S = positions.shape
+    window = cfg.window if cfg.attention == "sliding" else 0
+    cap = min(window, capacity) if window else capacity
+    dt = jnp.dtype(cfg.compute_dtype)
+    if S >= cap:
+        shift = (positions[0, -1] + 1) % cap
+        ck = jnp.roll(k[:, -cap:], shift, axis=1)
+        cv = jnp.roll(v[:, -cap:], shift, axis=1)
+        cp = jnp.roll(positions[:, -cap:], shift, axis=1)
+    else:
+        pad = cap - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cp = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    return {"k": ck.astype(dt), "v": cv.astype(dt), "pos": cp.astype(jnp.int32)}
+
+
+def attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+               positions: jax.Array,
+               cache: Optional[dict] = None,
+               cache_index: Optional[jax.Array] = None,
+               causal: bool = True,
+               fill_cache: bool = False,
+               cache_capacity: Optional[int] = None,
+               opts: RunOpts = DEFAULT_OPTS):
+    """Self-attention.  Returns (y, new_cache).
+
+    - train:   cache=None, fill_cache=False
+    - prefill: cache=None, fill_cache=True  (cache built from k/v)
+    - decode:  cache given, cache_index = current write offset
+    """
+    B, S, d = x.shape
+    q = dense(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if opts.attn_specs is not None:
+        q_spec, kv_spec = opts.attn_specs
+        q = jax.lax.with_sharding_constraint(q, q_spec)
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window if cfg.attention == "sliding" else 0
+    new_cache = None
+    if cache is not None:
+        new_cache = _write_cache(cfg, cache, k, v, positions, cache_index)
+        out = dot_attention(q, new_cache["k"], new_cache["v"],
+                            positions, new_cache["pos"],
+                            causal=causal, window=window, opts=opts)
+    else:
+        out = dot_attention(q, k, v, positions, positions,
+                            causal=causal, window=window, opts=opts)
+        if fill_cache:
+            new_cache = make_filled_cache(cfg, k, v, positions,
+                                          cache_capacity or S + 64)
+    y = dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_params(cfg: ModelConfig) -> dict:
+    return attn_params(cfg)
+
+
+def cross_attn_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                     enc_kv: dict, opts: RunOpts = DEFAULT_OPTS) -> jax.Array:
+    """x: (B,S,D); enc_kv: {"k","v"} (B,T,Hkv,Dh) precomputed from encoder."""
+    B, S, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    T = enc_kv["k"].shape[1]
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    kv_pos = jnp.zeros((B, T), jnp.int32)
+    out = dot_attention(q, enc_kv["k"], enc_kv["v"], q_pos, kv_pos,
+                        causal=False, window=0, opts=opts)
+    return dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+
+
+def encode_cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array) -> dict:
+    B, T, _ = enc_out.shape
+    k = dense(p["wk"], enc_out).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], enc_out).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}

@@ -1,0 +1,146 @@
+"""Core layers: norms, dense projections, embeddings, RoPE, activations."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.param import P
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(cfg: ModelConfig) -> dict:
+    p = {"scale": P((cfg.d_model,), ("norm",), init="ones")}
+    if cfg.norm == "layernorm":
+        p["bias"] = P((cfg.d_model,), ("norm",), init="zeros")
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_params(d_in: int, d_out: int, in_ax: str, out_ax: str,
+                 bias: bool = False, scale: float = 1.0) -> dict:
+    p = {"w": P((d_in, d_out), (in_ax, out_ax), scale=scale)}
+    if bias:
+        p["b"] = P((d_out,), (out_ax,), init="zeros")
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None,
+               mlp_ax: str = "mlp") -> dict:
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": dense_params(d, ff, "embed", mlp_ax, cfg.mlp_bias),
+            "wg": dense_params(d, ff, "embed", mlp_ax, cfg.mlp_bias),
+            "wo": dense_params(ff, d, mlp_ax, "embed", cfg.mlp_bias),
+        }
+    return {  # gelu_mlp
+        "wi": dense_params(d, ff, "embed", mlp_ax, cfg.mlp_bias),
+        "wo": dense_params(ff, d, mlp_ax, "embed", cfg.mlp_bias),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x))
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / positions
+# ---------------------------------------------------------------------------
+
+
+def embed_params(cfg: ModelConfig) -> dict:
+    p = {"tokens": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                     init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tokens"].astype(jnp.dtype(cfg.compute_dtype)), tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["tokens"].astype(x.dtype).T
+    else:
+        w = p["unembed"].astype(x.dtype)
+    logits = x @ w
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int,
+                         max_timescale: float = 10_000.0) -> jax.Array:
+    """(..., dim) sinusoidal embedding for integer positions (...,)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_timescale) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                             # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,175 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA) [arXiv:2405.04434].
+
+Prefill/train: expand the compressed latent to per-head K/V and run standard
+attention.  Decode: the *absorbed* formulation — fold ``W_UK``/``W_UV`` into
+the query/output so attention runs directly against the compressed cache
+``(c_kv, k_rope)``; this is the technique's memory saving and is what the
+decode roofline measures.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.attention import NEG_INF, RunOpts, DEFAULT_OPTS
+from repro.models.layers import apply_rope, dense, dense_params
+from repro.models.param import P
+
+
+def mla_params(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_params(d, m.q_lora_rank, "embed", "q_lora")
+        p["q_norm"] = P((m.q_lora_rank,), ("norm",), init="ones")
+        p["wq_b"] = dense_params(m.q_lora_rank, H * m.qk_head_dim, "q_lora", "heads")
+    else:
+        p["wq"] = dense_params(d, H * m.qk_head_dim, "embed", "heads")
+    p["wkv_a"] = dense_params(d, m.kv_lora_rank + m.qk_rope_dim, "embed", "kv_lora")
+    p["kv_norm"] = P((m.kv_lora_rank,), ("norm",), init="ones")
+    p["wkv_b"] = dense_params(m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim),
+                              "kv_lora", "heads")
+    p["wo"] = dense_params(H * m.v_head_dim, d, "heads", "embed")
+    return p
+
+
+def _rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    B, S, _ = x.shape
+    if m.q_lora_rank:
+        q = dense(p["wq_b"], _rmsnorm(dense(p["wq_a"], x), p["q_norm"]))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, S, cfg.num_heads, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    ckv = dense(p["wkv_a"], x)
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = _rmsnorm(c, p["kv_norm"])
+    # shared (headless) rope key
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c, k_rope
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int,
+                   dtype: Optional[str] = None) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    return {
+        "c": jnp.zeros((batch, capacity, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope_dim), dt),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def mla_cache_shapes(cfg: ModelConfig, batch: int, capacity: int,
+                     dtype: Optional[str] = None) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    return {
+        "c": jax.ShapeDtypeStruct((batch, capacity, m.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((batch, capacity, m.qk_rope_dim), dt),
+        "pos": jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+              positions: jax.Array,
+              cache: Optional[dict] = None,
+              cache_index: Optional[jax.Array] = None,
+              fill_cache: bool = False,
+              cache_capacity: Optional[int] = None,
+              opts: RunOpts = DEFAULT_OPTS):
+    """Returns (y, new_cache)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c, k_rope = _compress_kv(cfg, p, x, positions)
+    scale = 1.0 / jnp.sqrt(m.qk_head_dim).astype(jnp.float32)
+
+    if cache is not None:
+        # ---- absorbed decode against compressed cache ----
+        cap = cache["c"].shape[1]
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-row ring write (continuous batching), S == 1
+            idx = (cache_index % cap).astype(jnp.int32)
+            hot = jax.nn.one_hot(idx, cap, dtype=jnp.bool_)        # (B, cap)
+            new_cache = {
+                "c": jnp.where(hot[..., None],
+                               c.astype(cache["c"].dtype), cache["c"]),
+                "k_rope": jnp.where(hot[..., None],
+                                    k_rope.astype(cache["k_rope"].dtype),
+                                    cache["k_rope"]),
+                "pos": jnp.where(hot, positions.astype(jnp.int32),
+                                 cache["pos"]),
+            }
+        else:
+            idx = cache_index % cap
+            new_cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], c.astype(cache["c"].dtype), idx, axis=1),
+                "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, axis=1),
+                "pos": jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], positions.astype(jnp.int32), idx, axis=1),
+            }
+        wkv_b = p["wkv_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+        w_uk = wkv_b[..., : m.qk_nope_dim]          # (L,H,nope)
+        w_uv = wkv_b[..., m.qk_nope_dim:]           # (L,H,v)
+        q_c = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                         w_uk.astype(jnp.float32))
+        cc = new_cache["c"].astype(jnp.float32)
+        kr = new_cache["k_rope"].astype(jnp.float32)
+        scores = (jnp.einsum("bshl,bcl->bshc", q_c, cc)
+                  + jnp.einsum("bshr,bcr->bshc", q_rope.astype(jnp.float32), kr)) * scale
+        valid = (new_cache["pos"][:, None, :] >= 0) & \
+                (new_cache["pos"][:, None, :] <= positions[:, :, None])
+        scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out_c = jnp.einsum("bshc,bcl->bshl", w, cc)
+        out = jnp.einsum("bshl,lhv->bshv", out_c, w_uv.astype(jnp.float32))
+        y = dense(p["wo"], out.reshape(B, S, H * m.v_head_dim).astype(x.dtype))
+        return y, new_cache
+
+    # ---- expanded prefill/train ----
+    kv = dense(p["wkv_b"], c).reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scores = jnp.einsum("bshd,bchd->bshc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    causal = positions[:, :, None] >= positions[:, None, :]
+    scores = jnp.where(causal[:, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bshc,bchv->bshv", w, v.astype(jnp.float32))
+    y = dense(p["wo"], out.reshape(B, S, H * m.v_head_dim).astype(x.dtype))
+    new_cache = None
+    if fill_cache:
+        dt = jnp.dtype(cfg.compute_dtype)
+        cap = cache_capacity or S + 64
+        pad = max(cap - S, 0)
+        new_cache = {
+            "c": jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(dt),
+            "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(dt),
+            "pos": jnp.pad(positions, ((0, 0), (0, pad)),
+                           constant_values=-1).astype(jnp.int32),
+        }
+    return y, new_cache

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, EP sharding.
+
+Sort-based dispatch with static shapes (jit/GSPMD friendly):
+tokens are replicated k times, sorted by expert id, ranked within their
+expert, and gathered into a dense ``(E, C, D)`` block which is einsum'd with
+the stacked expert weights.  Tokens past an expert's capacity ``C`` are
+dropped (their combine weight never fires), matching GShard-style capacity
+semantics.  With EP, the ``(E, ...)`` tensors shard over the ``model`` axis so
+each shard only computes its local experts.
+
+The router aux (load-balance) loss follows Switch/DeepSeek:
+``aux = E * sum_i f_i * P_i``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_mlp, mlp_params
+from repro.models.param import P
+
+
+def moe_params(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ff = m.expert_ff
+    glu = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "router": P((d, m.num_experts), ("embed", "expert")),
+        "wi": P((m.num_experts, d, ff), ("expert", "embed", "expert_mlp")),
+        "wo": P((m.num_experts, ff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if glu:
+        p["wg"] = P((m.num_experts, d, ff), ("expert", "embed", "expert_mlp"))
+    if m.num_shared_experts:
+        # shared experts fused into one dense MLP of width n_shared * ff
+        p["shared"] = mlp_params(cfg, d_ff=m.num_shared_experts * ff)
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, xs: jax.Array) -> jax.Array:
+    """xs: (E, C, D) -> (E, C, D) via per-expert (gated) MLP."""
+    dt = xs.dtype
+    wi = p["wi"].astype(dt)
+    wo = p["wo"].astype(dt)
+    h = jnp.einsum("ecd,edf->ecf", xs, wi)
+    if "wg" in p:
+        g = jnp.einsum("ecd,edf->ecf", xs, p["wg"].astype(dt))
+        act = jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g)
+        h = act * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+              capacity_factor: float = 1.25):
+    """x: (B,S,D).  Returns (y, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    N = B * S
+    x2 = x.reshape(N, D)
+
+    # --- routing (fp32 for numerics) ---
+    logits = x2.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                               # (N,K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)               # renorm
+
+    # aux load-balance loss: E * sum_e f_e * P_e
+    f = jnp.mean(jnp.sum(jax.nn.one_hot(eid, E, dtype=jnp.float32), axis=1), axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pbar) * m.router_aux_coef
+
+    # --- dispatch: sort token-copies by expert ---
+    C = max(int(K * N * capacity_factor / E), 4)
+    eid_flat = eid.reshape(-1)                                        # (N*K,)
+    gate_flat = gate.reshape(-1)
+    tok_of_copy = jnp.arange(N * K, dtype=jnp.int32) // K
+    order = jnp.argsort(eid_flat, stable=True)
+    sorted_eid = eid_flat[order]
+    counts = jnp.bincount(eid_flat, length=E)                         # (E,)
+    seg_start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(N * K, dtype=jnp.int32) - seg_start[sorted_eid].astype(jnp.int32)
+    dest = sorted_eid.astype(jnp.int32) * C + rank                    # slot in (E*C)
+    valid = rank < C
+    dest = jnp.where(valid, dest, E * C)                              # drop -> scratch
+
+    # slot -> (token id, gate); N acts as the dummy token id
+    slot_tok = jnp.full((E * C + 1,), N, jnp.int32).at[dest].set(
+        tok_of_copy[order], mode="drop")[: E * C]
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(
+        gate_flat[order], mode="drop")[: E * C]
+
+    x_pad = jnp.concatenate([x2, jnp.zeros((1, D), x2.dtype)], axis=0)
+    xs = x_pad[slot_tok].reshape(E, C, D)                             # (E,C,D)
+    ys = _expert_ffn(cfg, p, xs).reshape(E * C, D)
+
+    # --- combine: scatter-add weighted expert outputs back to tokens ---
+    y = jnp.zeros((N + 1, D), jnp.float32).at[slot_tok].add(
+        ys.astype(jnp.float32) * slot_gate[:, None])[:N]
+    y = y.astype(x.dtype).reshape(B, S, D)
+
+    if m.num_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x)
+    return y, aux

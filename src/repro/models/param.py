@@ -1,0 +1,115 @@
+"""Lightweight parameter-descriptor system (no flax).
+
+Models declare their parameters as pytrees of :class:`P` descriptors.  From a
+descriptor tree we derive:
+
+- ``init_tree``      — materialised ``jnp`` parameter pytree (per-leaf PRNG)
+- ``abstract_tree``  — ``jax.ShapeDtypeStruct`` pytree (dry-run lowering)
+- ``spec_tree``      — ``PartitionSpec`` pytree via logical→mesh axis rules
+
+Logical axis vocabulary (see ``repro.sharding.rules``):
+``layers embed embed2 vocab heads kv_heads mlp expert kv_lora rope conv
+inner lru norm seq``.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclass(frozen=True)
+class P:
+    """Descriptor for one parameter tensor."""
+    shape: tuple
+    axes: tuple                      # logical axis name per dim (None ok)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float = 1.0               # stddev multiplier (normal) / value
+    dtype: Optional[str] = None      # override model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_key(rng: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "big")
+    return jax.random.fold_in(rng, h)
+
+
+def _fan_in(shape: tuple) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def _init_leaf(p: P, rng: jax.Array, path: str, default_dtype: str) -> jax.Array:
+    dtype = jnp.dtype(p.dtype or default_dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.full(p.shape, p.scale, dtype)
+    key = _leaf_key(rng, path)
+    if p.init == "embed":
+        std = p.scale
+    else:  # normal: lecun-style 1/sqrt(fan_in)
+        std = p.scale / max(np.sqrt(_fan_in(p.shape)), 1.0)
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def _map_with_path(tree: Any, fn, path: str = ""):
+    if isinstance(tree, dict):
+        return {k: _map_with_path(v, fn, f"{path}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_map_with_path(v, fn, f"{path}/{i}") for i, v in enumerate(tree)]
+        return type(tree)(out)
+    return fn(tree, path)
+
+
+def init_tree(ptree: Any, rng: jax.Array, default_dtype: str = "float32") -> Any:
+    return _map_with_path(ptree, lambda p, path: _init_leaf(p, rng, path, default_dtype))
+
+
+def abstract_tree(ptree: Any, default_dtype: str = "float32") -> Any:
+    def f(p: P, path):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or default_dtype))
+    return _map_with_path(ptree, f)
+
+
+def spec_tree(ptree: Any, rules: dict) -> Any:
+    """Map logical axes -> mesh axes via ``rules`` (name -> mesh axis or None)."""
+    def f(p: P, path):
+        mesh_axes = []
+        used = set()
+        for ax in p.axes:
+            m = rules.get(ax) if ax is not None else None
+            # one mesh axis may appear at most once in a PartitionSpec
+            key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            if m is not None and any(k in used for k in key):
+                m = None
+            if m is not None:
+                used.update(key)
+            mesh_axes.append(m)
+        return PartitionSpec(*mesh_axes)
+    return _map_with_path(ptree, f)
+
+
+def stack_trees(trees: list) -> Any:
+    """Stack a list of identically-structured P trees along a new leading
+    ``layers`` axis (descriptor level)."""
+    def f(*leaves):
+        p0: P = leaves[0]
+        assert all(l.shape == p0.shape for l in leaves)
+        return P((len(leaves),) + p0.shape, ("layers",) + p0.axes,
+                 init=p0.init, scale=p0.scale, dtype=p0.dtype)
+    return jax.tree.map(f, *trees, is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree.leaves(tree)
+               if hasattr(l, "size"))

@@ -1,0 +1,139 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU
+[arXiv:2402.19427].
+
+Block:  x -> (W1 -> causal conv4 -> RG-LRU) * gelu(W2) -> Wout
+RG-LRU: r_t = sigmoid(blockdiag(Wa) u_t + ba)
+        i_t = sigmoid(blockdiag(Wx) u_t + bx)
+        a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses a parallel associative scan; decode is a single recurrence
+step.  The decode cache is ``{"h": (B,W), "conv": (B, cw-1, W)}`` — O(1) in
+sequence length, which is what makes the ``long_500k`` cell runnable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.param import P
+
+_C = 8.0  # RG-LRU temperature
+
+
+def rglru_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    H = cfg.num_heads
+    hd = w // H
+    cw = cfg.conv_width
+    return {
+        "w_in": P((d, w), ("embed", "lru")),
+        "w_gate": P((d, w), ("embed", "lru")),
+        "w_out": P((w, d), ("lru", "embed")),
+        "conv_w": P((cw, w), ("conv", "lru")),
+        "conv_b": P((w,), ("lru",), init="zeros"),
+        "gate_a_w": P((H, hd, hd), ("heads", None, None)),
+        "gate_a_b": P((H, hd), ("heads", None), init="zeros"),
+        "gate_x_w": P((H, hd, hd), ("heads", None, None)),
+        "gate_x_b": P((H, hd), ("heads", None), init="zeros"),
+        # softplus(lambda) ~ uniform-ish decay spectrum at init
+        "lam": P((w,), ("lru",), init="ones", scale=1.0),
+    }
+
+
+def _causal_conv(p: dict, u: jax.Array, conv_cache: Optional[jax.Array]):
+    """u: (B,S,W).  Returns (y, new_conv_cache (B,cw-1,W))."""
+    cw = p["conv_w"].shape[0]
+    if conv_cache is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_cache.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)          # (B, S+cw-1, W)
+    y = jnp.zeros_like(u)
+    for i in range(cw):
+        y = y + full[:, i: i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+    y = y + p["conv_b"].astype(u.dtype)
+    new_cache = full[:, -(cw - 1):]
+    return y, new_cache
+
+
+def _gates(cfg: ModelConfig, p: dict, u: jax.Array):
+    """u: (B,S,W) -> (log_a, gated_input) in fp32."""
+    B, S, W = u.shape
+    H = cfg.num_heads
+    hd = W // H
+    uh = u.reshape(B, S, H, hd).astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bshi,hio->bsho", uh, p["gate_a_w"].astype(jnp.float32))
+                       + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bshi,hio->bsho", uh, p["gate_x_w"].astype(jnp.float32))
+                       + p["gate_x_b"].astype(jnp.float32))
+    r = r.reshape(B, S, W)
+    i = i.reshape(B, S, W)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r   # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
+               use_kernel: bool = False, interpret: bool = False) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t along axis=1.  a,b: (B,S,W) fp32."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.rglru_scan(a, b, h0, interpret=interpret)
+    if h0 is not None:
+        # fold the carry into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                      cache: Optional[dict] = None,
+                      fill_cache: bool = False,
+                      use_kernel: bool = False,
+                      interpret: bool = False):
+    """x: (B,S,D).  Returns (y, new_cache)."""
+    u = x @ p["w_in"].astype(x.dtype)                 # (B,S,W)
+    g = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    conv_cache = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(p, u, conv_cache)
+    a, b = _gates(cfg, p, u)
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+    if x.shape[1] == 1 and cache is not None:
+        # decode: one recurrence step
+        h = (a[:, 0] * h0 + b[:, 0])[:, None, :]
+    else:
+        h = rglru_scan(a, b, h0, use_kernel=use_kernel, interpret=interpret)
+    new_cache = None
+    if cache is not None or fill_cache:
+        new_cache = {"h": h[:, -1].astype(jnp.float32),
+                     "conv": new_conv.astype(jnp.dtype(cfg.compute_dtype))}
+    y = (h.astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def rglru_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w),
+                                     jnp.dtype(cfg.compute_dtype)),
+    }

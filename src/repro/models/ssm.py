@@ -1,0 +1,267 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections) [arXiv:2405.04517].
+
+mLSTM parallel (stabilized) form, per head:
+    D_ts = F_t - F_s + i_s   (s <= t; -inf otherwise), F = cumsum(logsig(f))
+    m    = rowmax(D)
+    S    = (Q K^T / sqrt(d)) * exp(D - m)
+    n    = max(|rowsum(S)|, exp(-m))
+    H    = (S / n) V
+
+mLSTM recurrent (decode) form:
+    m'   = max(logsig(f) + m, i)
+    C'   = exp(logsig(f)+m-m') C + exp(i-m') v k^T
+    n'   = exp(logsig(f)+m-m') n + exp(i-m') k
+    h    = C' q / max(|n'.q|, exp(-m'))
+
+sLSTM is a true sequential recurrence (gate preactivations include
+R h_{t-1}); it runs under ``lax.scan`` with block-diagonal R per head.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_norm, norm_params
+from repro.models.param import P
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    inner = int(d * cfg.mlstm_proj_factor)
+    return {
+        "w_up": P((d, inner), ("embed", "inner")),
+        "w_gate": P((d, inner), ("embed", "inner")),
+        "wq": P((inner, inner), ("inner", "inner2")),
+        "wk": P((inner, inner), ("inner", "inner2")),
+        "wv": P((inner, inner), ("inner", "inner2")),
+        "wi": P((inner, cfg.num_heads), ("inner", None)),
+        "wf": P((inner, cfg.num_heads), ("inner", None)),
+        "bi": P((cfg.num_heads,), (None,), init="zeros"),
+        # positive forget bias => long memory at init
+        "bf": P((cfg.num_heads,), (None,), init="ones", scale=3.0),
+        "w_down": P((inner, d), ("inner", "embed")),
+        "skip": P((inner,), ("inner",), init="ones"),
+    }
+
+
+def mlstm_parallel(q, k, v, i_gate, f_gate, use_kernel=False, interpret=False):
+    """q,k,v: (B,S,H,Dh); i_gate,f_gate raw logits (B,S,H).  -> (B,S,H,Dh)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.mlstm_chunkwise(q, k, v, i_gate, f_gate, interpret=interpret)
+    B, S, H, Dh = q.shape
+    qf = q.astype(jnp.float32) / jnp.sqrt(Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))       # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)
+    # D[t,s] = F_t - F_s + i_s  for s<=t
+    D = F[:, :, None, :] - F[:, None, :, :] + i_gate.astype(jnp.float32)[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(tri[None, :, :, None], D, -jnp.inf)            # (B,T,S,H)
+    m = jnp.max(D, axis=2, keepdims=True)                        # (B,T,1,H)
+    m = jnp.maximum(m, -1e30)                                    # guard all -inf
+    dmat = jnp.exp(D - m)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * dmat
+    n = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2, keepdims=True)),
+                    jnp.exp(-m))
+    out = jnp.einsum("btsh,bshd->bthd", scores / n, vf)
+    return out.astype(q.dtype)
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, state):
+    """One recurrent step.  q,k,v: (B,H,Dh); gates (B,H).
+    state: {"C": (B,H,Dh,Dh) [v x k], "n": (B,H,Dh), "m": (B,H)}."""
+    Dh = q.shape[-1]
+    qf = q.astype(jnp.float32) / jnp.sqrt(Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    i = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + state["m"], i)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    ip = jnp.exp(i - m_new)
+    C = fp[..., None, None] * state["C"] + ip[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])                     # (B,H,Dv,Dk)
+    n = fp[..., None] * state["n"] + ip[..., None] * kf
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * qf, axis=-1)), jnp.exp(-m_new))
+    h = jnp.einsum("bhvk,bhk->bhv", C, qf) / denom[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                      cache: Optional[dict] = None,
+                      fill_cache: bool = False,
+                      use_kernel: bool = False,
+                      interpret: bool = False):
+    """x: (B,S,D).  Returns (y, new_cache)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    inner = p["w_up"].shape[1]
+    Dh = inner // H
+    u = x @ p["w_up"].astype(x.dtype)
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    q = (u @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (u @ p["wk"].astype(x.dtype)).reshape(B, S, H, Dh) / jnp.sqrt(Dh).astype(x.dtype)
+    v = (u @ p["wv"].astype(x.dtype)).reshape(B, S, H, Dh)
+    i_gate = u @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype)
+    f_gate = u @ p["wf"].astype(x.dtype) + p["bf"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None and S == 1:
+        h, new_state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  i_gate[:, 0], f_gate[:, 0], cache)
+        h = h[:, None].astype(x.dtype).reshape(B, S, inner)
+        new_cache = new_state
+    elif cache is not None:
+        # chunked prefill continuing from carried state: exact recurrence
+        def step(st, t):
+            ht, st2 = mlstm_step(q[:, t], k[:, t], v[:, t],
+                                 i_gate[:, t], f_gate[:, t], st)
+            return st2, ht
+        new_cache, hs = jax.lax.scan(step, cache, jnp.arange(S))
+        h = jnp.swapaxes(hs, 0, 1).astype(x.dtype).reshape(B, S, inner)
+    else:
+        h = mlstm_parallel(q, k, v, i_gate, f_gate,
+                           use_kernel=use_kernel, interpret=interpret)
+        h = h.reshape(B, S, inner)
+        if fill_cache:
+            # rebuild final state by a lightweight scan over gates (S small in
+            # serving prefill chunks); exact state for decode continuation.
+            def step(st, t):
+                _, st2 = mlstm_step(q[:, t], k[:, t], v[:, t],
+                                    i_gate[:, t], f_gate[:, t], st)
+                return st2, None
+            st0 = init_mlstm_state(cfg, B)
+            new_cache, _ = jax.lax.scan(step, st0, jnp.arange(S))
+    h = h + u * p["skip"].astype(x.dtype)
+    y = (h * g) @ p["w_down"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    Dh = inner // H
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    Dh = inner // H
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, Dh, Dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, Dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ff = int(d * cfg.slstm_proj_factor)
+    gates = {}
+    for gname in ("z", "i", "f", "o"):
+        gates[f"w_{gname}"] = P((d, d), ("embed", "embed2"))
+        gates[f"r_{gname}"] = P((H, hd, hd), ("heads", None, None))
+        gates[f"b_{gname}"] = P((d,), ("embed2",), init="zeros")
+    gates["b_f"] = P((d,), ("embed2",), init="ones", scale=3.0)
+    return {
+        **gates,
+        "ff_wi": P((d, ff), ("embed", "mlp")),
+        "ff_wg": P((d, ff), ("embed", "mlp")),
+        "ff_wo": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_gates(p: dict, x_t: jax.Array, h_prev: jax.Array, H: int):
+    """x_t,h_prev: (B,D) fp32.  Returns raw gate preactivations (B,D) x4."""
+    B, D = x_t.shape
+    hd = D // H
+    hh = h_prev.reshape(B, H, hd)
+    outs = []
+    for g in ("z", "i", "f", "o"):
+        rec = jnp.einsum("bhi,hio->bho", hh, p[f"r_{g}"].astype(jnp.float32))
+        outs.append(x_t @ p[f"w_{g}"].astype(jnp.float32)
+                    + rec.reshape(B, D) + p[f"b_{g}"].astype(jnp.float32))
+    return outs
+
+
+def slstm_step(p: dict, state: dict, x_t: jax.Array, H: int):
+    """state: {"c","n","h","m"} each (B,D) fp32; x_t (B,D) fp32."""
+    zt, it, ft, ot = _slstm_gates(p, x_t, state["h"], H)
+    z = jnp.tanh(zt)
+    log_i = it
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    ip = jnp.exp(log_i - m_new)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    c = fp * state["c"] + ip * z
+    n = jnp.maximum(fp * state["n"] + ip, jnp.exp(-m_new))
+    h = jax.nn.sigmoid(ot) * c / n
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_mixer_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                      cache: Optional[dict] = None,
+                      fill_cache: bool = False):
+    """Recurrence sublayer only.  x: (B,S,D).  Returns (h, new_cache).
+
+    The sLSTM block is two residual sublayers (recurrence, then a 4/3 gated
+    FFN); composition lives in ``repro.models.transformer``.
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    xf = x.astype(jnp.float32)
+    state = cache if cache is not None else init_slstm_state(cfg, B)
+    state = {k: v.astype(jnp.float32) for k, v in state.items()}
+
+    def step(st, x_t):
+        st2 = slstm_step(p, st, x_t, H)
+        return st2, st2["h"]
+
+    final, hs = jax.lax.scan(step, state, jnp.swapaxes(xf, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)        # (B,S,D)
+    new_cache = final if (cache is not None or fill_cache) else None
+    return h, new_cache
+
+
+def slstm_ffn_apply(p: dict, x: jax.Array) -> jax.Array:
+    """Gated FFN sublayer (proj factor 4/3)."""
+    ff = jax.nn.gelu(x @ p["ff_wg"].astype(x.dtype)) * (x @ p["ff_wi"].astype(x.dtype))
+    return ff @ p["ff_wo"].astype(x.dtype)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, D), jnp.float32),
+        "n": jnp.ones((batch, D), jnp.float32),
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "m": jnp.zeros((batch, D), jnp.float32),
+    }
+
+
+def slstm_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    sds = lambda: jax.ShapeDtypeStruct((batch, D), jnp.float32)
+    return {"c": sds(), "n": sds(), "h": sds(), "m": sds()}

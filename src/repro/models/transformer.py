@@ -1,0 +1,522 @@
+"""Model assembly: layer planning, scanned blocks, train/prefill/decode.
+
+Layers are grouped into *segments*: maximal periodic runs of identically-
+structured blocks.  Each segment with ``repeats > 1`` is executed with
+``lax.scan`` over stacked parameters, which keeps HLO size and compile time
+independent of depth (critical for the 60-layer/236B dry-run cells).
+
+Block kinds (``repro.config``): ATTN (incl. MLA/MoE variants), RGLRU, MLSTM,
+SLSTM.  Hybrid patterns (recurrentgemma 2:1, xlstm 7:1) become multi-position
+periods.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, MLSTM, RGLRU, SLSTM, ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import DEFAULT_OPTS, RunOpts
+from repro.models.layers import (apply_mlp, apply_norm, embed_params,
+                                 embed_tokens, mlp_params, norm_params,
+                                 sinusoidal_positions, unembed)
+from repro.models.param import P, abstract_tree, init_tree, stack_trees
+
+# ---------------------------------------------------------------------------
+# Layer planning
+# ---------------------------------------------------------------------------
+
+
+def _layer_sigs(cfg: ModelConfig):
+    sigs = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        moe_flag = (cfg.moe.enabled and kind == ATTN
+                    and i >= cfg.moe.first_dense_layers)
+        sigs.append((kind, moe_flag))
+    return sigs
+
+
+def plan_layers(cfg: ModelConfig):
+    """Returns list of (period_sigs: tuple, repeats: int)."""
+    sigs = _layer_sigs(cfg)
+    if cfg.unroll_layers:
+        return [((s,), 1) for s in sigs]
+    segments = []
+    i = 0
+    while i < len(sigs):
+        best_period, best_repeats = 1, 1
+        for period in range(1, min(8, len(sigs) - i) + 1):
+            pat = sigs[i: i + period]
+            r = 1
+            while sigs[i + r * period: i + (r + 1) * period] == pat:
+                r += 1
+            if (r * period > best_period * best_repeats
+                    or (r * period == best_period * best_repeats
+                        and period < best_period)):
+                best_period, best_repeats = period, r
+        segments.append((tuple(sigs[i: i + best_period]), best_repeats))
+        i += best_period * best_repeats
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Per-block params
+# ---------------------------------------------------------------------------
+
+
+def _block_params(cfg: ModelConfig, kind: str, moe_flag: bool,
+                  cross: bool = False) -> dict:
+    p: dict = {}
+    if kind == ATTN:
+        p["ln1"] = norm_params(cfg)
+        p["attn"] = (mla_mod.mla_params(cfg) if cfg.attention == "mla"
+                     else attn_mod.attn_params(cfg))
+        if cross:
+            p["ln_cross"] = norm_params(cfg)
+            p["cross"] = attn_mod.cross_attn_params(cfg)
+        has_mlp = cfg.d_ff > 0 or moe_flag
+        if has_mlp:
+            if not cfg.parallel_block:
+                p["ln2"] = norm_params(cfg)
+            if moe_flag:
+                p["moe"] = moe_mod.moe_params(cfg)
+            else:
+                p["mlp"] = mlp_params(cfg)
+    elif kind == RGLRU:
+        p["ln1"] = norm_params(cfg)
+        p["mix"] = rglru_mod.rglru_params(cfg)
+        if cfg.d_ff:
+            p["ln2"] = norm_params(cfg)
+            p["mlp"] = mlp_params(cfg)
+    elif kind == MLSTM:
+        p["ln1"] = norm_params(cfg)
+        p["mix"] = ssm_mod.mlstm_params(cfg)
+    elif kind == SLSTM:
+        p["ln1"] = norm_params(cfg)
+        p["mix"] = ssm_mod.slstm_params(cfg)
+        p["ln2"] = norm_params(cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _period_params(cfg: ModelConfig, sig, cross: bool = False) -> dict:
+    return {f"b{j}": _block_params(cfg, kind, moe_flag, cross=cross)
+            for j, (kind, moe_flag) in enumerate(sig)}
+
+
+def encoder_plan(cfg: ModelConfig):
+    """Layer plan for the (whisper-style) encoder stack."""
+    sig = ((ATTN, False),)
+    if cfg.unroll_layers:
+        return [(sig, 1)] * cfg.num_encoder_layers
+    return [(sig, cfg.num_encoder_layers)]
+
+
+def model_param_tree(cfg: ModelConfig) -> dict:
+    tree: dict = {"embed": embed_params(cfg), "final_norm": norm_params(cfg)}
+    cross = cfg.family == "encdec"
+    segs = []
+    for sig, repeats in plan_layers(cfg):
+        period = _period_params(cfg, sig, cross=cross)
+        segs.append(stack_trees([period] * repeats) if repeats > 1 else period)
+    tree["segments"] = segs
+    if cfg.family == "encdec":
+        enc_segs = []
+        for sig, repeats in encoder_plan(cfg):
+            period = _period_params(cfg, sig)
+            enc_segs.append(stack_trees([period] * repeats)
+                            if repeats > 1 else period)
+        tree["encoder"] = {
+            "segments": enc_segs,
+            "final_norm": norm_params(cfg),
+        }
+    if cfg.family == "vlm":
+        tree["patch_proj"] = {"w": P((cfg.d_model, cfg.d_model),
+                                     ("embed", "embed2"))}
+    return tree
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return init_tree(model_param_tree(cfg), rng, cfg.param_dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(model_param_tree(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_shapes(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                        cross: bool = False):
+    if kind == ATTN:
+        if cfg.attention == "mla":
+            c = mla_mod.mla_cache_shapes(cfg, batch, capacity)
+        else:
+            c = attn_mod.cache_shapes(cfg, batch, capacity)
+        if cross:
+            dt = jnp.dtype(cfg.compute_dtype)
+            t = cfg.encoder_seq
+            c = dict(c)
+            c["cross_k"] = jax.ShapeDtypeStruct(
+                (batch, t, cfg.num_kv_heads, cfg.head_dim), dt)
+            c["cross_v"] = jax.ShapeDtypeStruct(
+                (batch, t, cfg.num_kv_heads, cfg.head_dim), dt)
+        return c
+    if kind == RGLRU:
+        return rglru_mod.rglru_cache_shapes(cfg, batch)
+    if kind == MLSTM:
+        return ssm_mod.mlstm_cache_shapes(cfg, batch)
+    if kind == SLSTM:
+        return ssm_mod.slstm_cache_shapes(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int):
+    """ShapeDtypeStruct pytree matching the caches argument of decode."""
+    cross = cfg.family == "encdec"
+    segs = []
+    for sig, repeats in plan_layers(cfg):
+        period = {f"b{j}": _block_cache_shapes(cfg, kind, batch, capacity, cross)
+                  for j, (kind, _) in enumerate(sig)}
+        if repeats > 1:
+            period = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+                period)
+        segs.append(period)
+    return segs
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int):
+    """Materialised empty caches.  Sentinel values by leaf name:
+    ``pos`` -> -1 (empty slot), mlstm ``m`` -> -1e30 (log-sum-exp identity),
+    slstm ``n`` -> 1 (normalizer floor)."""
+    def init_leaf(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, s.dtype)
+        if name == "m":
+            return jnp.full(s.shape, -1e30, s.dtype)
+        if name == "n" and len(s.shape) == 2:
+            return jnp.ones(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree_util.tree_map_with_path(init_leaf,
+                                            cache_shapes(cfg, batch, capacity))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, kind: str, moe_flag: bool, p: dict,
+                 x: jax.Array, *, positions, cache, cache_index, causal,
+                 fill_cache, cache_capacity, enc_out, opts: RunOpts):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == ATTN:
+        xn = apply_norm(cfg, p["ln1"], x)
+        if cfg.attention == "mla":
+            a_out, ncache = mla_mod.mla_apply(
+                cfg, p["attn"], xn, positions=positions,
+                cache={k: v for k, v in cache.items()
+                       if not k.startswith("cross_")} if cache is not None else None,
+                cache_index=cache_index, fill_cache=fill_cache,
+                cache_capacity=cache_capacity, opts=opts)
+        else:
+            a_out, ncache = attn_mod.attn_apply(
+                cfg, p["attn"], xn, positions=positions,
+                cache={k: v for k, v in cache.items()
+                       if not k.startswith("cross_")} if cache is not None else None,
+                cache_index=cache_index, causal=causal,
+                fill_cache=fill_cache, cache_capacity=cache_capacity, opts=opts)
+        if "cross" in p:
+            if cache is not None and "cross_k" in cache:
+                enc_kv = {"k": cache["cross_k"], "v": cache["cross_v"]}
+            else:
+                enc_kv = attn_mod.encode_cross_kv(cfg, p["cross"], enc_out)
+            if ncache is not None:
+                ncache = dict(ncache)
+                ncache["cross_k"] = enc_kv["k"].astype(jnp.dtype(cfg.compute_dtype))
+                ncache["cross_v"] = enc_kv["v"].astype(jnp.dtype(cfg.compute_dtype))
+        has_mlp = cfg.d_ff > 0 or moe_flag
+        if cfg.parallel_block and has_mlp:
+            m_out = apply_mlp(cfg, p["mlp"], xn)
+            x = x + a_out + m_out
+        else:
+            x = x + a_out
+            if "cross" in p:
+                xc = apply_norm(cfg, p["ln_cross"], x)
+                x = x + attn_mod.cross_attn_apply(cfg, p["cross"], xc, enc_kv,
+                                                  opts=opts)
+            if has_mlp:
+                xn2 = apply_norm(cfg, p["ln2"], x)
+                if moe_flag:
+                    m_out, aux = moe_mod.moe_apply(cfg, p["moe"], xn2)
+                else:
+                    m_out = apply_mlp(cfg, p["mlp"], xn2)
+                x = x + m_out
+        return x, ncache, aux
+    if kind == RGLRU:
+        xn = apply_norm(cfg, p["ln1"], x)
+        mix, ncache = rglru_mod.rglru_block_apply(
+            cfg, p["mix"], xn, cache=cache, fill_cache=fill_cache,
+            use_kernel=opts.use_kernels, interpret=opts.interpret)
+        x = x + mix
+        if cfg.d_ff:
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+        return x, ncache, aux
+    if kind == MLSTM:
+        xn = apply_norm(cfg, p["ln1"], x)
+        mix, ncache = ssm_mod.mlstm_block_apply(
+            cfg, p["mix"], xn, cache=cache, fill_cache=fill_cache,
+            use_kernel=opts.use_kernels, interpret=opts.interpret)
+        return x + mix, ncache, aux
+    if kind == SLSTM:
+        xn = apply_norm(cfg, p["ln1"], x)
+        mix, ncache = ssm_mod.slstm_mixer_apply(cfg, p["mix"], xn,
+                                                cache=cache,
+                                                fill_cache=fill_cache)
+        x = x + mix
+        x = x + ssm_mod.slstm_ffn_apply(p["mix"], apply_norm(cfg, p["ln2"], x))
+        return x, ncache, aux
+    raise ValueError(kind)
+
+
+def _apply_period(cfg: ModelConfig, sig, p: dict, x, *, positions, caches,
+                  cache_index, causal, fill_cache, cache_capacity, enc_out, opts):
+    new_caches = {}
+    aux = jnp.zeros((), jnp.float32)
+    for j, (kind, moe_flag) in enumerate(sig):
+        c = caches.get(f"b{j}") if caches is not None else None
+        x, nc, a = _apply_block(cfg, kind, moe_flag, p[f"b{j}"], x,
+                                positions=positions, cache=c,
+                                cache_index=cache_index, causal=causal,
+                                fill_cache=fill_cache,
+                                cache_capacity=cache_capacity, enc_out=enc_out,
+                                opts=opts)
+        aux = aux + a
+        new_caches[f"b{j}"] = nc
+    return x, new_caches, aux
+
+
+def _has_caches(caches) -> bool:
+    return caches is not None
+
+
+def apply_stack(cfg: ModelConfig, segments_params: list, x: jax.Array, *,
+                positions, caches: Optional[list], cache_index, causal: bool,
+                fill_cache: bool, cache_capacity: Optional[int] = None,
+                enc_out=None, opts: RunOpts = DEFAULT_OPTS, plan=None):
+    """Run all segments.  Returns (x, new_caches: list|None, aux)."""
+    plan = plan if plan is not None else plan_layers(cfg)
+    new_caches: Optional[list] = [] if (caches is not None or fill_cache) else None
+    aux_total = jnp.zeros((), jnp.float32)
+    want_cache = caches is not None or fill_cache
+
+    for seg_idx, (sig, repeats) in enumerate(plan):
+        seg_p = segments_params[seg_idx]
+        seg_c = caches[seg_idx] if caches is not None else None
+        if repeats == 1:
+            fn = partial(_apply_period, cfg, sig, seg_p,
+                         positions=positions, caches=seg_c,
+                         cache_index=cache_index, causal=causal,
+                         fill_cache=fill_cache, cache_capacity=cache_capacity,
+                         enc_out=enc_out, opts=opts)
+            if opts.remat != "none":
+                fn = _remat(fn, opts.remat)
+            x, nc, aux = fn(x)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches.append(nc)
+        else:
+            def body(carry, xs):
+                xc = carry
+                p_slice, c_slice = xs
+                out, nc, aux = _apply_period(
+                    cfg, sig, p_slice, xc, positions=positions,
+                    caches=c_slice, cache_index=cache_index, causal=causal,
+                    fill_cache=fill_cache, cache_capacity=cache_capacity,
+                    enc_out=enc_out, opts=opts)
+                # nc may contain None leaves (no-cache modes); None is an
+                # empty pytree node, which scan stacks away harmlessly.
+                return out, (nc, aux)
+            bodyf = _remat(body, opts.remat) if opts.remat != "none" else body
+            x, (ncs, auxs) = jax.lax.scan(bodyf, x, (seg_p, seg_c))
+            aux_total = aux_total + jnp.sum(auxs)
+            if new_caches is not None:
+                new_caches.append(ncs)
+    return x, new_caches, aux_total
+
+
+def _remat(fn, policy: str):
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           opts: RunOpts = DEFAULT_OPTS) -> jax.Array:
+    """frames: (B, T, d_model) stub frontend embeddings -> encoder output."""
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    x, _, _ = apply_stack(cfg, params["encoder"]["segments"], x,
+                          positions=pos, caches=None, cache_index=None,
+                          causal=False, fill_cache=False, opts=opts,
+                          plan=encoder_plan(cfg))
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Forward entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  positions: jax.Array, extras: dict) -> jax.Array:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    if cfg.family == "vlm" and "patches" in extras:
+        patches = extras["patches"].astype(x.dtype) @ \
+            params["patch_proj"]["w"].astype(x.dtype)
+        npatch = patches.shape[1]
+        if tokens.shape[1] >= npatch:
+            x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+    return x
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            caches: Optional[list] = None,
+            cache_index=None,
+            fill_cache: bool = False,
+            cache_capacity: Optional[int] = None,
+            extras: Optional[dict] = None,
+            last_only: bool = False,
+            opts: RunOpts = DEFAULT_OPTS):
+    """Returns (logits, new_caches, aux)."""
+    extras = extras or {}
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed_inputs(cfg, params, tokens, positions, extras)
+    enc_out = None
+    if cfg.family == "encdec" and "frames" in extras:
+        # decode steps omit frames: cross-K/V are read from the cache
+        enc_out = encode(cfg, params, extras["frames"], opts=opts)
+    x, new_caches, aux = apply_stack(cfg, params["segments"], x,
+                                     positions=positions, caches=caches,
+                                     cache_index=cache_index, causal=True,
+                                     fill_cache=fill_cache,
+                                     cache_capacity=cache_capacity,
+                                     enc_out=enc_out, opts=opts)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(cfg, params["embed"], x)
+    return logits, new_caches, aux
+
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict,
+            opts: RunOpts = DEFAULT_OPTS):
+    """Cross-entropy LM loss.  batch: tokens/labels/mask (+frames/patches)."""
+    extras = {k: batch[k] for k in ("frames", "patches") if k in batch}
+    logits, _, aux = forward(cfg, params, batch["tokens"], extras=extras,
+                             opts=opts)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            extras: Optional[dict] = None,
+            cache_capacity: Optional[int] = None,
+            opts: RunOpts = DEFAULT_OPTS):
+    """Returns (last_logits (B,1,V), caches)."""
+    logits, caches, _ = forward(cfg, params, tokens, fill_cache=True,
+                                cache_capacity=cache_capacity,
+                                extras=extras, last_only=True, opts=opts)
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: list,
+                tokens: jax.Array, index: jax.Array,
+                extras: Optional[dict] = None, opts: RunOpts = DEFAULT_OPTS):
+    """One decode step.  tokens: (B,1); index: scalar int32 position.
+    Returns (logits (B,1,V), new_caches)."""
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    logits, new_caches, _ = forward(cfg, params, tokens, positions=positions,
+                                    caches=caches, cache_index=index,
+                                    extras=extras, opts=opts)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run / launchers)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                                    cfg.d_model), cdt)
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches,
+                                                     cfg.d_model), cdt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                                    cfg.d_model), cdt)
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches,
+                                                     cfg.d_model), cdt)
+        return specs
+    # decode: one new token against a cache of S entries
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "index": jax.ShapeDtypeStruct((), i32),
+        "caches": cache_shapes(cfg, B, S),
+    }
+    return specs

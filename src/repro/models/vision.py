@@ -1,0 +1,270 @@
+"""The paper's two analytics workloads as JAX models (§3.2.3).
+
+  OuterAnalysis  — MobileNetV1-SSD-style detector: depthwise-separable conv
+                   backbone + per-cell anchor head (class logits + boxes);
+                   hazard flagging = non-vehicle object on the road region,
+                   or a vehicle box large enough to indicate tailgating.
+  InnerAnalysis  — MoveNet-Lightning-style pose model: conv backbone +
+                   keypoint heatmap head; distraction flagging = a hand above
+                   three-quarters of the frame height, or eyes positioned
+                   below the ears (phone-glance posture).
+
+The paper treats these as black-box TFLite models; here they are functional
+JAX (same ``P`` descriptor system as the LMs) so the EDA runtime can drive
+*real* inference end-to-end (``examples/eda_dashcam_serve.py``) and the
+energy model can count their true FLOPs.  Frames are downscaled to the model
+input resolution before inference — the paper's accuracy/latency trade-off,
+kept configurable via ``VisionConfig.input_res``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.eda_vision import VisionConfig
+from repro.models.param import P, init_tree
+
+# COCO-ish class ids used by the detector head
+VEHICLE_CLASSES = (2, 3, 4)        # car, truck, bus
+PERSON_CLASS = 0
+# keypoint ids (COCO-17 subset used by the flag logic)
+KP_LEFT_EYE, KP_RIGHT_EYE = 1, 2
+KP_LEFT_EAR, KP_RIGHT_EAR = 3, 4
+KP_LEFT_WRIST, KP_RIGHT_WRIST = 9, 10
+
+
+# ---------------------------------------------------------------------------
+# Shared conv backbone (MobileNetV1-style depthwise separable stack)
+# ---------------------------------------------------------------------------
+
+
+def _conv_p(kh, kw, cin, cout):
+    return {"w": P((kh, kw, cin, cout), (None, None, None, None), scale=1.0),
+            "b": P((cout,), (None,), init="zeros")}
+
+
+def _dw_p(kh, kw, c):
+    return {"w": P((kh, kw, 1, c), (None, None, None, None), scale=1.0),
+            "b": P((c,), (None,), init="zeros")}
+
+
+def backbone_params(cfg: VisionConfig) -> dict:
+    chans = [int(c * cfg.width_mult) for c in cfg.channels]
+    p = {"stem": _conv_p(3, 3, 3, chans[0])}
+    for i in range(1, len(chans)):
+        p[f"dw{i}"] = _dw_p(3, 3, chans[i - 1])
+        p[f"pw{i}"] = _conv_p(1, 1, chans[i - 1], chans[i])
+    return p
+
+
+def _conv(p, x, stride=1, groups=1):
+    w = p["w"].astype(x.dtype)
+    if groups > 1:                       # depthwise
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def backbone_apply(cfg: VisionConfig, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, 3) in [0,1] -> (B, H/16, W/16, C_top)."""
+    chans = [int(c * cfg.width_mult) for c in cfg.channels]
+    x = jax.nn.relu6(_conv(p["stem"], x, stride=2))
+    for i in range(1, len(chans)):
+        stride = 2 if i <= 3 else 1
+        x = jax.nn.relu6(_conv(p[f"dw{i}"], x, stride=stride,
+                               groups=chans[i - 1]))
+        x = jax.nn.relu6(_conv(p[f"pw{i}"], x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Detector (outer)
+# ---------------------------------------------------------------------------
+
+
+def detector_params(cfg: VisionConfig) -> dict:
+    c_top = int(cfg.channels[-1] * cfg.width_mult)
+    out = cfg.num_anchors * (cfg.num_classes + 1 + 4)   # +1 background
+    return {"backbone": backbone_params(cfg),
+            "head": _conv_p(3, 3, c_top, out)}
+
+
+def init_detector(cfg: VisionConfig, rng: jax.Array) -> dict:
+    return init_tree(detector_params(cfg), rng, "float32")
+
+
+def detector_apply(cfg: VisionConfig, p: dict, frames: jax.Array):
+    """frames: (B, res, res, 3) -> dict of per-anchor predictions.
+
+    Returns {"scores": (B, N, classes+1), "boxes": (B, N, 4)} with N =
+    (res/16)^2 * anchors; boxes are (cy, cx, h, w) offsets from cell centres.
+    """
+    feats = backbone_apply(cfg, p["backbone"], frames)
+    raw = _conv(p["head"], feats)                        # (B, g, g, A*(C+5))
+    B, g, _, _ = raw.shape
+    A, C = cfg.num_anchors, cfg.num_classes + 1
+    raw = raw.reshape(B, g * g * A, C + 4)
+    return {"scores": jax.nn.softmax(raw[..., :C], axis=-1),
+            "boxes": raw[..., C:],
+            "grid": g}
+
+
+def decode_detections(cfg: VisionConfig, preds: dict,
+                      score_thresh: float = 0.5):
+    """Per-frame top detections: (class, score, cy, cx, h, w) arrays."""
+    scores = preds["scores"][..., 1:]                    # drop background
+    best_c = jnp.argmax(scores, axis=-1)                 # (B, N)
+    best_s = jnp.max(scores, axis=-1)
+    g = preds["grid"]
+    A = cfg.num_anchors
+    n = g * g * A
+    cell = jnp.arange(n) // A
+    cy = (cell // g + 0.5) / g
+    cx = (cell % g + 0.5) / g
+    boxes = jax.nn.sigmoid(preds["boxes"])               # offsets in [0,1]
+    out_cy = cy[None, :] + (boxes[..., 0] - 0.5) / g
+    out_cx = cx[None, :] + (boxes[..., 1] - 0.5) / g
+    h = boxes[..., 2]
+    w = boxes[..., 3]
+    keep = best_s >= score_thresh
+    return {"cls": best_c, "score": best_s, "keep": keep,
+            "cy": out_cy, "cx": out_cx, "h": h, "w": w}
+
+
+def flag_hazards(det: dict, road_y: float = 0.55,
+                 road_x: Tuple[float, float] = (0.25, 0.75),
+                 tailgate_area: float = 0.18) -> jax.Array:
+    """Paper §3.2.3 OuterAnalysis flag logic, vectorised over anchors.
+
+    hazard  := non-vehicle detection whose box centre lies in the
+               lower-middle "road" region of the frame
+    tailgate:= vehicle detection large enough to imply dangerous proximity
+    Returns (B, N) bool per-detection danger flags.
+    """
+    is_vehicle = jnp.isin(det["cls"], jnp.asarray(VEHICLE_CLASSES))
+    on_road = ((det["cy"] > road_y)
+               & (det["cx"] > road_x[0]) & (det["cx"] < road_x[1]))
+    hazard = (~is_vehicle) & on_road
+    tailgate = is_vehicle & (det["h"] * det["w"] > tailgate_area)
+    return det["keep"] & (hazard | tailgate)
+
+
+# ---------------------------------------------------------------------------
+# Pose (inner)
+# ---------------------------------------------------------------------------
+
+
+def pose_params(cfg: VisionConfig) -> dict:
+    c_top = int(cfg.channels[-1] * cfg.width_mult)
+    return {"backbone": backbone_params(cfg),
+            "head": _conv_p(3, 3, c_top, cfg.num_keypoints)}
+
+
+def init_pose(cfg: VisionConfig, rng: jax.Array) -> dict:
+    return init_tree(pose_params(cfg), rng, "float32")
+
+
+def pose_apply(cfg: VisionConfig, p: dict, frames: jax.Array):
+    """frames: (B, res, res, 3) -> keypoints {"y","x","score"}: (B, K)."""
+    feats = backbone_apply(cfg, p["backbone"], frames)
+    heat = _conv(p["head"], feats)                       # (B, g, g, K)
+    B, g, _, K = heat.shape
+    flat = heat.reshape(B, g * g, K)
+    idx = jnp.argmax(flat, axis=1)                       # (B, K)
+    score = jax.nn.sigmoid(jnp.max(flat, axis=1))
+    ky = (idx // g + 0.5) / g
+    kx = (idx % g + 0.5) / g
+    return {"y": ky, "x": kx, "score": score}
+
+
+def flag_distraction(kp: dict, hand_line: float = 0.25,
+                     eye_margin: float = 0.02,
+                     min_score: float = 0.3) -> jax.Array:
+    """Paper §3.2.3 InnerAnalysis flag logic.
+
+    distracted := a wrist above three-quarters of the frame height (phone to
+    the ear), or eyes positioned below the ears (glancing down at a phone).
+    y runs top(0) -> bottom(1); "above 3/4 height" = y < ``hand_line``.
+    Returns (B,) bool.
+    """
+    def ok(i):
+        return kp["score"][:, i] >= min_score
+
+    hand_up = ((ok(KP_LEFT_WRIST) & (kp["y"][:, KP_LEFT_WRIST] < hand_line))
+               | (ok(KP_RIGHT_WRIST) & (kp["y"][:, KP_RIGHT_WRIST] < hand_line)))
+    eyes = (kp["y"][:, KP_LEFT_EYE] + kp["y"][:, KP_RIGHT_EYE]) / 2
+    ears = (kp["y"][:, KP_LEFT_EAR] + kp["y"][:, KP_RIGHT_EAR]) / 2
+    eyes_ok = (ok(KP_LEFT_EYE) & ok(KP_RIGHT_EYE)
+               & ok(KP_LEFT_EAR) & ok(KP_RIGHT_EAR))
+    glance_down = eyes_ok & (eyes > ears + eye_margin)
+    return hand_up | glance_down
+
+
+# ---------------------------------------------------------------------------
+# FLOPs accounting (energy model / roofline)
+# ---------------------------------------------------------------------------
+
+
+def backbone_flops(cfg: VisionConfig) -> float:
+    """MACs*2 of one frame through the backbone + a 3x3 head."""
+    chans = [int(c * cfg.width_mult) for c in cfg.channels]
+    hw = cfg.input_res // 2
+    total = 2 * 9 * 3 * chans[0] * hw * hw               # stem
+    for i in range(1, len(chans)):
+        if i <= 3:
+            hw //= 2
+        total += 2 * 9 * chans[i - 1] * hw * hw          # depthwise
+        total += 2 * chans[i - 1] * chans[i] * hw * hw   # pointwise
+    return float(total)
+
+
+def model_flops(cfg: VisionConfig) -> float:
+    chans_top = int(cfg.channels[-1] * cfg.width_mult)
+    hw = cfg.input_res // 16
+    if cfg.task == "detect":
+        out = cfg.num_anchors * (cfg.num_classes + 1 + 4)
+    else:
+        out = cfg.num_keypoints
+    head = 2 * 9 * chans_top * out * hw * hw
+    return backbone_flops(cfg) + head
+
+
+# ---------------------------------------------------------------------------
+# Frame downscaling (the paper's pre-inference resize)
+# ---------------------------------------------------------------------------
+
+
+def downscale(frames: jax.Array, res: int) -> jax.Array:
+    """(B, H, W, 3) -> (B, res, res, 3) nearest-neighbour (cheap, like the
+    paper's Bitmap scaling)."""
+    B, H, W, _ = frames.shape
+    ys = (jnp.arange(res) * H // res)
+    xs = (jnp.arange(res) * W // res)
+    return frames[:, ys][:, :, xs]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def analyse_outer(cfg: VisionConfig, params: dict, frames: jax.Array):
+    """Full outer pipeline: downscale -> detect -> flag.  Returns
+    (danger_flags (B,N) bool, detections dict)."""
+    x = downscale(frames.astype(jnp.float32), cfg.input_res)
+    det = decode_detections(cfg, detector_apply(cfg, params, x))
+    return flag_hazards(det), det
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def analyse_inner(cfg: VisionConfig, params: dict, frames: jax.Array):
+    """Full inner pipeline: downscale -> pose -> flag.  Returns
+    (distracted (B,) bool, keypoints dict)."""
+    x = downscale(frames.astype(jnp.float32), cfg.input_res)
+    kp = pose_apply(cfg, params, x)
+    return flag_distraction(kp), kp

@@ -1,0 +1,10 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware)."""
+from repro.roofline.analysis import (  # noqa: F401
+    HW_V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyse_compiled,
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)

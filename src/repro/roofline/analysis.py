@@ -1,0 +1,360 @@
+"""Three-term roofline from the compiled dry-run (TPU v5e target).
+
+    compute    = HLO_FLOPs        / (chips * peak_FLOPs)
+    memory     = HLO_bytes        / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+Scope note: ``compiled.cost_analysis()`` on a jit'd SPMD program reports the
+**per-device** partitioned module (global = reported x chips), and the
+collective operand shapes in the partitioned HLO are likewise per-device
+shards.  The formulas above are therefore evaluated in their algebraically
+identical per-device form: term = per_device_quantity / per_chip_rate.
+(Cross-check: starcoder2-3b train_4k reports 1.4e14 flops/device against a
+7.4e13 useful-6ND/device — per-device, not the 1.9e16 global.)
+
+Collective bytes are NOT in cost_analysis, so :func:`collective_bytes`
+parses the optimized HLO text: it builds a result-shape symbol table and
+sums the *operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (counting ``-start`` ops once, not their
+``-done`` halves).  Ring-algorithm wire factors (2(n-1)/n for all-reduce,
+(n-1)/n for gather/scatter) are folded into the term.
+
+``MODEL_FLOPS = 6·N·D`` (dense) or ``6·N_active·D`` (MoE) gives the
+useful-compute ratio — the remat/redundancy waste detector the perf loop
+watches while hillclimbing.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float            # bf16 FLOP/s per chip
+    hbm_bw: float                # bytes/s per chip
+    ici_bw: float                # bytes/s per link
+    hbm_bytes: float             # capacity per chip
+
+
+HW_V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                      ici_bw=50e9, hbm_bytes=16e9)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes parser
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[128,4096]{1,0}' or a '(tuple, of, shapes)'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, per_op: bool = False):
+    """Sum operand bytes of every cross-device collective in the HLO text.
+
+    Returns total bytes (or a per-opcode dict when ``per_op``).  Works on
+    ``lowered.as_text()`` (StableHLO is NOT supported — pass the optimized
+    HLO from ``compiled.as_text()``, which is also where the real collective
+    schedule lives).
+    """
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    totals: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = opcode
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        else:
+            continue
+        # operand list: first (...) after the opcode
+        rest = line.split(opcode, 1)[1]
+        depth = 0
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        n = 0
+        for arg in _split_top(args):
+            arg = arg.strip().lstrip("%")
+            if arg in shapes:
+                n += _shape_bytes(shapes[arg])
+            elif _SHAPE_RE.search(arg):
+                n += _shape_bytes(arg)
+        if n == 0:
+            n = _shape_bytes(m.group(2))        # fall back to result shape
+        totals[base] += n
+    if per_op:
+        return totals
+    return sum(totals.values())
+
+
+def _split_top(s: str):
+    out, depth, cur = [], 0, ""
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (6*N*D)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D with N = active params; D = tokens processed by the step.
+
+    decode steps process global_batch tokens (one per sequence) and the
+    multiplier is 2·N (forward only); train is 6·N·D; prefill 2·N·D.
+    """
+    _total, active = cfg.param_counts()
+    if shape.kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch          # decode: 1 token/seq
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-device memory (v5e fit check)
+# ---------------------------------------------------------------------------
+
+
+def estimate_memory_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                               tp: int, dp: int, fsdp: bool,
+                               grad_accum: int = 1,
+                               remat: str = "full",
+                               opt_state_dtype: str = "float32") -> dict:
+    """First-principles HBM bytes per device.
+
+    The CPU backend's ``memory_analysis`` lacks TPU buffer-assignment
+    optimisations (while-loop buffer reuse, donation-aware aliasing), so the
+    dry-run records BOTH: this analytic estimate is what the 16 GB fit
+    claim rests on; the XLA number is the conservative upper bound.
+    """
+    total, _ = cfg.param_counts()
+    pbytes = 2 * total / tp                       # bf16 weights, TP-sharded
+    opt = 0.0
+    act = 0.0
+    cache = 0.0
+    if shape.kind == "train":
+        mom = 4 if opt_state_dtype == "float32" else 2
+        opt = (4 + 2 * mom) * total / tp          # fp32 grads + mu + nu
+        if fsdp:
+            opt /= dp
+            pbytes = pbytes / dp + 2 * total / tp / 8  # shard + gather buf
+        b_local = shape.global_batch / dp / grad_accum
+        resid = b_local * shape.seq_len * cfg.d_model * 2
+        if remat == "full":
+            act = resid * cfg.num_layers          # layer-boundary saves
+        elif remat == "dots":
+            act = resid * cfg.num_layers * 8      # ~8 dot outputs/layer
+        else:
+            act = resid * cfg.num_layers * 16     # everything
+        # fp32 logits for the live microbatch (vocab TP-sharded when even)
+        vshard = tp if cfg.vocab_size % tp == 0 else 1
+        act += b_local * shape.seq_len * cfg.vocab_size * 4 / vshard
+    elif shape.kind == "prefill":
+        b_local = shape.global_batch / dp
+        act = b_local * shape.seq_len * cfg.d_model * 2 * 4   # working set
+        cache = _cache_bytes(cfg, shape, tp, dp)
+    else:
+        cache = _cache_bytes(cfg, shape, tp, dp)
+        act = 64e6
+    return {"params": pbytes, "opt": opt, "activations": act, "cache": cache,
+            "total": pbytes + opt + act + cache}
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig, tp: int,
+                 dp: int) -> float:
+    """KV/recurrent cache bytes per device (seq or batch sharded over the
+    whole mesh, matching ``repro.sharding.rules.cache_pspecs``)."""
+    from repro.config import ATTN, MLSTM, RGLRU, SLSTM
+    chips = tp * dp
+    B, S = shape.global_batch, shape.seq_len
+    per_layer = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == ATTN:
+            if cfg.attention == "mla":
+                per_layer += B * S * (cfg.mla.kv_lora_rank
+                                      + cfg.mla.qk_rope_dim) * 2
+            else:
+                cap = min(S, cfg.window) if cfg.window else S
+                per_layer += B * cap * cfg.kv_dim * 2 * 2
+        elif kind == RGLRU:
+            w = cfg.lru_width or cfg.d_model
+            per_layer += B * w * 4 + B * (cfg.conv_width - 1) * w * 2
+        elif kind == MLSTM:
+            inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+            dh = inner // cfg.num_heads
+            per_layer += B * cfg.num_heads * (dh * dh + dh + 1) * 4
+        elif kind == SLSTM:
+            per_layer += 4 * B * cfg.d_model * 4
+    return per_layer / chips                      # fully sharded over mesh
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_op: dict
+    model_flops_: float
+    bytes_per_device: float = 0.0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: overlapped terms -> max; the roofline
+        fraction reported in §Perf is compute_s / step_s."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """useful (6ND) flops / compiled flops, both whole-program."""
+        if not self.hlo_flops:
+            return 0.0
+        return self.model_flops_ / (self.hlo_flops * self.chips)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the hardware roofline this step achieves, counting
+        only useful (6ND) FLOPs: (model_flops / peak) / step_s."""
+        if self.step_s <= 0:
+            return 0.0
+        ideal = self.model_flops_ / (self.chips * HW_V5E.peak_flops)
+        return ideal / self.step_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": f"{self.compute_s:.3e}",
+            "memory_s": f"{self.memory_s:.3e}",
+            "collective_s": f"{self.collective_s:.3e}",
+            "dominant": self.dominant,
+            "useful_ratio": f"{self.useful_ratio:.2f}",
+            "roofline_frac": f"{self.roofline_fraction:.3f}",
+        }
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, coll_bytes: float,
+                   chips: int, hw: HardwareSpec = HW_V5E):
+    """All three inputs are PER-DEVICE quantities (see module docstring);
+    ``chips`` is kept in the signature for the global-input form:
+    pass global values and they divide through identically."""
+    return (hlo_flops / hw.peak_flops,
+            hlo_bytes / hw.hbm_bw,
+            coll_bytes / hw.ici_bw)
+
+
+# wire-traffic factor per collective for ring algorithms on n participants;
+# evaluated at the asymptotic n>>1 value (16..256 here)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def analyse_compiled(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                     chips: int, cost: dict, hlo_text: str,
+                     cfg: ModelConfig,
+                     mem: Optional[dict] = None,
+                     coll_by_op: Optional[dict] = None,
+                     hw: HardwareSpec = HW_V5E) -> RooflineReport:
+    """Build the report from compile artifacts.
+
+    ``cost`` = compiled.cost_analysis(); flops/bytes are per-device (SPMD
+    partitioned module).  ``coll_by_op`` may be precomputed (the dry-run's
+    depth-calibration combines two compiles); otherwise parsed from
+    ``hlo_text``.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if coll_by_op is None:
+        coll_by_op = collective_bytes(hlo_text, per_op=True)
+    coll = sum(_WIRE_FACTOR[k] * v for k, v in coll_by_op.items())
+    r = RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=float(coll),
+        coll_by_op=coll_by_op,
+        model_flops_=model_flops(cfg, shape_cfg),
+        bytes_per_device=float(mem.get("bytes_per_device", 0)) if mem else 0.0,
+    )
+    r.compute_s, r.memory_s, r.collective_s = roofline_terms(
+        flops, byts, coll, chips, hw)
+    return r

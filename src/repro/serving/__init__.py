@@ -1,0 +1,2 @@
+"""Serving substrate: continuous-batching engine with EDA deadline policy."""
+from repro.serving.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,231 @@
+"""Continuous-batching LM serving engine with the paper's deadline policy.
+
+The engine owns a fixed pool of ``slots`` decode lanes (slot = one request's
+KV/recurrent cache row).  Requests stream in; each is
+
+  1. *segmented* — its prompt is prefilled in chunks (the paper's
+     segmentation, here chunked prefill: keeps prefill latency bounded and
+     interleavable with decode ticks),
+  2. *admitted* — written into a free slot's cache rows,
+  3. *decoded*  — one token per engine tick for every active slot,
+  4. *early-stopped* — each request carries a token budget derived from its
+     deadline and the engine's EWMA per-token cost (ESD policy): when the
+     budget is hit the request finishes with ``truncated=True`` and the
+     shortfall is accounted exactly like the paper's skip rate.
+
+Priority classes mirror outer/inner: ``priority=0`` requests (hazard
+streams) pre-empt the admission queue of ``priority=1`` (distraction
+streams).  The per-slot design is jit-static: admission writes caches with
+``dynamic_update_slice`` at the slot index, so the engine never recompiles.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import EDAConfig, ModelConfig
+from repro.core.early_stop import EWMA, EarlyStopPolicy
+from repro.models import transformer as T
+from repro.models.attention import DEFAULT_OPTS, RunOpts
+
+
+@dataclass
+class Request:
+    rid: str
+    tokens: Any                      # (S,) int32 prompt
+    max_new_tokens: int
+    priority: int = 1                # 0 = outer/hazard class
+    deadline_ms: float = 0.0         # 0 = no deadline (no early stop)
+    arrival_s: float = field(default_factory=time.perf_counter)
+    # filled by the engine:
+    generated: List[int] = field(default_factory=list)
+    prefill_done_s: float = 0.0
+    finish_s: float = 0.0
+    truncated: bool = False
+
+    @property
+    def ttft_ms(self) -> float:
+        return (self.prefill_done_s - self.arrival_s) * 1000.0
+
+    @property
+    def turnaround_ms(self) -> float:
+        return (self.finish_s - self.arrival_s) * 1000.0
+
+    @property
+    def skip_rate(self) -> float:
+        if self.max_new_tokens == 0:
+            return 0.0
+        return 1.0 - len(self.generated) / self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 cache_capacity: int = 512, prefill_chunk: int = 128,
+                 eda: Optional[EDAConfig] = None,
+                 opts: RunOpts = DEFAULT_OPTS,
+                 sample: Optional[Callable] = None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = cache_capacity
+        self.prefill_chunk = prefill_chunk
+        self.eda = eda or EDAConfig()
+        self.opts = opts
+        self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+
+        self.caches = T.init_caches(cfg, slots, cache_capacity)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.slot_pos = jnp.zeros((slots,), jnp.int32)
+        self.slot_last = jnp.zeros((slots,), jnp.int32)
+        self.queue: deque = deque()
+        self.finished: List[Request] = []
+        self.token_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill_one = jax.jit(self._prefill_impl)
+
+    # ------------------------------------------------------------------
+    # jit bodies
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, caches, tokens, positions, start):
+        """Prefill one fixed-size chunk of a single-row prompt.
+
+        ``positions`` carries -1 on padded tail tokens, so their cache
+        entries are born invalid (never attended); chunk K/V land at ring
+        slots [start, start+chunk).  Returns (logits (1,chunk,V), caches).
+        """
+        logits, caches, _ = T.forward(
+            self.cfg, params, tokens, positions=positions,
+            caches=caches, cache_index=start, opts=self.opts)
+        return logits, caches
+
+    def _decode_impl(self, params, caches, tokens, positions):
+        """One decode tick for all slots.  tokens (slots,1), positions (slots,)
+        — per-slot ring indices (continuous batching)."""
+        logits, new_caches, _ = T.forward(
+            self.cfg, params, tokens,
+            positions=positions[:, None],
+            caches=caches, cache_index=positions,
+            opts=self.opts)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.priority == 0:
+            # hazard class jumps the non-priority queue (paper: outer first)
+            idx = next((i for i, r in enumerate(self.queue)
+                        if r.priority > 0), len(self.queue))
+            self.queue.insert(idx, req)
+        else:
+            self.queue.append(req)
+
+    def _token_budget(self, req: Request) -> int:
+        if req.deadline_ms <= 0 or self.eda.esd <= 1.0:
+            return req.max_new_tokens
+        policy = EarlyStopPolicy(esd=self.eda.esd)
+        cost = self.token_cost_ms.get(50.0)
+        return policy.frame_budget(req.deadline_ms, req.max_new_tokens, cost)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Chunked prefill (the paper's segmentation) + cache insert.
+
+        The prompt is decomposed into DESCENDING POWER-OF-TWO chunks capped
+        at ``prefill_chunk`` (e.g. 23 -> 8+8+4+2+1): never any padding — a
+        padded tail would silently corrupt *recurrent* state (attention can
+        mask pad positions; an mLSTM/RG-LRU scan cannot skip steps) — while
+        the compile count stays bounded by log2(prefill_chunk).
+        """
+        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        S = int(toks.shape[1])
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        row = T.init_caches(self.cfg, 1, self.capacity)
+        logits = None
+        c0 = 0
+        max_chunk = min(self.prefill_chunk, self.capacity)
+        while c0 < S:
+            chunk = max_chunk
+            while chunk > S - c0:
+                chunk //= 2
+            logits, row = self._prefill_one(
+                self.params, row, toks[:, c0: c0 + chunk],
+                pos[:, c0: c0 + chunk], jnp.int32(c0))
+            c0 += chunk
+        first = int(jax.device_get(self.sample(logits[0, -1])))
+
+        self.caches = _insert_row(self.caches, row, slot)
+        req.generated.append(first)
+        req.prefill_done_s = time.perf_counter()
+        self.active[slot] = req
+        self.slot_pos = self.slot_pos.at[slot].set(S)
+        self.slot_last = self.slot_last.at[slot].set(first)
+
+    # ------------------------------------------------------------------
+    # engine loop
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine tick: admit into free slots, then decode all slots."""
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self._admit(slot, self.queue.popleft())
+
+        if not any(self.active):
+            return
+
+        t0 = time.perf_counter()
+        tokens = self.slot_last[:, None]
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           tokens, self.slot_pos)
+        nxt = self.sample(logits[:, -1])
+        dt_ms = (time.perf_counter() - t0) * 1000.0
+        n_active = sum(r is not None for r in self.active)
+        self.token_cost_ms.update(dt_ms / max(n_active, 1))
+
+        nxt_host = jax.device_get(nxt)
+        self.slot_pos = self.slot_pos + 1
+        self.slot_last = jnp.asarray(nxt_host, jnp.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.generated.append(int(nxt_host[slot]))
+            budget = self._token_budget(req)
+            if len(req.generated) >= min(req.max_new_tokens, budget) \
+                    or int(self.slot_pos[slot]) >= self.capacity - 1:
+                req.truncated = len(req.generated) < req.max_new_tokens
+                req.finish_s = time.perf_counter()
+                self.finished.append(req)
+                self.active[slot] = None
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished
+
+
+def _insert_row(caches_all, caches_row, slot: int):
+    """Write a 1-row cache pytree into the slot'th batch row of the pool."""
+    def ins(a, r):
+        # r has batch dim 1 at the same axis position as a's batch dim;
+        # broadcastable: match trailing dims, batch axis = a.ndim - r.ndim + 0
+        axis = _batch_axis(a, r)
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, r.astype(a.dtype), slot, axis=axis)
+
+    return jax.tree.map(ins, caches_all, caches_row)
+
+
+def _batch_axis(a, r) -> int:
+    """Find the axis where pool ``a`` and row ``r`` disagree (slots vs 1)."""
+    assert a.ndim == r.ndim, (a.shape, r.shape)
+    for i, (da, dr) in enumerate(zip(a.shape, r.shape)):
+        if da != dr:
+            return i
+    return 0

@@ -1,0 +1,10 @@
+"""Distribution layer: logical->mesh partition rules, pipeline parallelism,
+and compressed collectives."""
+from repro.sharding.rules import (  # noqa: F401
+    axis_rules,
+    batch_pspecs,
+    cache_pspecs,
+    data_axis_names,
+    param_pspecs,
+    shardings,
+)

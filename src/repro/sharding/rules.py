@@ -1,0 +1,284 @@
+"""Logical->mesh partition rules (DP / TP / FSDP / EP / SP).
+
+Every parameter tensor carries logical axis names on its ``P`` descriptor
+(``repro.models.param``).  This module maps those names onto mesh axes given a
+:class:`repro.config.ParallelConfig`, with **divisibility enforcement**: a
+logical axis only shards when the tensor dimension divides evenly by the mesh
+axis size, otherwise it silently falls back to replication (e.g. whisper's
+vocab 51865 on a 16-way model axis stays replicated; its projections still
+shard on the fused head-feature dims, which are multiples of 128).
+
+Cache sharding is resolved from a *role* tree mirroring
+``transformer.cache_shapes`` assembly.  A special case gives long-context
+decode its parallelism: when the batch dim cannot shard over the data axes
+(e.g. ``long_500k`` B=1), the cache *sequence* dim shards there instead —
+flash-decode style sequence parallelism, with GSPMD inserting the final
+reduce.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.config import (ATTN, MLSTM, RGLRU, SLSTM, ModelConfig,
+                          ParallelConfig, ShapeConfig)
+from repro.models.param import P, _map_with_path
+from repro.models.transformer import model_param_tree, plan_layers
+
+# ---------------------------------------------------------------------------
+# Axis rules for parameters
+# ---------------------------------------------------------------------------
+
+
+def data_axis_names(parallel: ParallelConfig) -> tuple:
+    return tuple(parallel.data_axes)
+
+
+def axis_rules(parallel: ParallelConfig) -> dict:
+    """logical axis -> mesh axis (or tuple of axes) candidates."""
+    model = parallel.model_axis
+    fsdp = parallel.fsdp_axes if parallel.fsdp else None
+    return {
+        # tensor-parallel (Megatron-style): fused head/feature dims
+        "heads": model,
+        "kv_heads": model,
+        "mlp": model,
+        "expert_mlp": model,
+        "inner": model,
+        "inner2": None,
+        "lru": model,
+        "vocab": model,
+        # expert parallelism: expert dim wins the model axis when enabled,
+        # expert_mlp then falls back to replicated on those tensors
+        "expert": model if parallel.ep else None,
+        # FSDP/ZeRO: shard the d_model dim of weights over (a suffix of) the
+        # data axes; GSPMD inserts the pre-use all-gathers
+        "embed": fsdp,
+        "embed2": None,
+        # never sharded
+        "q_lora": None,
+        "kv_lora": None,
+        "rope": None,
+        "conv": None,
+        "norm": None,
+        "layers": None,
+    }
+
+
+def _axis_size(mesh_sizes: dict, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh_sizes[a] for a in axis)
+    return mesh_sizes[axis]
+
+
+def _flat_axes(axis) -> tuple:
+    if axis is None:
+        return ()
+    if isinstance(axis, (tuple, list)):
+        return tuple(axis)
+    return (axis,)
+
+
+def _resolve_dims(shape: tuple, logical: tuple, rules: dict,
+                  mesh_sizes: dict) -> PartitionSpec:
+    """Per-dim mesh assignment with divisibility + at-most-once enforcement."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, logical):
+        cand = rules.get(ax) if ax is not None else None
+        flat = _flat_axes(cand)
+        if (cand is None
+                or any(a in used or a not in mesh_sizes for a in flat)
+                or dim % _axis_size(mesh_sizes, cand) != 0):
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(tuple(cand) if isinstance(cand, (tuple, list)) else cand)
+    return PartitionSpec(*out)
+
+
+def param_pspecs(cfg: ModelConfig, parallel: ParallelConfig,
+                 mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``transformer.model_param_tree``."""
+    rules = axis_rules(parallel)
+    mesh_sizes = dict(mesh.shape)
+    def f(p: P, path):
+        return _resolve_dims(p.shape, p.axes, rules, mesh_sizes)
+    return _map_with_path(model_param_tree(cfg), f)
+
+
+def shardings(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# ---------------------------------------------------------------------------
+# Batch (input) specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 parallel: ParallelConfig, mesh: Mesh) -> dict:
+    """PartitionSpecs matching ``transformer.input_specs(cfg, shape)``."""
+    da = data_axis_names(parallel)
+    mesh_sizes = dict(mesh.shape)
+    dsize = math.prod(mesh_sizes[a] for a in da)
+    B = shape.global_batch
+    batch_ax = da if B % dsize == 0 else None
+    # SP (opt-in): shard the sequence dim over the model axis; GSPMD keeps
+    # pointwise ops sequence-local and gathers only around attention.
+    seq_ax = None
+    if parallel.sp and shape.kind in ("train", "prefill"):
+        if shape.seq_len % mesh_sizes[parallel.model_axis] == 0:
+            seq_ax = parallel.model_axis
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": PartitionSpec(batch_ax, seq_ax),
+            "labels": PartitionSpec(batch_ax, seq_ax),
+            "mask": PartitionSpec(batch_ax, seq_ax),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = PartitionSpec(batch_ax, None, None)
+        if cfg.family == "vlm":
+            specs["patches"] = PartitionSpec(batch_ax, None, None)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": PartitionSpec(batch_ax, seq_ax)}
+        if cfg.family == "encdec":
+            specs["frames"] = PartitionSpec(batch_ax, None, None)
+        if cfg.family == "vlm":
+            specs["patches"] = PartitionSpec(batch_ax, None, None)
+        return specs
+    # decode
+    return {
+        "tokens": PartitionSpec(batch_ax, None),
+        "index": PartitionSpec(),
+        "caches": cache_pspecs(cfg, shape, parallel, mesh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+# Role vocabulary: batch | seq | kv_heads | heads | lru | dmodel | none
+
+
+def _attn_cache_roles(cfg: ModelConfig, cross: bool) -> dict:
+    if cfg.attention == "mla":
+        roles = {"c": ("batch", "seq", None),
+                 "k_rope": ("batch", "seq", None),
+                 "pos": ("batch", "seq")}
+    else:
+        roles = {"k": ("batch", "seq", "kv_heads", None),
+                 "v": ("batch", "seq", "kv_heads", None),
+                 "pos": ("batch", "seq")}
+    if cross:
+        roles["cross_k"] = ("batch", None, "kv_heads", None)
+        roles["cross_v"] = ("batch", None, "kv_heads", None)
+    return roles
+
+
+def _block_cache_roles(cfg: ModelConfig, kind: str, cross: bool) -> dict:
+    if kind == ATTN:
+        return _attn_cache_roles(cfg, cross)
+    if kind == RGLRU:
+        return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+    if kind == MLSTM:
+        return {"C": ("batch", "heads", None, None),
+                "n": ("batch", "heads", None),
+                "m": ("batch", "heads")}
+    if kind == SLSTM:
+        return {"c": ("batch", "dmodel"), "n": ("batch", "dmodel"),
+                "h": ("batch", "dmodel"), "m": ("batch", "dmodel")}
+    raise ValueError(kind)
+
+
+def cache_roles(cfg: ModelConfig) -> list:
+    """Role tree mirroring ``transformer.cache_shapes`` (incl. scan stacking)."""
+    cross = cfg.family == "encdec"
+    segs = []
+    for sig, repeats in plan_layers(cfg):
+        period = {f"b{j}": _block_cache_roles(cfg, kind, cross)
+                  for j, (kind, _) in enumerate(sig)}
+        if repeats > 1:
+            period = jax.tree.map(lambda r: (None,) + r, period,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        segs.append(period)
+    return segs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 parallel: ParallelConfig, mesh: Mesh) -> list:
+    from repro.models.transformer import cache_shapes
+    mesh_sizes = dict(mesh.shape)
+    da = data_axis_names(parallel)
+    dsize = math.prod(mesh_sizes[a] for a in da)
+    model = parallel.model_axis
+    msize = mesh_sizes[model]
+    B = shape.global_batch
+    batch_shardable = B % dsize == 0
+
+    shapes = cache_shapes(cfg, B, shape.seq_len)
+    roles = cache_roles(cfg)
+
+    def _axes_size(axes) -> int:
+        return math.prod(mesh_sizes[a] for a in axes)
+
+    def resolve(sds: jax.ShapeDtypeStruct, role: tuple) -> PartitionSpec:
+        used: set = set()
+        out = []
+        # first pass: which axes can heads claim?  (heads get priority over
+        # seq only when they divide; most GQA kv-head counts don't divide a
+        # 16-way model axis, in which case the cache *sequence* dim takes the
+        # model axis — the flash-decode layout)
+        heads_take_model = any(
+            r in ("kv_heads", "heads", "lru", "dmodel")
+            and dim % msize == 0
+            for dim, r in zip(sds.shape, role))
+        for dim, r in zip(sds.shape, role):
+            if r == "batch":
+                if batch_shardable and dim % dsize == 0:
+                    out.append(da)
+                    used.update(da)
+                else:
+                    out.append(None)
+            elif r == "seq":
+                # seq-parallel cache: soak up every axis the batch/heads
+                # left idle (long_500k B=1 -> data+model; decode_32k with
+                # non-divisible kv heads -> model)
+                options = []
+                free_da = tuple(a for a in da if a not in used)
+                m = () if (heads_take_model or model in used) else (model,)
+                options = [free_da + m, free_da, m]
+                picked = None
+                for opt in options:
+                    if opt and dim % _axes_size(opt) == 0:
+                        picked = opt
+                        break
+                if picked:
+                    out.append(picked if len(picked) > 1 else picked[0])
+                    used.update(picked)
+                else:
+                    out.append(None)
+            elif r in ("kv_heads", "heads", "lru", "dmodel"):
+                if dim % msize == 0 and model not in used:
+                    out.append(model)
+                    used.add(model)
+                else:
+                    out.append(None)
+            else:
+                out.append(None)
+        return PartitionSpec(*out)
+
+    # roles tuples align with the shapes tree's leaves via flatten_up_to
+    return jax.tree.map(resolve, shapes, roles)

@@ -1,0 +1,4 @@
+"""Training substrate: sharded AdamW, train step builder, checkpointing."""
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.train.train_step import make_train_step  # noqa: F401
+from repro.train import checkpoint  # noqa: F401

@@ -1,0 +1,120 @@
+"""Train step builder: CE loss, grad accumulation, remat, compression.
+
+``make_train_step`` assembles the jit'd step for one (arch, parallel)
+choice:
+
+  - loss = ``transformer.lm_loss`` (CE + MoE aux) under the configured
+    remat policy,
+  - gradient accumulation: ``lax.scan`` over ``grad_accum`` microbatches
+    sliced from the global batch (sharding propagates through the slices),
+  - optional int8 cross-pod gradient compression: the loss/grad computation
+    runs inside ``shard_map`` over the ``pod`` axis (data/model axes stay
+    GSPMD-auto), so the pod-axis all-reduce is the explicit int8 psum of
+    ``repro.sharding.collectives`` instead of XLA's bf16 one,
+  - AdamW update fused into the same program.
+
+Returned step signature: ``step(params, opt_state, batch) ->
+(params, opt_state, metrics)``; callers jit it with the sharding trees from
+``repro.sharding.rules`` (see ``repro.launch.train``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models.attention import RunOpts
+from repro.models.transformer import lm_loss
+from repro.sharding.collectives import int8_psum
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def _microbatch(batch: dict, i: jax.Array, accum: int) -> dict:
+    def slc(x):
+        mb = x.shape[0] // accum
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(slc, batch)
+
+
+def make_loss_and_grad(cfg: ModelConfig, parallel: ParallelConfig,
+                       opts: Optional[RunOpts] = None) -> Callable:
+    opts = opts or RunOpts(use_kernels=parallel.use_kernels,
+                           remat=parallel.remat,
+                           block_kv=parallel.block_kv,
+                           unroll_scan=cfg.unroll_layers)
+
+    def loss_fn(params, batch):
+        loss, aux = lm_loss(cfg, params, batch, opts=opts)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accum_grads(params, batch):
+        accum = parallel.grad_accum
+        if accum <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+
+        def body(carry, i):
+            loss_acc, grads_acc = carry
+            (loss, _aux), grads = grad_fn(params,
+                                          _microbatch(batch, i, accum))
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros),
+            jnp.arange(accum))
+        inv = 1.0 / accum
+        grads = jax.tree.map(lambda g: g * inv, grads_sum)
+        return loss_sum * inv, {}, grads
+
+    return accum_grads
+
+
+def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
+                    opt_cfg: AdamWConfig,
+                    mesh: Optional[Mesh] = None,
+                    opts: Optional[RunOpts] = None) -> Callable:
+    accum_grads = make_loss_and_grad(cfg, parallel, opts=opts)
+
+    def step(params, opt_state, batch):
+        loss, _aux, grads = accum_grads(params, batch)
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, grads, params, opt_state)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_state, metrics
+
+    if not parallel.compress_grads or mesh is None \
+            or "pod" not in mesh.shape:
+        return step
+
+    # ---- int8 cross-pod gradient compression variant ----
+    from jax.experimental.shard_map import shard_map
+
+    def compressed_step(params, opt_state, batch):
+        def per_pod(params, batch):
+            loss, _aux, grads = accum_grads(params, batch)
+            # within-pod reduction was done by GSPMD over the auto axes;
+            # the slow cross-pod hop goes int8
+            grads = jax.tree.map(lambda g: int8_psum(g, "pod"), grads)
+            loss = jax.lax.pmean(loss, "pod")
+            return loss, grads
+
+        auto = frozenset(a for a in mesh.axis_names if a != "pod")
+        loss, grads = shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(PartitionSpec(), PartitionSpec("pod")),
+            out_specs=(PartitionSpec(), PartitionSpec()),
+            check_rep=False, auto=auto)(params, batch)
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, grads, params, opt_state)
+        return new_params, new_state, {"loss": loss, **opt_metrics}
+
+    return compressed_step

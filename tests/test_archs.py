@@ -1,0 +1,175 @@
+"""Per-arch smoke tests: reduced same-family configs, fwd/train/decode on CPU.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); these instantiate small models of the same family and assert
+output shapes + finite values + decode/prefill agreement.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_arch, list_archs
+from repro.configs import ASSIGNED
+from repro.models import transformer as T
+
+RNG = jax.random.key(0)
+
+
+def _extras(cfg, B, dtype=jnp.float32):
+    e = {}
+    if cfg.family == "encdec":
+        e["frames"] = jax.random.normal(jax.random.key(9),
+                                        (B, cfg.encoder_seq, cfg.d_model),
+                                        dtype)
+    if cfg.family == "vlm":
+        e["patches"] = jax.random.normal(jax.random.key(9),
+                                         (B, cfg.num_patches, cfg.d_model),
+                                         dtype)
+    return e
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_assigned_configs_registered(arch):
+    cfg = get_arch(arch)
+    assert cfg.num_layers > 0 and cfg.vocab_size > 0
+    total, active = cfg.param_counts()
+    assert 0 < active <= total
+
+
+def test_param_counts_sane():
+    """Total params near each arch's nominal size.
+
+    xlstm runs heavy (1.5x): our mLSTM uses full inner x inner q/k/v
+    projections where the official xLSTM uses block-diagonal (per-head)
+    ones — a documented family-level deviation (DESIGN.md), so the bound
+    is 1.6x there.
+    """
+    nominal = {
+        "starcoder2-7b": 7e9, "starcoder2-3b": 3e9, "qwen1.5-32b": 32e9,
+        "command-r-plus-104b": 104e9, "deepseek-v2-236b": 236e9,
+        "xlstm-350m": 350e6, "recurrentgemma-9b": 9e9,
+        "granite-moe-1b-a400m": 1.3e9, "internvl2-2b": 2e9,
+    }
+    for arch, want in nominal.items():
+        total, _ = get_arch(arch).param_counts()
+        hi = 1.6 if arch == "xlstm-350m" else 1.45
+        assert 0.6 * want < total < hi * want, \
+            f"{arch}: {total:.2e} vs nominal {want:.2e}"
+
+
+def test_moe_active_params():
+    cfg = get_arch("deepseek-v2-236b")
+    total, active = cfg.param_counts()
+    assert active < 0.15 * total          # ~21B active of 236B
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_smoke(arch):
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, RNG)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits, _, aux = T.forward(cfg, params, tokens, extras=_extras(cfg, B))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    from repro.config import ParallelConfig
+    from repro.train import AdamWConfig, init_opt_state, make_train_step
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, RNG)
+    B, S = 2, 12
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                     cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    batch.update(_extras(cfg, B))
+    step = jax.jit(make_train_step(cfg, ParallelConfig(grad_accum=2),
+                                   AdamWConfig(lr=1e-3, warmup_steps=1)))
+    p2, s2, metrics = step(params, init_opt_state(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode_consistency(arch):
+    """(prefill -> decode_step) must match the full forward over the growing
+    sequence.  Compared on LOGITS (not argmax): the MLA absorbed-decode path
+    is a mathematically equal but differently-ordered computation, so
+    near-ties can flip argmax on a random model; both paths feed the same
+    reference continuation."""
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, RNG)
+    B, S = 1, 10
+    tokens = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+    extras = _extras(cfg, B)
+    cap = S + 8
+    # MoE archs: GShard capacity semantics make per-position outputs depend
+    # on how many tokens COMPETE for each expert — a decode token never
+    # drops, while the same position inside a longer prefill can.  That is
+    # inherent to capacity-based routing, so the MoE bound is loose.
+    tol = dict(rtol=0.35, atol=0.35) if cfg.moe.enabled \
+        else dict(rtol=2e-2, atol=2e-2)
+
+    last, caches = T.prefill(cfg, params, tokens, extras=extras or None,
+                             cache_capacity=cap)
+    seq = [int(x) for x in np.asarray(tokens[0])]
+    dec_logits = [np.asarray(last[0, -1], np.float32)]
+    for i in range(4):
+        ref_logits, _, _ = T.forward(cfg, params,
+                                     jnp.asarray(seq, jnp.int32)[None, :],
+                                     extras=extras or None)
+        ref = np.asarray(ref_logits[0, -1], np.float32)
+        np.testing.assert_allclose(
+            dec_logits[-1], ref,
+            err_msg=f"{arch}: decode logits diverge at step {i}", **tol)
+        nxt = int(np.argmax(ref))
+        seq.append(nxt)
+        logits, caches = T.decode_step(
+            cfg, params, caches, jnp.asarray([[nxt]], jnp.int32),
+            jnp.asarray(S + i, jnp.int32))
+        dec_logits.append(np.asarray(logits[0, -1], np.float32))
+
+
+def test_sliding_window_limits_attention():
+    """starcoder2 family: a token outside the last position's RECEPTIVE
+    FIELD (num_layers x window — windows compose across layers) must not
+    influence its logits."""
+    cfg = get_arch("starcoder2-3b").reduced()
+    assert cfg.window and cfg.attention == "sliding"
+    params = T.init_params(cfg, RNG)
+    S = cfg.num_layers * cfg.window + 2
+    t1 = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab_size)  # outside RF
+    l1, _, _ = T.forward(cfg, params, t1)
+    l2, _, _ = T.forward(cfg, params, t2)
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-5, atol=1e-6)
+    # and a token INSIDE the window must influence
+    t3 = t1.at[0, S - 2].set((t1[0, S - 2] + 1) % cfg.vocab_size)
+    l3, _, _ = T.forward(cfg, params, t3)
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l3[0, -1]),
+                           rtol=1e-5, atol=1e-6)
+
+
+def test_long_500k_skip_rules():
+    from repro.config import SHAPES, cell_skip_reason
+    runs = {a: cell_skip_reason(get_arch(a), SHAPES["long_500k"]) is None
+            for a in ASSIGNED}
+    assert runs["xlstm-350m"] and runs["recurrentgemma-9b"]
+    assert runs["starcoder2-3b"] and runs["starcoder2-7b"]
+    for full in ("qwen1.5-32b", "command-r-plus-104b", "deepseek-v2-236b",
+                 "granite-moe-1b-a400m", "internvl2-2b", "whisper-base"):
+        assert not runs[full], full

@@ -1,0 +1,62 @@
+"""Data pipeline: determinism, learnability signal, prefetch."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data import DashCamSource, lm_batches, synth_frames
+from repro.data.prefetch import device_prefetch
+
+
+def test_synth_frames_deterministic_and_bounded():
+    a = synth_frames(5, 12, 64)
+    b = synth_frames(5, 12, 64)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (12, 64, 64, 3)
+    assert a.min() >= 0.0 and a.max() <= 1.0
+
+
+def test_dashcam_source_pairs():
+    src = DashCamSource(granularity_s=1.0, fps=10, res=32, seed=1)
+    pairs = list(src.stream(3))
+    assert len(pairs) == 3
+    assert all(p.outer.shape == (10, 32, 32, 3) for p in pairs)
+    # same index -> same data (segments must agree across devices)
+    again = src.pair(1)
+    np.testing.assert_array_equal(pairs[1].outer, again.outer)
+    assert not np.array_equal(pairs[0].outer, pairs[1].outer)
+
+
+def test_lm_batches_shapes_and_shift():
+    b = next(lm_batches(4, 16, 97, steps=1))
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert b["tokens"].max() < 97 and b["tokens"].min() >= 0
+    # labels are the next token of the same underlying stream
+    b2 = next(lm_batches(4, 16, 97, steps=1))
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])  # seeded
+
+
+def test_lm_batches_have_learnable_structure():
+    """The bigram rule makes conditional entropy << log(vocab)."""
+    vocab = 64
+    b = next(lm_batches(64, 64, vocab, steps=1))
+    toks, labs = b["tokens"], b["labels"]
+    hits = 0
+    total = 0
+    for r in range(toks.shape[0]):
+        det = (toks[r] * 31) % vocab  # shift unknown; measure best alignment
+        total += toks.shape[1]
+    # direct check: given token t, the mode of next-token dist is deterministic
+    from collections import Counter, defaultdict
+    nxt = defaultdict(Counter)
+    for r in range(toks.shape[0]):
+        for c in range(toks.shape[1]):
+            nxt[int(toks[r, c])][int(labs[r, c])] += 1
+    mode_mass = sum(c.most_common(1)[0][1] for c in nxt.values())
+    all_mass = sum(sum(c.values()) for c in nxt.values())
+    assert mode_mass / all_mass > 0.6     # rule fires 75% of the time
+
+
+def test_device_prefetch_roundtrip():
+    batches = lm_batches(2, 8, 17, steps=4)
+    out = list(device_prefetch(batches))
+    assert len(out) == 4
+    assert all(isinstance(b["tokens"], jnp.ndarray) for b in out)

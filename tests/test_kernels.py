@@ -1,0 +1,199 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracles.
+
+Every kernel is exercised across GQA group sizes, odd (padding-forcing)
+shapes, windows, and dtypes; tolerances are fp32-tight and bf16-loose.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def t(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill/train)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 16, 4, 4, 32),       # MHA
+    (2, 37, 8, 2, 64),       # GQA, odd seq (padding)
+    (1, 130, 6, 1, 128),     # MQA, > one block
+    (2, 64, 12, 4, 48),      # odd head dim (padding)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, Hq, Hkv, D, dtype):
+    q, k, v = t(B, S, Hq, D, dtype=dtype), t(B, S, Hkv, D, dtype=dtype), \
+        t(B, S, Hkv, D, dtype=dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    got = ops.flash_attention(q, k, v, pos, pos, causal=True, interpret=True,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 7, 64])
+def test_flash_attention_sliding_window(window):
+    B, S, H, D = 2, 100, 4, 32
+    q, k, v = t(B, S, H, D), t(B, S, H, D), t(B, S, H, D)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    got = ops.flash_attention(q, k, v, pos, pos, causal=True, window=window,
+                              interpret=True, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, pos, pos, causal=True,
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal_cross():
+    B, S, C, H, D = 2, 9, 33, 4, 32
+    q = t(B, S, H, D)
+    k, v = t(B, C, H, D), t(B, C, H, D)
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    kv_pos = jnp.zeros((B, C), jnp.int32)
+    got = ops.flash_attention(q, k, v, q_pos, kv_pos, causal=False,
+                              interpret=True, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, q_pos, kv_pos, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_respects_invalid_slots():
+    """kv entries with pos = -1 (empty ring slots) must not contribute."""
+    B, S, H, D = 1, 8, 2, 32
+    C = 24
+    q = t(B, S, H, D)
+    k, v = t(B, C, H, D), t(B, C, H, D)
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32) + 8, (B, S))
+    valid = 12
+    kv_pos = jnp.where(jnp.arange(C) < valid, jnp.arange(C), -1)[None, :]
+    kv_pos = jnp.broadcast_to(kv_pos.astype(jnp.int32), (B, C))
+    got = ops.flash_attention(q, k, v, q_pos, kv_pos, causal=True,
+                              interpret=True, block_q=8, block_k=8)
+    # corrupting the invalid slots must not change the output
+    k2 = k.at[:, valid:].set(999.0)
+    v2 = v.at[:, valid:].set(-999.0)
+    got2 = ops.flash_attention(q, k2, v2, q_pos, kv_pos, causal=True,
+                               interpret=True, block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2))
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,C", [
+    (1, 4, 4, 32, 40),
+    (3, 8, 2, 64, 129),      # GQA + odd cache len
+    (2, 16, 1, 128, 512),    # MQA big cache
+])
+def test_decode_attention(B, Hq, Hkv, D, C):
+    q = t(B, 1, Hq, D)
+    k, v = t(B, C, Hkv, D), t(B, C, Hkv, D)
+    filled = C - 5
+    kv_pos = jnp.where(jnp.arange(C) < filled, jnp.arange(C), -1)[None, :]
+    kv_pos = jnp.broadcast_to(kv_pos.astype(jnp.int32), (B, C))
+    q_pos = jnp.full((B, 1), filled - 1, jnp.int32)
+    got = ops.decode_attention(q, k, v, q_pos, kv_pos, interpret=True,
+                               block_k=64)
+    want = ref.decode_attention_ref(q, k, v, q_pos, kv_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_prefill_kernel():
+    """ops.flash_attention routes S==1 causal to the decode kernel; both
+    kernels must agree with each other."""
+    B, Hq, Hkv, D, C = 2, 8, 4, 64, 96
+    q = t(B, 1, Hq, D)
+    k, v = t(B, C, Hkv, D), t(B, C, Hkv, D)
+    kv_pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    q_pos = jnp.full((B, 1), C - 1, jnp.int32)
+    via_fa = ops.flash_attention(q, k, v, q_pos, kv_pos, causal=True,
+                                 interpret=True)
+    direct = ops.decode_attention(q, k, v, q_pos, kv_pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_fa), np.asarray(direct))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,W", [(1, 8, 16), (2, 77, 96), (3, 256, 300)])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rglru_scan(B, S, W, with_h0):
+    a = jnp.asarray(RNG.uniform(0.2, 0.999, (B, S, W)), jnp.float32)
+    b = t(B, S, W)
+    h0 = t(B, W) if with_h0 else None
+    got = ops.rglru_scan(a, b, h0, interpret=True, block_s=32, block_w=128)
+    want = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_blocked_carry_exact():
+    """Carry across time blocks must be exact: one long scan == two halves."""
+    B, S, W = 1, 64, 128
+    a = jnp.asarray(RNG.uniform(0.5, 0.99, (B, S, W)), jnp.float32)
+    b = t(B, S, W)
+    full = ops.rglru_scan(a, b, None, interpret=True, block_s=16)
+    h_mid = full[:, S // 2 - 1]
+    second = ops.rglru_scan(a[:, S // 2:], b[:, S // 2:], h_mid,
+                            interpret=True, block_s=16)
+    np.testing.assert_allclose(np.asarray(full[:, S // 2:]),
+                               np.asarray(second), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,Dh,chunk", [
+    (1, 16, 2, 16, 8),
+    (2, 40, 2, 32, 16),      # S not a multiple of chunk
+    (1, 128, 4, 64, 32),
+])
+def test_mlstm_chunkwise(B, S, H, Dh, chunk):
+    q, k, v = t(B, S, H, Dh), t(B, S, H, Dh), t(B, S, H, Dh)
+    ig, fg = t(B, S, H), t(B, S, H, scale=1.0) + 2.0
+    got = ops.mlstm_chunkwise(q, k, v, ig, fg, interpret=True, chunk=chunk)
+    want = ref.mlstm_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_mlstm_chunkwise_matches_recurrent_step():
+    """Chunkwise kernel must agree with the sequential mlstm_step form."""
+    from repro.models.ssm import mlstm_step, init_mlstm_state
+    from repro.config import get_arch
+    B, S, H, Dh = 1, 24, 2, 16
+    q, k, v = t(B, S, H, Dh), t(B, S, H, Dh), t(B, S, H, Dh)
+    ig, fg = t(B, S, H), t(B, S, H) + 2.0
+    got = ops.mlstm_chunkwise(q, k, v, ig, fg, interpret=True, chunk=8)
+    # note: mlstm_step scales q internally; kernel does the same
+    state = {"C": jnp.zeros((B, H, Dh, Dh)), "n": jnp.zeros((B, H, Dh)),
+             "m": jnp.full((B, H), -1e30)}
+    outs = []
+    for tstep in range(S):
+        h, state = mlstm_step(q[:, tstep], k[:, tstep], v[:, tstep],
+                              ig[:, tstep], fg[:, tstep], state)
+        outs.append(h)
+    want = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,96 @@
+"""Paper workloads (detector/pose) + flag-logic unit tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.eda_vision import detector_config, pose_config
+from repro.models import vision as V
+
+
+@pytest.fixture(scope="module")
+def models():
+    rng = jax.random.key(0)
+    dc, pc = detector_config(96), pose_config(96)
+    return dc, V.init_detector(dc, rng), pc, V.init_pose(pc, rng)
+
+
+def test_outer_pipeline_shapes(models):
+    dc, dp, _, _ = models
+    frames = jax.random.uniform(jax.random.key(1), (3, 128, 128, 3))
+    flags, det = V.analyse_outer(dc, dp, frames)
+    n = (dc.input_res // 16) ** 2 * dc.num_anchors
+    assert flags.shape == (3, n) and flags.dtype == jnp.bool_
+    assert det["score"].shape == (3, n)
+    assert bool(jnp.isfinite(det["score"]).all())
+    assert bool((det["score"] >= 0).all() and (det["score"] <= 1).all())
+
+
+def test_inner_pipeline_shapes(models):
+    _, _, pc, pp = models
+    frames = jax.random.uniform(jax.random.key(2), (2, 64, 64, 3))
+    distracted, kp = V.analyse_inner(pc, pp, frames)
+    assert distracted.shape == (2,)
+    assert kp["y"].shape == (2, pc.num_keypoints)
+    assert bool((kp["y"] >= 0).all() and (kp["y"] <= 1).all())
+
+
+def test_hazard_flag_logic():
+    det = {
+        "cls": jnp.asarray([[5, 2, 5, 2]]),            # person-ish, car, ...
+        "score": jnp.asarray([[0.9, 0.9, 0.9, 0.9]]),
+        "keep": jnp.asarray([[True, True, True, False]]),
+        "cy": jnp.asarray([[0.8, 0.3, 0.2, 0.8]]),
+        "cx": jnp.asarray([[0.5, 0.5, 0.5, 0.5]]),
+        "h": jnp.asarray([[0.1, 0.1, 0.1, 0.9]]),
+        "w": jnp.asarray([[0.1, 0.1, 0.1, 0.9]]),
+    }
+    flags = V.flag_hazards(det)
+    # [0]: non-vehicle on road -> hazard; [1]: small vehicle off road -> no;
+    # [2]: non-vehicle off-road -> no; [3]: huge vehicle but keep=False -> no
+    assert flags.tolist() == [[True, False, False, False]]
+
+
+def test_tailgate_flag():
+    det = {
+        "cls": jnp.asarray([[2]]), "score": jnp.asarray([[0.9]]),
+        "keep": jnp.asarray([[True]]),
+        "cy": jnp.asarray([[0.7]]), "cx": jnp.asarray([[0.5]]),
+        "h": jnp.asarray([[0.6]]), "w": jnp.asarray([[0.5]]),
+    }
+    assert V.flag_hazards(det).tolist() == [[True]]    # area 0.3 > 0.18
+
+
+def test_distraction_flag_logic():
+    K = 17
+    base_y = jnp.full((1, K), 0.6)
+    base_score = jnp.full((1, K), 0.9)
+    kp = {"y": base_y, "x": jnp.full((1, K), 0.5), "score": base_score}
+    assert not bool(V.flag_distraction(kp)[0])
+
+    # hand raised to ear (above 3/4 frame height)
+    kp_hand = dict(kp, y=base_y.at[0, V.KP_LEFT_WRIST].set(0.1))
+    assert bool(V.flag_distraction(kp_hand)[0])
+
+    # eyes below ears (glance down)
+    y2 = base_y.at[0, V.KP_LEFT_EYE].set(0.55).at[0, V.KP_RIGHT_EYE].set(0.55)
+    y2 = y2.at[0, V.KP_LEFT_EAR].set(0.45).at[0, V.KP_RIGHT_EAR].set(0.45)
+    assert bool(V.flag_distraction(dict(kp, y=y2))[0])
+
+    # same posture but low-confidence eyes -> not flagged
+    sc = base_score.at[0, V.KP_LEFT_EYE].set(0.1)
+    assert not bool(V.flag_distraction(dict(kp, y=y2, score=sc))[0])
+
+
+def test_downscale_matches_paper_behaviour():
+    frames = jnp.arange(2 * 64 * 64 * 3, dtype=jnp.float32).reshape(2, 64, 64, 3)
+    small = V.downscale(frames, 16)
+    assert small.shape == (2, 16, 16, 3)
+    # nearest-neighbour: values are a subset of the original
+    assert bool(jnp.isin(small[0, 0, 0, 0], frames).all())
+
+
+def test_flops_counts_positive_and_scale_with_res():
+    d1, d2 = detector_config(96), detector_config(192)
+    assert V.model_flops(d2) > 3 * V.model_flops(d1)
+    assert V.model_flops(pose_config(96)) > 0
