@@ -1,0 +1,129 @@
+"""Fleet bench: frames/s vs slots x streams x motion gating.
+
+Three measurements, all on the synthetic dash-cam clips:
+
+  1. cross-stream batching — the same 8-stream workload through engines
+     with 1/2/8 slots (gate off): slot-batched inference amortises dispatch
+     and fills the accelerator, the acceptance bar is >=2x frames/s for
+     slots=8 over slots=1;
+  2. stream scaling — frames/s as concurrent streams grow at fixed slots;
+  3. motion gating — a 3x-duplicated frame workload (a 30 fps cam over a
+     10 fps scene) with the gate on vs off: gated near-duplicates never
+     reach a batch slot, whole ticks with no admitted frame skip dispatch
+     entirely, and the skip shows up as ledger skip-rate.
+
+CPU wall-clock on tiny models: relative numbers are the deliverable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data import DashCamSource
+from repro.streams import OUTER, VisionServeEngine
+
+RES, INPUT_RES, FPS = 64, 32, 30
+
+
+def _clips(n_streams: int, frames: int, repeat: int = 1) -> list:
+    src = DashCamSource(granularity_s=frames / FPS, fps=FPS, res=RES, seed=5)
+    clips = []
+    for i in range(n_streams):
+        outer = src.pair(i).outer
+        clips.append(np.repeat(outer, repeat, axis=0)[:frames])
+    return clips
+
+
+def _one_drain(slots: int, clips: list, use_gate: bool):
+    eng = VisionServeEngine("bench", slots=slots, frame_res=RES,
+                            input_res=INPUT_RES, fps=FPS,
+                            use_gate=use_gate, rng=jax.random.key(0))
+    for i, clip in enumerate(clips):
+        eng.open_stream(f"s{i:02d}", OUTER)
+        for f in clip:
+            eng.push(f"s{i:02d}", f)
+    t0 = time.perf_counter()
+    done = eng.drain()
+    wall = time.perf_counter() - t0
+    for i in range(len(clips)):
+        eng.close_stream(f"s{i:02d}")
+    return done, wall, eng
+
+
+def _run(slots: int, clips: list, use_gate: bool, repeats: int = 3):
+    """Best-of-N drains (first is a compile warm-up and is discarded):
+    the container CPU is noisy, min-wall is the standard stable estimator."""
+    _one_drain(slots, clips, use_gate)            # warm compile caches
+    best = None
+    for _ in range(repeats):
+        done, wall, eng = _one_drain(slots, clips, use_gate)
+        if best is None or wall < best[1]:
+            best = (done, wall, eng)
+    return best
+
+
+def batching_scaling(rows):
+    print("\n== cross-stream batching: frames/s vs slots (8 streams) ==")
+    clips = _clips(8, 48)
+    offered = sum(len(c) for c in clips)
+    fps_by_slots = {}
+    for slots in (1, 2, 8):
+        done, wall, eng = _run(slots, clips, use_gate=False)
+        fps = offered / wall
+        fps_by_slots[slots] = fps
+        s = eng.stats()
+        print(f"slots={slots}: {fps:8.1f} frames/s "
+              f"({done}/{offered} processed, {wall * 1000:.0f} ms, "
+              f"{s['frame_cost_ms']:.2f} ms/frame amortised, "
+              f"{s['tick_cost_ms']:.2f} ms/tick)")
+        rows.append((f"fleet_slots{slots}", 1e6 * wall / offered,
+                     "us_per_frame"))
+    speedup = fps_by_slots[8] / fps_by_slots[1]
+    print(f"batching speedup (slots=8 vs slots=1): {speedup:.2f}x")
+    rows.append(("fleet_batching_speedup", speedup, "x_vs_slots1"))
+
+
+def stream_scaling(rows):
+    print("\n== stream scaling at slots=8 ==")
+    for n in (2, 4, 8):
+        clips = _clips(n, 24)
+        offered = sum(len(c) for c in clips)
+        _, wall, _ = _run(8, clips, use_gate=False)
+        print(f"streams={n}: {offered / wall:8.1f} frames/s")
+        rows.append((f"fleet_streams{n}", offered / wall, "frames_per_s"))
+
+
+def gating_effect(rows):
+    print("\n== motion gating on a 3x-duplicated frame workload ==")
+    clips = _clips(8, 48, repeat=3)
+    offered = sum(len(c) for c in clips)
+    stats = {}
+    for use_gate in (False, True):
+        done, wall, eng = _run(8, clips, use_gate=use_gate)
+        ledger = eng.ledger
+        skip = 1 - done / offered
+        stats[use_gate] = (offered / wall, skip)
+        label = "gate on " if use_gate else "gate off"
+        print(f"{label}: {offered / wall:8.1f} offered-frames/s   "
+              f"inferred {done}/{offered}   skip {skip:5.1%}   "
+              f"mean turnaround {ledger.mean_turnaround_ms():.0f} ms")
+        if use_gate:
+            print(ledger.table())
+    speedup = stats[True][0] / stats[False][0]
+    print(f"gating speedup: {speedup:.2f}x   frames shed: {stats[True][1]:.1%}")
+    rows.append(("fleet_gate_skip_rate", stats[True][1], "skip_rate"))
+    rows.append(("fleet_gate_speedup", speedup, "x_vs_ungated"))
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    batching_scaling(rows)
+    stream_scaling(rows)
+    gating_effect(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import sys
 import time
 
 MODULES = ["turnaround", "energy", "esd_sweep", "kernel_micro",
-           "serving_bench", "roofline_report"]
+           "serving_bench", "fleet_bench", "roofline_report"]
 
 
 def main() -> None:

@@ -36,6 +36,7 @@ class DoubleBuffer:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._transform = transform
         self._err: Optional[BaseException] = None
+        self._done = False
         self._thread = threading.Thread(
             target=self._produce, args=(iter(source),), daemon=True)
         self._thread.start()
@@ -55,8 +56,15 @@ class DoubleBuffer:
         return self
 
     def __next__(self) -> T:
+        if self._done:
+            # iterator protocol: stay exhausted instead of blocking on the
+            # drained queue (the producer only enqueues the sentinel once)
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
         item = self._q.get()
         if item is _SENTINEL:
+            self._done = True
             if self._err is not None:
                 raise self._err
             raise StopIteration

@@ -1,0 +1,14 @@
+"""Fleet-scale vision streaming: batched multi-vehicle frame serving.
+
+  filter         motion-gated frame admission (block-SAD, adaptive per-stream
+                 thresholds) — redundant frames never reach a batch slot
+  vision_engine  continuous-batching frame server: slot = vehicle stream,
+                 fixed-shape per-model batches, outer pre-empts inner,
+                 ESD deadline drops accounted as skip rate
+  gateway        per-vehicle session lifecycle + CapacityScheduler placement
+                 across engine replicas + join backpressure
+"""
+from repro.streams.filter import GateStats, MotionGate, block_sad  # noqa: F401
+from repro.streams.gateway import FleetGateway, StreamSession  # noqa: F401
+from repro.streams.vision_engine import (  # noqa: F401
+    INNER, OUTER, StreamState, VisionServeEngine)

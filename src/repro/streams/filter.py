@@ -1,0 +1,186 @@
+"""Motion-gated frame admission (redundant-frame filtering).
+
+Dash-cam streams are massively redundant — a car waiting at a light sends
+near-identical frames for seconds.  The Edge Video Analytics survey
+(arXiv:2211.15751) names redundant-frame filtering as one of the two levers
+that make fleet-scale serving economical; this module is that lever for the
+``VisionServeEngine``: a vectorised block-SAD frame-difference gate, batched
+across *all* streams of an engine, that rejects near-duplicate frames before
+they ever occupy a batch slot.
+
+Design:
+
+  * :func:`block_sad` — the jit core.  Frames are compared against each
+    stream's last-admitted reference at a small gate resolution; the score
+    is the *maximum block* mean-absolute-difference, so a pedestrian
+    entering one corner of an otherwise static scene still trips the gate
+    (a full-frame mean would wash it out).
+  * :class:`MotionGate` — per-engine state: one reference frame and one
+    adaptive threshold per slot.  Everything device-side is fixed-shape
+    (``(slots, gate_res, gate_res, 3)``) with boolean masks, mirroring the
+    engine's never-recompile contract; reference updates use a masked
+    scatter so gated rows keep their old reference.
+  * Adaptive thresholds — per-stream AIMD on the observed skip fraction
+    (same controller idiom as ``core.early_stop.DynamicESD``), steering
+    every lane toward the ``target_skip`` band: a stream skipping above
+    ``target_skip[1]`` has its threshold multiplicatively decayed so it
+    admits more (bounded below by ``thresh_floor`` — a parked vehicle must
+    not end up admitting sensor noise), and a stream admitting nothing but
+    near-duplicates gets its threshold additively raised so it skips more.
+    The controller is per-stream, not global: each lane converges to the
+    sensitivity its own scene requires.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.early_stop import EWMA
+from repro.models.vision import downscale
+
+
+@partial(jax.jit, static_argnames=("block",))
+def block_sad(ref: jax.Array, frames: jax.Array, block: int = 8) -> jax.Array:
+    """Per-stream motion score: max block mean-absolute-difference.
+
+    ref/frames: (S, H, W, C) with H, W divisible by ``block``.
+    Returns (S,) float32 in [0, 1] for [0, 1]-ranged inputs.
+    """
+    S, H, W, _ = frames.shape
+    d = jnp.abs(frames - ref).mean(axis=-1)                    # (S, H, W)
+    blocks = d.reshape(S, H // block, block, W // block, block)
+    per_block = blocks.mean(axis=(2, 4))                       # (S, nb, nb)
+    return per_block.reshape(S, -1).max(axis=-1)
+
+
+@jax.jit
+def _gate_update(refs, small, admit):
+    """Masked reference scatter: admitted rows adopt the new frame."""
+    m = admit[:, None, None, None]
+    return jnp.where(m, small, refs)
+
+
+@dataclass
+class GateStats:
+    offered: int = 0
+    admitted: int = 0
+    gated: int = 0
+
+    @property
+    def skip_fraction(self) -> float:
+        return self.gated / self.offered if self.offered else 0.0
+
+
+class MotionGate:
+    """Batched near-duplicate filter for one engine's slot lanes."""
+
+    def __init__(self, slots: int, gate_res: int = 32, block: int = 8,
+                 init_thresh: float = 0.02,
+                 target_skip: Tuple[float, float] = (0.05, 0.7),
+                 step: float = 0.002, decay: float = 0.85,
+                 window: int = 16, alpha: float = 0.2,
+                 thresh_floor: float = 1e-3) -> None:
+        assert gate_res % block == 0, (gate_res, block)
+        self.slots = slots
+        self.gate_res = gate_res
+        self.block = block
+        self.target_skip = target_skip
+        self.step = step
+        self.decay = decay
+        self.window = window
+        self.thresh_floor = thresh_floor
+        self.init_thresh = init_thresh
+        self.refs = jnp.zeros((slots, gate_res, gate_res, 3), jnp.float32)
+        self.has_ref = np.zeros(slots, bool)
+        self.thresh = np.full(slots, init_thresh, np.float32)
+        self.skip_ewma = [EWMA(alpha=alpha) for _ in range(slots)]
+        self._since_adapt = np.zeros(slots, np.int64)
+        self.stats = GateStats()
+
+    def reset(self, slot: int, init_thresh: Optional[float] = None) -> None:
+        """Forget a lane's reference/threshold (stream churn re-uses lanes)."""
+        self.has_ref[slot] = False
+        self.thresh[slot] = (init_thresh if init_thresh is not None
+                             else self.init_thresh)
+        self.skip_ewma[slot] = EWMA(alpha=self.skip_ewma[slot].alpha)
+        self._since_adapt[slot] = 0
+
+    def save(self, slot: int) -> dict:
+        """Snapshot a lane's gate state so it can follow its *stream* — a
+        time-shared or preempted stream must keep its duplicate-detection
+        reference and adapted threshold across re-binds."""
+        return {"ref": self.refs[slot],
+                "has_ref": bool(self.has_ref[slot]),
+                "thresh": float(self.thresh[slot]),
+                "skip_ewma": self.skip_ewma[slot],
+                "since": int(self._since_adapt[slot])}
+
+    def restore(self, slot: int, state: Optional[dict] = None) -> None:
+        """Install a saved stream snapshot into a lane (None = fresh)."""
+        if state is None:
+            self.reset(slot)
+            return
+        self.refs = self.refs.at[slot].set(state["ref"])
+        self.has_ref[slot] = state["has_ref"]
+        self.thresh[slot] = state["thresh"]
+        self.skip_ewma[slot] = state["skip_ewma"]
+        self._since_adapt[slot] = state["since"]
+
+    def admit(self, frames: jax.Array, active: np.ndarray) -> np.ndarray:
+        """Gate one engine tick.
+
+        frames: (slots, H, W, 3) staged batch (inactive rows ignored);
+        active: (slots,) bool — lanes holding a fresh candidate frame.
+        Returns (slots,) bool admit mask (subset of ``active``) and updates
+        references, thresholds, and stats.
+        """
+        small = downscale(frames.astype(jnp.float32), self.gate_res)
+        scores = np.asarray(block_sad(self.refs, small, self.block))
+        moving = scores > self.thresh
+        # first frame of a stream always admits (no reference yet)
+        admit = active & (moving | ~self.has_ref)
+        self.refs = _gate_update(self.refs, small,
+                                 jnp.asarray(admit))
+        self.has_ref |= admit
+        self._adapt(active, admit)
+        n_act, n_adm = int(active.sum()), int(admit.sum())
+        self.stats.offered += n_act
+        self.stats.admitted += n_adm
+        self.stats.gated += n_act - n_adm
+        return admit
+
+    def _adapt(self, active: np.ndarray, admit: np.ndarray) -> None:
+        """AIMD threshold update on each lane's skip-fraction EWMA.
+
+        Adjustments fire at most once per ``window`` frames (the counter
+        resets after each correction) so the controller settles instead of
+        compounding every frame, and the threshold is floored: a parked
+        vehicle must not decay its threshold to zero and then admit every
+        sensor-noise frame once the scene resumes."""
+        lo, hi = self.target_skip
+        for s in np.nonzero(active)[0]:
+            skip = self.skip_ewma[s].update(0.0 if admit[s] else 1.0)
+            self._since_adapt[s] += 1
+            if self._since_adapt[s] < self.window:
+                continue
+            if skip > hi:
+                self.thresh[s] = max(self.thresh[s] * self.decay,
+                                     self.thresh_floor)
+                self._since_adapt[s] = 0
+            elif skip < lo:
+                self.thresh[s] += self.step           # admitting duplicates
+                self._since_adapt[s] = 0
+
+    def similar(self) -> "MotionGate":
+        """A fresh gate with this gate's configuration (new lane state)."""
+        return MotionGate(self.slots, gate_res=self.gate_res,
+                          block=self.block, init_thresh=self.init_thresh,
+                          target_skip=self.target_skip, step=self.step,
+                          decay=self.decay, window=self.window,
+                          alpha=self.skip_ewma[0].alpha,
+                          thresh_floor=self.thresh_floor)

@@ -1,0 +1,226 @@
+"""Fleet front door: per-vehicle session lifecycle over engine replicas.
+
+A vehicle joining the fleet opens an (outer, inner) stream pair — exactly
+the paper's paired-download protocol, scaled out.  The gateway:
+
+  * **places** the pair with the existing ``CapacityScheduler``: each
+    ``VisionServeEngine`` replica is a worker whose capacity EWMA is fed
+    from its measured frames/s, so the same decision tree that sharded
+    dash-cam segments onto heterogeneous phones now shards vehicle sessions
+    onto heterogeneous replicas (outer to the strongest, §3.2.5);
+  * **bounds admission** (backpressure): when every replica's lanes are
+    oversubscribed past ``overcommit``, joins are refused rather than
+    letting queues grow without bound — the caller retries after churn;
+  * **tracks churn**: ``leave`` closes both streams, flushes their
+    ``SegmentRecord`` into the shared ledger, and credits the scheduler's
+    capacity estimate with the session's measured throughput.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import (Assignment, CapacityScheduler,
+                                  HardwareInfo, WorkerState)
+from repro.core.segmentation import Segment
+from repro.core.telemetry import Ledger, SegmentRecord
+from repro.streams.vision_engine import INNER, OUTER, VisionServeEngine
+
+
+@dataclass
+class StreamSession:
+    """One directional stream of one vehicle, placed on one replica."""
+    vehicle: str
+    stream: str                       # outer | inner
+    engine: str                       # replica name
+    assignment: Assignment
+    joined_ms: float = 0.0
+    pushed: int = 0
+    shed: int = 0                     # frames dropped by backpressure
+
+    @property
+    def key(self) -> str:
+        return f"{self.vehicle}/{self.stream}"
+
+
+class _FleetScheduler(CapacityScheduler):
+    """CapacityScheduler with commit-between-picks pair placement.
+
+    The base N-worker branch calls ``_pick_worker`` twice with no state
+    change in between, so both picks of a pair always return the same
+    device — fine for the paper's short video jobs, wrong for long-lived
+    fleet sessions (the pair would never split and a 3+-replica fleet
+    leaves replicas idle).  A provisional queue bump between the picks
+    restores the strongest-takes-outer / next-takes-inner pairing.
+
+    The everyone-busy branch also considers the master replica: the paper
+    excludes the master there because it coordinates the phones, but an
+    engine replica named "master" is just the first replica — concentrating
+    all overcommitted sessions on the others would skew their latency."""
+
+    def _pick_worker(self, now_ms):
+        anyone_free = (self.master.free_at(now_ms)
+                       or any(w.free_at(now_ms) for w in self.workers))
+        if not anyone_free:
+            return max(self.devices,
+                       key=lambda w: (w.capacity(), -w.queue_len))
+        return super()._pick_worker(now_ms)
+
+    def schedule_pair(self, outer, inner, now_ms, **kw):
+        if len(self.workers) <= 1 or kw.get("segmentation"):
+            return super().schedule_pair(outer, inner, now_ms, **kw)
+        first = self._pick_worker(now_ms)
+        first.queue_len += 1                    # provisional, for pick 2
+        try:
+            second = self._pick_worker(now_ms)
+        finally:
+            first.queue_len -= 1
+        return [Assignment(outer, first.name),
+                Assignment(inner, second.name)]
+
+
+class FleetGateway:
+    """Join/leave churn + placement + backpressure for vehicle fleets."""
+
+    def __init__(self, replicas: Sequence[VisionServeEngine], *,
+                 deadline_ms: float = 0.0, overcommit: float = 1.5,
+                 ledger: Optional[Ledger] = None) -> None:
+        if not replicas:
+            raise ValueError("need at least one engine replica")
+        if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
+            # deadline trimming is the engines' ESD policy; a deadline with
+            # esd<=1 everywhere would silently never drop a frame
+            warnings.warn(
+                "FleetGateway deadline_ms is set but no replica has an "
+                "EarlyStopPolicy enabled (EDAConfig esd > 1): stale frames "
+                "will never be dropped", stacklevel=2)
+        self.replicas = list(replicas)
+        self.deadline_ms = deadline_ms
+        self.overcommit = overcommit
+        self.ledger = ledger if ledger is not None else Ledger()
+        for r in self.replicas:
+            r.ledger = self.ledger            # one fleet-wide ledger
+
+        # replica heterogeneity enters through the HW prior; measurement
+        # (frames/s per tick) refines it exactly like the phone handshake
+        states = [WorkerState(name=r.name,
+                              hw=HardwareInfo(cores=r.slots),
+                              is_master=(i == 0))
+                  for i, r in enumerate(self.replicas)]
+        self.sched = _FleetScheduler(states[0], states[1:],
+                                     outer_priority=True)
+        self._by_name: Dict[str, VisionServeEngine] = {
+            r.name: r for r in self.replicas}
+        self.sessions: Dict[str, Tuple[StreamSession, StreamSession]] = {}
+        self.refused = 0
+        self.closed: List[SegmentRecord] = []
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def capacity(self) -> int:
+        return sum(r.slots for r in self.replicas)
+
+    def active_streams(self) -> int:
+        return sum(r.session_count for r in self.replicas)
+
+    def join(self, vehicle: str, now_ms: float = 0.0,
+             deadline_ms: Optional[float] = None
+             ) -> Optional[Tuple[StreamSession, StreamSession]]:
+        """Open the vehicle's (outer, inner) pair.  Returns None when the
+        fleet is saturated (backpressure) — the vehicle should retry."""
+        if vehicle in self.sessions:
+            raise KeyError(f"vehicle {vehicle!r} already joined")
+        if self.active_streams() + 2 > self.capacity() * self.overcommit:
+            self.refused += 1
+            return None
+        self._sync_load(now_ms)
+
+        outer_seg = Segment(video_id=vehicle, index=0, num_segments=1,
+                            frame_start=0, frame_count=0, stream=OUTER)
+        inner_seg = Segment(video_id=vehicle, index=0, num_segments=1,
+                            frame_start=0, frame_count=0, stream=INNER)
+        pair = []
+        ddl = deadline_ms if deadline_ms is not None else self.deadline_ms
+        for a in self.sched.schedule_pair(outer_seg, inner_seg, now_ms):
+            sess = StreamSession(vehicle=vehicle, stream=a.segment.stream,
+                                 engine=a.worker, assignment=a,
+                                 joined_ms=now_ms)
+            self._by_name[a.worker].open_stream(
+                sess.key, a.segment.stream, deadline_ms=ddl)
+            self.sched.commit(a, busy_until_ms=now_ms)
+            pair.append(sess)
+        self.sessions[vehicle] = (pair[0], pair[1])
+        return self.sessions[vehicle]
+
+    def push(self, vehicle: str, outer_frame: np.ndarray,
+             inner_frame: np.ndarray) -> Tuple[bool, bool]:
+        """Route one (outer, inner) frame pair; False = shed by backpressure."""
+        accepted = []
+        for sess, frame in zip(self.sessions[vehicle],
+                               (outer_frame, inner_frame)):
+            ok = self._by_name[sess.engine].push(sess.key, frame)
+            sess.pushed += 1
+            sess.shed += not ok
+            accepted.append(ok)
+        return accepted[0], accepted[1]
+
+    def leave(self, vehicle: str) -> List[SegmentRecord]:
+        """Close both streams; flush records; credit measured capacity."""
+        recs = []
+        for sess in self.sessions.pop(vehicle):
+            rec = self._by_name[sess.engine].close_stream(sess.key)
+            self.sched.complete(sess.assignment, rec.frames_processed,
+                                rec.processing_ms)
+            recs.append(rec)
+        self.closed.extend(recs)
+        return recs
+
+    def _sync_load(self, now_ms: float) -> None:
+        """Refresh scheduler busy-ness from actual lane occupancy.
+
+        CapacityScheduler assumes short jobs whose queue_len drains at
+        complete(); fleet sessions are long-lived, so a replica must read
+        as *free* while it still has unbound lanes (else the master replica
+        is excluded forever after its first session and its lanes idle
+        while workers oversubscribe).  Full replicas keep their session
+        count as queue_len (and a future busy horizon) so the scheduler's
+        shortest-queue tie-break orders them at full resolution."""
+        for r in self.replicas:
+            w = self.sched.by_name(r.name)
+            has_free_lanes = r.session_count < r.slots
+            w.busy_until_ms = 0.0 if has_free_lanes else now_ms + 1.0
+            w.queue_len = 0 if has_free_lanes else r.session_count
+
+    def backlog(self, vehicle: str) -> int:
+        """Frames still queued across the vehicle's two streams."""
+        return sum(len(self._by_name[s.engine].streams[s.key].pending)
+                   for s in self.sessions[vehicle])
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """Step every replica once; feed measured frames/s back into the
+        scheduler's capacity EWMAs (the HW_INFO -> measurement handoff)."""
+        done = 0
+        for r in self.replicas:
+            t0 = time.perf_counter()
+            n = r.step()
+            dt_ms = (time.perf_counter() - t0) * 1000.0
+            if n:
+                self.sched.by_name(r.name).observe(n, dt_ms)
+            done += n
+        return done
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        done = 0
+        ticks = 0
+        while any(r.has_work() for r in self.replicas) and ticks < max_ticks:
+            done += self.tick()
+            ticks += 1
+        return done

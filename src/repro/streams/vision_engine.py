@@ -1,0 +1,427 @@
+"""Fleet-scale vision serving engine: continuous batching over frames.
+
+``VisionServeEngine`` mirrors the jit-static slot design of
+``serving/engine.py`` but the unit of work is a *frame* instead of a token:
+
+  * each slot (lane) is one vehicle stream — the stream holds the lane for
+    its lifetime, its frames flow through that batch row;
+  * admission writes frames into fixed-shape per-model batches (detector
+    for outer streams, pose for inner) with ``dynamic_update_slice`` at the
+    lane index, so the engine compiles each program exactly once and never
+    recompiles regardless of which lanes are live on a given tick;
+  * outer/hazard streams pre-empt inner/distraction streams: they jump the
+    binding queue and, when every lane is taken, evict the most recently
+    bound inner stream (hazards outrank distraction — paper §3.2.5);
+  * each stream carries a deadline window; before every tick the stream's
+    backlog is trimmed to the frame budget the ``EarlyStopPolicy`` affords
+    at the engine's EWMA per-frame cost, and the trimmed (stale) frames are
+    accounted exactly like the paper's skip rate;
+  * per-stream lifecycle closes into a ``telemetry.SegmentRecord`` so the
+    existing ``Ledger`` machinery reports fleet turnaround/skip tables
+    unchanged.
+
+One engine instance is one replica; ``streams.gateway`` shards vehicle
+sessions across replicas with the ``CapacityScheduler``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import EDAConfig
+from repro.configs.eda_vision import detector_config, pose_config
+from repro.core.early_stop import EWMA, EarlyStopPolicy
+from repro.core.telemetry import Ledger, SegmentRecord
+from repro.models import vision as V
+from repro.streams.filter import MotionGate
+
+OUTER, INNER = "outer", "inner"
+
+
+def _load_impl(batch, frame, lane):
+    """Write one frame into the lane'th batch row (jit-static shapes)."""
+    return jax.lax.dynamic_update_slice(
+        batch, frame[None].astype(batch.dtype), (lane, 0, 0, 0))
+
+
+# donate the batch: admission updates the pool in place instead of
+# materialising a fresh (slots, H, W, 3) copy per admitted frame
+_load_frame = jax.jit(_load_impl, donate_argnums=(0,))
+
+
+@dataclass
+class StreamState:
+    """One vehicle stream bound to (or waiting for) an engine lane."""
+    key: str
+    kind: str                        # outer | inner
+    priority: int                    # 0 = outer/hazard class
+    deadline_ms: float               # per-window deadline (0 = no drops)
+    lane: int = -1                   # -1 = waiting for a lane
+    bound_seq: int = -1              # binding order (preemption victim pick)
+    served_since_bind: int = 0       # round-robin quantum accounting
+    pending: Deque[np.ndarray] = field(default_factory=deque)
+    offered: int = 0
+    processed: int = 0
+    gated: int = 0                   # motion-gate rejects
+    dropped: int = 0                 # deadline/backpressure drops
+    flagged: int = 0                 # danger/distraction frames
+    first_s: float = 0.0
+    last_s: float = 0.0
+    processing_ms: float = 0.0
+    gate_state: Optional[dict] = None  # travels with the stream, not the lane
+
+    @property
+    def bound(self) -> bool:
+        return self.lane >= 0
+
+
+class VisionServeEngine:
+    """Continuous-batching frame server for a fleet of vehicle streams."""
+
+    def __init__(self, name: str = "replica0", *, slots: int = 8,
+                 frame_res: int = 64, input_res: int = 48,
+                 fps: int = 30, eda: Optional[EDAConfig] = None,
+                 gate: Optional[MotionGate] = None, use_gate: bool = True,
+                 max_pending: int = 256, quantum: int = 32,
+                 ledger: Optional[Ledger] = None,
+                 rng: Optional[jax.Array] = None) -> None:
+        self.name = name
+        self.slots = slots
+        self.frame_res = frame_res
+        self.fps = fps
+        self.eda = eda or EDAConfig()
+        self.policy = EarlyStopPolicy(esd=self.eda.esd)
+        self.max_pending = max_pending
+        self.quantum = quantum
+        self.ledger = ledger if ledger is not None else Ledger()
+
+        rng = rng if rng is not None else jax.random.key(0)
+        r1, r2 = jax.random.split(rng)
+        self.dc = detector_config(input_res)
+        self.pc = pose_config(input_res)
+        self.dp = V.init_detector(self.dc, r1)
+        self.pp = V.init_pose(self.pc, r2)
+
+        shape = (slots, frame_res, frame_res, 3)
+        self.batches = {OUTER: jnp.zeros(shape, jnp.float32),
+                        INNER: jnp.zeros(shape, jnp.float32)}
+        # one gate per model class: lanes are disjoint per stream, but the
+        # two classes dispatch separately and keep separate stats; a custom
+        # gate's configuration applies to both classes
+        if not use_gate:
+            if gate is not None:
+                raise ValueError("gate provided but use_gate=False — "
+                                 "the gate config would be silently dropped")
+            self.gates: Dict[str, Optional[MotionGate]] = {
+                OUTER: None, INNER: None}
+        else:
+            if gate is not None and gate.slots != slots:
+                raise ValueError(
+                    f"gate.slots={gate.slots} must match engine slots={slots}")
+            outer_gate = gate if gate is not None else MotionGate(slots)
+            self.gates = {OUTER: outer_gate, INNER: outer_gate.similar()}
+
+        self.lanes: List[Optional[StreamState]] = [None] * slots
+        self.streams: Dict[str, StreamState] = {}
+        self.waiting: Deque[StreamState] = deque()
+        # throughput estimate (batch-amortised) vs latency estimate (a
+        # stream completes ONE frame per dispatch, however wide the batch)
+        self.frame_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
+        self.tick_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
+        self.results: Dict[str, Deque[bool]] = {}
+        self._bind_seq = 0
+        self.ticks = 0
+        self.frames_processed = 0
+        self.busy_s = 0.0
+
+    # ------------------------------------------------------------------
+    # stream lifecycle
+    # ------------------------------------------------------------------
+    def open_stream(self, key: str, kind: str, *, priority: Optional[int] = None,
+                    deadline_ms: float = 0.0) -> StreamState:
+        """Register a stream and bind it to a lane (or queue it).
+
+        Outer streams default to priority 0 and may evict the most recently
+        bound inner stream when every lane is taken.
+        """
+        if key in self.streams:
+            raise KeyError(f"stream {key!r} already open")
+        if kind not in (OUTER, INNER):
+            # fail at the caller, not deep inside a later _bind
+            raise ValueError(f"kind must be {OUTER!r} or {INNER!r}, "
+                             f"got {kind!r}")
+        prio = priority if priority is not None else (0 if kind == OUTER else 1)
+        st = StreamState(key=key, kind=kind, priority=prio,
+                         deadline_ms=deadline_ms)
+        self.streams[key] = st
+        self.results[key] = deque(maxlen=self.max_pending)
+        if not self._try_bind(st):
+            self._enqueue_waiting(st)
+        return st
+
+    def _enqueue_waiting(self, st: StreamState, front: bool = False) -> None:
+        """Priority-ordered wait queue: hazard class ahead of distraction.
+
+        ``front`` queues the stream ahead of its own priority class (an
+        eviction victim re-binds first among peers) but never ahead of a
+        higher class — a displaced inner stream must not outrank a waiting
+        hazard stream."""
+        if front:
+            idx = next((i for i, w in enumerate(self.waiting)
+                        if w.priority >= st.priority), len(self.waiting))
+        else:
+            idx = next((i for i, w in enumerate(self.waiting)
+                        if w.priority > st.priority), len(self.waiting))
+        self.waiting.insert(idx, st)
+
+    def close_stream(self, key: str) -> SegmentRecord:
+        """Unbind, account leftovers as skipped, flush a SegmentRecord."""
+        st = self.streams.pop(key)
+        self.results.pop(key, None)          # churn must not leak flag lists
+        st.dropped += len(st.pending)
+        st.pending.clear()
+        if st.bound:
+            self._free_lane(st)
+        elif st in self.waiting:
+            self.waiting.remove(st)
+        rec = SegmentRecord(
+            video_id=st.key, stream=st.kind, device=self.name,
+            processing_ms=st.processing_ms,
+            video_len_ms=1000.0 * st.offered / self.fps,
+            esd=self.eda.esd,
+            frames_total=st.offered, frames_processed=st.processed)
+        if st.processed:
+            turnaround_ms = max(st.last_s - st.first_s, 0.0) * 1000.0
+        elif st.offered:
+            # a session that analysed nothing must not read as near-real-
+            # time: account wall time until abandonment, floored past the
+            # video length so real_time is False
+            wall_ms = (time.perf_counter() - st.first_s) * 1000.0
+            turnaround_ms = max(wall_ms, rec.video_len_ms + 1.0)
+        else:
+            turnaround_ms = 0.0
+        rec.close(turnaround_ms)
+        self.ledger.add(rec)
+        return rec
+
+    def push(self, key: str, frame: np.ndarray) -> bool:
+        """Enqueue one frame.  Returns False if backpressure dropped it
+        (bounded per-stream backlog: stale live video is worthless)."""
+        st = self.streams[key]
+        expect = (self.frame_res, self.frame_res, 3)
+        if tuple(np.shape(frame)) != expect:
+            # dynamic_update_slice would silently embed an undersized frame
+            # over another stream's stale pixels — fail loudly instead
+            raise ValueError(
+                f"stream {key!r}: frame shape {np.shape(frame)} != {expect}")
+        st.offered += 1
+        if st.offered == 1:
+            # same clock domain as last_s — turnaround must subtract
+            # perf_counter from perf_counter, never a caller's sim clock
+            st.first_s = time.perf_counter()
+        if len(st.pending) >= self.max_pending:
+            st.dropped += 1
+            return False
+        st.pending.append(frame)
+        return True
+
+    # ------------------------------------------------------------------
+    # lane management
+    # ------------------------------------------------------------------
+    def _try_bind(self, st: StreamState) -> bool:
+        for lane, cur in enumerate(self.lanes):
+            if cur is None:
+                self._bind(st, lane)
+                return True
+        if st.priority == 0:
+            victims = [s for s in self.lanes if s and s.priority > 0]
+            if victims:
+                # evict the most recently bound inner stream; it keeps its
+                # backlog and re-binds first among its class when a lane
+                # frees (but never ahead of a waiting hazard stream)
+                victim = max(victims, key=lambda s: s.bound_seq)
+                lane = self._unbind(victim)
+                self._enqueue_waiting(victim, front=True)
+                self._bind(st, lane)
+                return True
+        return False
+
+    def _bind(self, st: StreamState, lane: int) -> None:
+        self.lanes[lane] = st
+        st.lane = lane
+        st.served_since_bind = 0
+        self._bind_seq += 1
+        st.bound_seq = self._bind_seq
+        gate = self.gates[st.kind]
+        if gate is not None:
+            gate.restore(lane, st.gate_state)
+
+    def _unbind(self, st: StreamState) -> int:
+        gate = self.gates[st.kind]
+        if gate is not None:
+            st.gate_state = gate.save(st.lane)
+        lane = st.lane
+        self.lanes[lane] = None
+        st.lane = -1
+        return lane
+
+    def _free_lane(self, st: StreamState) -> None:
+        lane = self._unbind(st)
+        if self.waiting:
+            self._bind(self.waiting.popleft(), lane)
+
+    @property
+    def bound_count(self) -> int:
+        return sum(s is not None for s in self.lanes)
+
+    @property
+    def session_count(self) -> int:
+        return len(self.streams)
+
+    def has_work(self) -> bool:
+        return any(st.pending for st in self.streams.values())
+
+    def stats(self) -> dict:
+        """Serving-loop telemetry (throughput vs latency cost estimators)."""
+        return {
+            "ticks": self.ticks,
+            "frames_processed": self.frames_processed,
+            "busy_s": self.busy_s,
+            "frame_cost_ms": self.frame_cost_ms.get(0.0),
+            "tick_cost_ms": self.tick_cost_ms.get(0.0),
+        }
+
+    # ------------------------------------------------------------------
+    # engine loop
+    # ------------------------------------------------------------------
+    def _trim_to_deadline(self, st: StreamState) -> None:
+        """ESD frame budget over the backlog; stale frames become skip."""
+        if st.deadline_ms <= 0 or not self.policy.enabled or not st.pending:
+            return
+        # a stream finishes one frame per tick, so its per-frame *latency*
+        # is the tick cost, not the batch-amortised throughput cost
+        cost = self.tick_cost_ms.get(1000.0 / self.fps)
+        budget = self.policy.frame_budget(
+            st.deadline_ms, len(st.pending), cost)
+        while len(st.pending) > max(budget, 1):
+            st.pending.popleft()                 # oldest frame is stalest
+            st.dropped += 1
+
+    def step(self) -> int:
+        """One tick: admit one frame per bound stream, gate, run both
+        batched models (outer first).  Returns frames processed."""
+        # lanes freed since the last tick soak up waiters
+        for lane, cur in enumerate(self.lanes):
+            if cur is None and self.waiting:
+                self._bind(self.waiting.popleft(), lane)
+        # hazard class preempts at every tick, not just at open: a waiting
+        # outer stream holding frames evicts the most recently bound inner
+        # (an earlier time-share demotion must never starve hazards)
+        for w in [w for w in list(self.waiting)
+                  if w.priority == 0 and w.pending]:
+            victims = [s for s in self.lanes if s is not None and s.priority > 0]
+            if not victims:
+                break
+            victim = max(victims, key=lambda s: s.bound_seq)
+            lane = self._unbind(victim)
+            self.waiting.remove(w)
+            self._enqueue_waiting(victim, front=True)
+            self._bind(w, lane)
+        # time-share oversubscribed lanes: a bound stream yields when its
+        # backlog is empty OR its round-robin quantum expires — without the
+        # quantum, continuously-fed streams would starve overcommitted
+        # waiters forever.  Quantum rotation never demotes a stream for a
+        # lower-priority waiter (hazards keep their lanes against inner).
+        if self.waiting:
+            for lane, cur in enumerate(self.lanes):
+                if cur is None:
+                    continue
+                idle = not cur.pending
+                expired = cur.served_since_bind >= self.quantum
+                if not idle and not expired:
+                    continue
+                idx = next(
+                    (i for i, w in enumerate(self.waiting)
+                     if w.pending and (idle or w.priority <= cur.priority)),
+                    None)
+                if idx is None:
+                    continue
+                nxt = self.waiting[idx]
+                del self.waiting[idx]
+                self._unbind(cur)
+                self._enqueue_waiting(cur)
+                self._bind(nxt, lane)
+
+        done = 0
+        t0 = time.perf_counter()
+        for kind in (OUTER, INNER):              # outer/hazard class first
+            done += self._step_class(kind)
+        if done:
+            # a stream completes one frame per whole tick (both class
+            # dispatches + staging/gating) — this is the latency estimate
+            # the deadline trim divides by
+            self.tick_cost_ms.update((time.perf_counter() - t0) * 1000.0)
+        self.ticks += 1
+        return done
+
+    def _step_class(self, kind: str) -> int:
+        batch = self.batches[kind]
+        active = np.zeros(self.slots, bool)
+        for lane, st in enumerate(self.lanes):
+            if st is None or st.kind != kind or not st.pending:
+                continue
+            self._trim_to_deadline(st)
+            frame = st.pending.popleft()
+            st.served_since_bind += 1      # gated frames consume quantum too
+            batch = _load_frame(batch, jnp.asarray(frame, jnp.float32),
+                                jnp.int32(lane))
+            active[lane] = True
+        self.batches[kind] = batch
+        if not active.any():
+            return 0
+
+        gate = self.gates[kind]
+        admit = gate.admit(batch, active) if gate is not None else active
+        for lane in np.nonzero(active & ~admit)[0]:
+            self.lanes[lane].gated += 1
+
+        n_admit = int(admit.sum())
+        if n_admit == 0:
+            return 0
+        t0 = time.perf_counter()
+        if kind == OUTER:
+            flags, _ = V.analyse_outer(self.dc, self.dp, batch)
+            per_frame = np.asarray(flags).any(axis=1)          # (slots,)
+        else:
+            distracted, _ = V.analyse_inner(self.pc, self.pp, batch)
+            per_frame = np.asarray(distracted)
+        dt = time.perf_counter() - t0
+        self.busy_s += dt
+        self.frame_cost_ms.update(dt * 1000.0 / n_admit)
+
+        now = time.perf_counter()
+        for lane in np.nonzero(admit)[0]:
+            st = self.lanes[lane]
+            st.processed += 1
+            st.last_s = now
+            st.processing_ms += dt * 1000.0 / n_admit
+            flag = bool(per_frame[lane])
+            st.flagged += flag
+            self.results[st.key].append(flag)
+        self.frames_processed += n_admit
+        return n_admit
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        """Step until every backlog is empty.  Returns frames processed."""
+        done = 0
+        ticks = 0
+        while self.has_work() and ticks < max_ticks:
+            done += self.step()
+            ticks += 1
+        return done

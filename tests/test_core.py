@@ -7,7 +7,11 @@ reproduction rests on (DESIGN.md §9).
 from dataclasses import replace
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare env: vendored deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.config import EDAConfig
 from repro.core.early_stop import DynamicESD, EarlyStopPolicy, EWMA

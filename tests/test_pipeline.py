@@ -1,0 +1,87 @@
+"""core/pipeline.py: DoubleBuffer exception propagation, sentinel handling,
+and overlapped() ordering under a slow consumer."""
+import threading
+import time
+
+import pytest
+
+from repro.core.pipeline import DoubleBuffer, overlapped
+
+
+def test_empty_source_stops_immediately():
+    buf = DoubleBuffer([])
+    assert list(buf) == []
+    with pytest.raises(StopIteration):
+        next(buf)                                   # stays exhausted
+
+
+def test_exception_in_source_surfaces_at_consumer():
+    def bad():
+        yield 1
+        yield 2
+        raise RuntimeError("camera disconnected")
+
+    buf = DoubleBuffer(bad())
+    assert next(buf) == 1
+    assert next(buf) == 2
+    with pytest.raises(RuntimeError, match="camera disconnected"):
+        next(buf)
+
+
+def test_exception_in_transform_surfaces_at_consumer():
+    def boom(x):
+        if x == 3:
+            raise ValueError("decode failed")
+        return x * 10
+
+    buf = DoubleBuffer(range(5), transform=boom)
+    assert next(buf) == 0
+    assert next(buf) == 10
+    assert next(buf) == 20
+    with pytest.raises(ValueError, match="decode failed"):
+        next(buf)
+
+
+def test_items_before_failure_are_delivered_in_order():
+    """The good prefix must arrive intact even though the producer thread
+    has already hit the error by the time the consumer reads."""
+    def bad():
+        yield from range(2)                         # depth-sized prefix
+        raise KeyError("late")
+
+    buf = DoubleBuffer(bad(), depth=2)
+    time.sleep(0.05)                                # let the producer finish
+    assert [next(buf), next(buf)] == [0, 1]
+    with pytest.raises(KeyError):
+        next(buf)
+
+
+def test_overlapped_preserves_order_under_slow_consumer():
+    produced_at = {}
+
+    def src():
+        for i in range(6):
+            produced_at[i] = time.perf_counter()
+            yield i
+
+    got = []
+    consume_started = time.perf_counter()
+    for item in overlapped(src(), depth=2):
+        time.sleep(0.02)                            # slow loop body
+        got.append(item)
+    assert got == list(range(6))                    # exact order
+    # ingest genuinely overlapped the loop body: the producer ran ahead of
+    # the consumer instead of waiting for each item to be consumed
+    assert produced_at[2] < consume_started + 0.02 * 2
+
+
+def test_overlapped_applies_transform_in_background_thread():
+    main = threading.get_ident()
+    seen_threads = []
+
+    def tag(x):
+        seen_threads.append(threading.get_ident())
+        return x + 100
+
+    assert list(overlapped(range(3), transform=tag)) == [100, 101, 102]
+    assert all(t != main for t in seen_threads)

@@ -32,12 +32,12 @@ def test_tp_dp_train_step_matches_single_device():
         from repro.config import get_arch, ParallelConfig, ShapeConfig
         from repro.models import transformer as T
         from repro.sharding import rules
+        from repro.sharding.compat import make_mesh
         from repro.train import AdamWConfig, init_opt_state, make_train_step
 
         cfg = get_arch("starcoder2-3b").reduced()
         par = ParallelConfig()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         params = T.init_params(cfg, jax.random.key(0))
         opt = AdamWConfig(lr=1e-3, warmup_steps=1)
         state = init_opt_state(params)
@@ -82,11 +82,11 @@ def test_fsdp_and_ep_specs_shard_and_compile():
         from repro.config import get_arch, ParallelConfig, ShapeConfig
         from repro.models import transformer as T
         from repro.sharding import rules
+        from repro.sharding.compat import make_mesh
 
         cfg = get_arch("granite-moe-1b-a400m").reduced()
         par = ParallelConfig(fsdp=True, ep=True)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         pspecs = rules.param_pspecs(cfg, par, mesh)
         specs = [str(s) for s in jax.tree.leaves(
             pspecs, is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))]
@@ -111,11 +111,11 @@ def test_decode_cache_specs_seq_shard():
         import jax
         from repro.config import get_arch, ParallelConfig, ShapeConfig
         from repro.sharding import rules
+        from repro.sharding.compat import make_mesh
 
         cfg = get_arch("starcoder2-3b")
         par = ParallelConfig()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         shape = ShapeConfig("long", 1024, 1, "decode")  # B=1
         cspecs = rules.cache_pspecs(cfg, shape, par, mesh)
         flat = [s for s in jax.tree.leaves(
@@ -132,10 +132,10 @@ def test_pipeline_parallel_matches_sequential():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.sharding.pipeline import make_pipeline, stage_split, bubble_fraction
+        from repro.sharding.compat import make_mesh
 
         S, L, M, B, D = 4, 8, 6, 2, 16   # stages, layers, microbatches
-        mesh = jax.make_mesh((S,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((S,), ("stage",))
         ws = jax.random.normal(jax.random.key(0), (L, D, D)) * 0.3
 
         def stage_fn(w_stack, x):
@@ -169,9 +169,9 @@ def test_int8_compressed_allreduce():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.sharding.collectives import int8_psum
+        from repro.sharding.compat import make_mesh
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("pod",))
         x = jax.random.normal(jax.random.key(0), (8, 64))
 
         f = shard_map(lambda a: int8_psum(a[0], "pod"), mesh=mesh,
@@ -194,20 +194,19 @@ def test_elastic_checkpoint_restore_different_mesh():
         from repro.config import get_arch, ParallelConfig
         from repro.models import transformer as T
         from repro.sharding import rules
+        from repro.sharding.compat import make_mesh
         from repro.train import checkpoint
 
         cfg = get_arch("starcoder2-3b").reduced()
         par = ParallelConfig()
-        mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = make_mesh((2, 4), ("data", "model"))
         pspecs = rules.param_pspecs(cfg, par, mesh1)
         params = jax.jit(lambda: T.init_params(cfg, jax.random.key(0)),
                          out_shardings=rules.shardings(mesh1, pspecs))()
         with tempfile.TemporaryDirectory() as d:
             checkpoint.save(d, 7, {"params": params})
             for shp in ((4, 2), (1, 8)):
-                mesh2 = jax.make_mesh(shp, ("data", "model"),
-                                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                mesh2 = make_mesh(shp, ("data", "model"))
                 sh2 = rules.shardings(mesh2,
                                       rules.param_pspecs(cfg, par, mesh2))
                 restored, step = checkpoint.restore(

@@ -1,0 +1,444 @@
+"""Fleet streaming subsystem: motion gate, vision engine, gateway."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import EDAConfig
+from repro.core.telemetry import Ledger
+from repro.data import DashCamSource
+from repro.streams import (FleetGateway, INNER, MotionGate, OUTER,
+                           VisionServeEngine, block_sad)
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("frame_res", 64)
+    kw.setdefault("input_res", 32)
+    kw.setdefault("fps", 10)
+    kw.setdefault("use_gate", False)
+    return VisionServeEngine("eng", **kw)
+
+
+def _frames(n, seed=0, res=64):
+    rng = np.random.default_rng(seed)
+    return rng.random((n, res, res, 3)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# motion gate
+# ---------------------------------------------------------------------------
+
+
+def test_block_sad_zero_for_identical_frames():
+    x = jnp.asarray(_frames(3, res=32))
+    scores = block_sad(x, x, block=8)
+    assert scores.shape == (3,)
+    np.testing.assert_allclose(np.asarray(scores), 0.0, atol=1e-7)
+
+
+def test_block_sad_detects_localised_motion():
+    """A small bright patch in one corner must trip the max-block score
+    far above the full-frame mean difference."""
+    ref = jnp.zeros((1, 32, 32, 3))
+    cur = ref.at[0, :8, :8, :].set(1.0)
+    score = float(block_sad(ref, cur, block=8)[0])
+    full_mean = float(jnp.abs(cur - ref).mean())
+    assert score == pytest.approx(1.0)
+    assert score > 10 * full_mean
+
+
+def test_gate_admits_first_frame_then_blocks_duplicates():
+    gate = MotionGate(slots=2, init_thresh=0.02)
+    frames = jnp.asarray(_frames(2, res=64))
+    active = np.array([True, True])
+    first = gate.admit(frames, active)
+    assert first.tolist() == [True, True]          # no reference yet
+    dup = gate.admit(frames, active)
+    assert dup.tolist() == [False, False]          # exact duplicates gated
+    moved = gate.admit(jnp.asarray(_frames(2, seed=9)), active)
+    assert moved.tolist() == [True, True]          # fresh content admitted
+    assert gate.stats.offered == 6
+    assert gate.stats.gated == 2
+
+
+def test_gate_respects_active_mask_and_reset():
+    gate = MotionGate(slots=3)
+    frames = jnp.asarray(_frames(3))
+    admit = gate.admit(frames, np.array([True, False, True]))
+    assert admit.tolist() == [True, False, True]
+    assert gate.stats.offered == 2
+    gate.reset(0)
+    assert not gate.has_ref[0] and gate.has_ref[2]
+
+
+def test_gate_reset_keeps_configured_threshold():
+    gate = MotionGate(slots=2, init_thresh=0.2)
+    gate.thresh[0] = 0.5                           # adapted away
+    gate.reset(0)
+    assert float(gate.thresh[0]) == pytest.approx(0.2)   # configured, not 0.02
+
+
+def test_gate_adaptive_threshold_moves_toward_target_band():
+    """A lane gating 100% of frames must have its threshold decayed."""
+    gate = MotionGate(slots=1, init_thresh=0.5, window=4)
+    frames = jnp.asarray(_frames(1))
+    active = np.array([True])
+    gate.admit(frames, active)                     # reference
+    t0 = float(gate.thresh[0])
+    for seed in range(1, 30):
+        gate.admit(jnp.asarray(_frames(1, seed=seed)), active)
+    assert float(gate.thresh[0]) < t0              # decayed to admit more
+
+
+def test_gate_adapts_once_per_window_and_floors_threshold():
+    """AIMD must fire per window, not per frame, and never decay to zero."""
+    gate = MotionGate(slots=1, init_thresh=0.5, window=8, thresh_floor=1e-3)
+    frames = jnp.asarray(_frames(1))
+    active = np.array([True])
+    gate.admit(frames, active)                     # reference
+    for _ in range(8):                             # one full window of dups
+        gate.admit(frames, active)
+    after_one_window = float(gate.thresh[0])
+    assert after_one_window == pytest.approx(0.5 * gate.decay)  # exactly one
+    for _ in range(2000):                          # parked vehicle
+        gate.admit(frames, active)
+    assert float(gate.thresh[0]) >= gate.thresh_floor
+
+
+def test_engine_validates_custom_gate_and_applies_config_to_both_classes():
+    with pytest.raises(ValueError, match="gate.slots"):
+        VisionServeEngine("e", slots=8, gate=MotionGate(4))
+    eng = VisionServeEngine("e", slots=2, frame_res=64, input_res=32,
+                            gate=MotionGate(2, init_thresh=0.2))
+    assert eng.gates[OUTER].init_thresh == 0.2
+    assert eng.gates[INNER].init_thresh == 0.2     # config mirrored
+    assert eng.gates[INNER] is not eng.gates[OUTER]  # state separate
+
+
+# ---------------------------------------------------------------------------
+# vision engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_processes_all_frames_without_gate():
+    eng = _engine(slots=2)
+    eng.open_stream("a", OUTER)
+    eng.open_stream("b", INNER)
+    for f in _frames(5, seed=1):
+        eng.push("a", f)
+    for f in _frames(5, seed=2):
+        eng.push("b", f)
+    done = eng.drain()
+    assert done == 10
+    assert eng.streams["a"].processed == 5
+    assert eng.streams["b"].processed == 5
+    assert len(eng.results["a"]) == 5
+    assert all(isinstance(x, bool) for x in eng.results["a"])
+
+
+def test_engine_batches_streams_in_one_tick():
+    """With k bound streams one tick serves k frames (cross-stream batch)."""
+    eng = _engine(slots=4)
+    for i in range(4):
+        eng.open_stream(f"s{i}", OUTER)
+        eng.push(f"s{i}", _frames(1, seed=i)[0])
+    assert eng.step() == 4
+    assert eng.ticks == 1
+
+
+def test_engine_timeshares_oversubscribed_lanes():
+    """8 streams through 2 lanes must all drain (lane rotation)."""
+    eng = _engine(slots=2)
+    for i in range(8):
+        eng.open_stream(f"s{i}", OUTER)
+        for f in _frames(3, seed=i):
+            eng.push(f"s{i}", f)
+    done = eng.drain()
+    assert done == 24
+    assert all(eng.streams[f"s{i}"].processed == 3 for i in range(8))
+
+
+def test_outer_preempts_inner_slot():
+    eng = _engine(slots=2)
+    eng.open_stream("in0", INNER)
+    eng.open_stream("in1", INNER)
+    assert eng.bound_count == 2
+    st = eng.open_stream("haz", OUTER)
+    assert st.bound                                # outer got a lane
+    victim = eng.streams["in1"]                    # most recently bound inner
+    assert not victim.bound
+    assert eng.waiting[0] is victim                # front of queue, kept alive
+    # victim's backlog survives preemption and drains after churn
+    eng.push("in1", _frames(1)[0])
+    eng.close_stream("haz")
+    eng.drain()
+    assert victim.processed == 1
+
+
+def test_demoted_outer_reclaims_lane_from_busy_inner():
+    """A time-share-demoted hazard stream must evict a busy inner stream
+    the moment it has frames again — no starvation behind inner traffic."""
+    eng = _engine(slots=1)
+    eng.open_stream("out", OUTER)                  # bound, empty backlog
+    eng.open_stream("in", INNER)                   # waits
+    for f in _frames(3, seed=1):
+        eng.push("in", f)
+    eng.step()                                     # time-share: inner binds
+    assert eng.streams["in"].bound and not eng.streams["out"].bound
+    eng.push("out", _frames(1, seed=2)[0])
+    eng.step()                                     # hazard evicts busy inner
+    assert eng.streams["out"].processed == 1
+    eng.drain()
+    assert eng.streams["in"].processed == 3        # inner still completes
+
+
+def test_quantum_rotation_serves_overcommitted_streams():
+    """Continuously-fed bound streams must not starve waiting ones: the
+    round-robin quantum forces lane rotation even with non-empty backlogs."""
+    eng = _engine(slots=2, quantum=4)
+    for i in range(4):                             # 4 streams on 2 lanes
+        eng.open_stream(f"s{i}", OUTER)
+    for tick in range(24):                         # live feed: 1 frame/tick
+        for i in range(4):
+            eng.push(f"s{i}", _frames(1, seed=tick * 4 + i)[0])
+        eng.step()
+    eng.drain()
+    served = [eng.streams[f"s{i}"].processed for i in range(4)]
+    assert all(n > 0 for n in served), served      # nobody starves
+    assert min(served) >= max(served) // 4         # roughly fair share
+
+
+def test_deadline_budget_drops_stale_backlog():
+    """ESD budget over the backlog: stale frames become skip rate."""
+    eng = _engine(slots=1, eda=EDAConfig(esd=2.0))
+    eng.tick_cost_ms.update(100.0)                 # 100 ms/frame latency
+    eng.open_stream("v", OUTER, deadline_ms=1000.0)
+    for f in _frames(20, seed=3):
+        eng.push("v", f)
+    eng.drain()
+    st = eng.streams["v"]
+    # budget = (1000/2) / 100 = 5 affordable frames on the seeded estimate;
+    # the EWMA then tracks real tick costs, so the exact count moves, but
+    # the stale bulk of the backlog must be dropped, not processed
+    assert 1 <= st.processed <= 8
+    assert st.dropped >= 12
+    assert st.processed + st.dropped + st.gated == st.offered
+    rec = eng.close_stream("v")
+    assert rec.skip_rate > 0
+    assert rec.frames_total == 20
+
+
+def test_engine_ledger_record_on_close():
+    ledger = Ledger()
+    eng = _engine(slots=2, ledger=ledger)
+    eng.open_stream("v", OUTER)
+    for f in _frames(4, seed=4):
+        eng.push("v", f)
+    eng.drain()
+    rec = eng.close_stream("v")
+    assert rec.device == "eng" and rec.stream == OUTER
+    assert rec.frames_total == 4 and rec.frames_processed == 4
+    assert rec.processing_ms > 0
+    assert ledger.records == [rec]
+    assert "eng" in ledger.table()
+    assert "v" not in eng.results                  # churn must not leak
+
+
+def test_engine_rejects_wrong_frame_shape():
+    eng = _engine(slots=1)
+    eng.open_stream("v", OUTER)
+    with pytest.raises(ValueError, match="frame shape"):
+        eng.push("v", np.zeros((48, 48, 3), np.float32))   # undersized
+    with pytest.raises(ValueError, match="frame shape"):
+        eng.push("v", np.zeros((64, 64), np.float32))      # missing channels
+    assert eng.streams["v"].offered == 0                   # not accounted
+
+
+def test_dead_session_is_not_near_real_time():
+    """A stream closed before any frame processed must not inflate the
+    ledger's near-real-time fraction."""
+    eng = _engine(slots=1)
+    eng.open_stream("v", OUTER)
+    for f in _frames(5, seed=11):
+        eng.push("v", f)
+    rec = eng.close_stream("v")                    # abandoned before a tick
+    assert rec.frames_processed == 0
+    assert rec.skip_rate == 1.0
+    assert not rec.real_time
+    assert eng.ledger.real_time_fraction() == 0.0
+
+
+def test_engine_backpressure_bounds_backlog():
+    eng = _engine(slots=1, max_pending=3)
+    eng.open_stream("v", OUTER)
+    acks = [eng.push("v", f) for f in _frames(6, seed=5)]
+    assert acks == [True, True, True, False, False, False]
+    assert eng.streams["v"].dropped == 3
+
+
+def test_engine_gate_accounts_skip_in_ledger():
+    eng = _engine(slots=2, use_gate=True)
+    eng.open_stream("v", OUTER)
+    frame = _frames(1, seed=6)[0]
+    for _ in range(6):                              # 6 identical frames
+        eng.push("v", frame)
+    eng.drain()
+    rec = eng.close_stream("v")
+    assert rec.frames_processed == 1                # first admits, rest gated
+    assert eng.gates[OUTER].stats.gated == 5
+    assert rec.skip_rate == pytest.approx(5 / 6)
+
+
+def test_gate_state_travels_with_stream_across_rebinds():
+    """Lane rotation must not wipe a stream's gate reference: a parked
+    vehicle's duplicates stay gated across unbind/re-bind cycles."""
+    eng = _engine(slots=1, use_gate=True, quantum=2)
+    frame_a, frame_b = _frames(2, seed=1)
+    eng.open_stream("a", OUTER)
+    eng.open_stream("b", OUTER)
+    for _ in range(6):                             # identical frames each
+        eng.push("a", frame_a)
+        eng.push("b", frame_b)
+    eng.drain()
+    assert eng.streams["a"].processed == 1         # first frame only
+    assert eng.streams["b"].processed == 1
+    assert eng.streams["a"].gated == 5
+    assert eng.streams["b"].gated == 5
+
+
+def test_engine_never_recompiles_across_occupancy_patterns():
+    """Varying live-lane sets must reuse the same compiled programs."""
+    eng = _engine(slots=3)
+    eng.open_stream("a", OUTER)
+    eng.push("a", _frames(1)[0])
+    eng.step()
+    n_analyse = V_cache_size()
+    eng.open_stream("b", OUTER)
+    eng.open_stream("c", INNER)
+    for key, seed in (("a", 7), ("b", 8), ("c", 9)):
+        eng.push(key, _frames(1, seed=seed)[0])
+    eng.step()
+    eng.close_stream("a")
+    eng.push("b", _frames(1, seed=10)[0])
+    eng.step()
+    assert V_cache_size() == n_analyse + 1          # only the pose model
+
+
+def V_cache_size():
+    from repro.models import vision as V
+    return (V.analyse_outer._cache_size() + V.analyse_inner._cache_size())
+
+
+# ---------------------------------------------------------------------------
+# gateway
+# ---------------------------------------------------------------------------
+
+
+def _fleet(replicas=2, slots=2, **kw):
+    engines = [VisionServeEngine(f"r{i}", slots=slots, frame_res=64,
+                                 input_res=32, fps=10, use_gate=False)
+               for i in range(replicas)]
+    return engines, FleetGateway(engines, **kw)
+
+
+def test_gateway_shards_pairs_across_replicas():
+    engines, gw = _fleet(replicas=2, slots=2)
+    assert gw.join("veh0") is not None
+    outer, inner = gw.sessions["veh0"]
+    assert outer.stream == OUTER and inner.stream == INNER
+    # paired placement uses the capacity scheduler: both replicas get work
+    gw.join("veh1")
+    assert {s.engine for pair in gw.sessions.values() for s in pair} \
+        == {"r0", "r1"}
+
+
+def test_gateway_push_routes_and_drains_to_ledger():
+    engines, gw = _fleet(replicas=2, slots=2)
+    gw.join("veh0")
+    src = DashCamSource(granularity_s=0.5, fps=10, res=64, seed=2)
+    pair = src.pair(0)
+    for f in range(5):
+        gw.push("veh0", pair.outer[f], pair.inner[f])
+    gw.drain()
+    assert gw.backlog("veh0") == 0
+    recs = gw.leave("veh0")
+    assert {r.stream for r in recs} == {OUTER, INNER}
+    assert all(r.frames_processed == 5 for r in recs)
+    # turnaround is perf_counter minus perf_counter — a sane sub-minute
+    # number, not a cross-clock-domain artefact
+    assert all(0 <= r.turnaround_ms < 60_000 for r in recs)
+    assert len(gw.ledger.records) == 2
+    assert "veh0" not in gw.sessions
+
+
+def test_gateway_backpressure_refuses_saturated_join():
+    engines, gw = _fleet(replicas=1, slots=2, overcommit=1.0)
+    assert gw.join("veh0") is not None             # 2 streams = capacity
+    assert gw.join("veh1") is None                 # saturated
+    assert gw.refused == 1
+    gw.leave("veh0")
+    assert gw.join("veh1") is not None             # churn freed capacity
+
+
+def test_gateway_splits_pair_across_replicas_when_lanes_free():
+    """3+ replicas: the (outer, inner) pair must not colocate while other
+    replicas have free lanes (commit-between-picks placement)."""
+    engines, gw = _fleet(replicas=3, slots=2)
+    gw.join("veh0")
+    assert len({s.engine for s in gw.sessions["veh0"]}) == 2
+
+
+def test_engine_rejects_unknown_stream_kind():
+    eng = _engine(slots=1)
+    with pytest.raises(ValueError, match="kind"):
+        eng.open_stream("v", "Outer")              # case typo fails fast
+    assert "v" not in eng.streams
+
+
+def test_gateway_fills_idle_master_before_oversubscribing_workers():
+    """Long-lived sessions must not exclude replica0 after its first
+    vehicle: lanes fill evenly instead of workers oversubscribing."""
+    engines, gw = _fleet(replicas=3, slots=2)
+    for v in range(3):
+        assert gw.join(f"veh{v}") is not None
+    assert sorted(e.session_count for e in engines) == [2, 2, 2]
+
+
+def test_gateway_overcommit_spreads_over_master_too():
+    """Once every lane is bound, overcommitted sessions must still land on
+    replica0 — the everyone-busy pick includes the master replica."""
+    engines, gw = _fleet(replicas=3, slots=2, overcommit=1.5)
+    for v in range(4):                             # 8 streams on 6 lanes
+        assert gw.join(f"veh{v}") is not None
+    counts = sorted(e.session_count for e in engines)
+    assert counts == [2, 3, 3]
+    assert engines[0].session_count == 3           # master took overcommit
+
+
+def test_evicted_inner_waits_behind_hazard_stream():
+    """An eviction victim re-binds first among inners but never ahead of a
+    waiting hazard stream."""
+    eng = _engine(slots=1)
+    eng.open_stream("o1", OUTER)                   # bound, idle
+    eng.open_stream("in", INNER)                   # waits
+    for f in _frames(2, seed=1):
+        eng.push("in", f)
+    eng.step()                                     # time-share: inner binds
+    assert eng.waiting[0] is eng.streams["o1"]
+    eng.open_stream("o2", OUTER)                   # evicts inner
+    assert [w.key for w in eng.waiting] == ["o1", "in"]   # hazard first
+    eng.close_stream("o2")
+    assert eng.streams["o1"].bound                 # hazard re-binds first
+
+
+def test_gateway_capacity_feedback_updates_scheduler():
+    engines, gw = _fleet(replicas=2, slots=2)
+    gw.join("veh0")
+    pair = DashCamSource(fps=10, res=64, seed=1).pair(0)
+    for f in range(3):
+        gw.push("veh0", pair.outer[f], pair.inner[f])
+    gw.drain()
+    measured = [gw.sched.by_name(r.name).capacity_ewma.value
+                for r in engines]
+    assert any(v is not None and v > 0 for v in measured)

@@ -6,7 +6,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare env: vendored deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.config import ParallelConfig, get_arch
 from repro.data import lm_batches
