@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, vision_ops
 from repro.roofline import HW_V5E
 
 RNG = np.random.default_rng(0)
@@ -96,11 +96,63 @@ def recurrence_model(rows):
     rows.append(("mlstm_model", v5e_us, f"AI={ai:.0f}"))
 
 
+def ingest_model(rows):
+    """Fused frame-ingest kernel vs the 3-pass jnp baseline it replaces.
+
+    Pure streaming (AI << 1 flop/B): the win is HBM round-trips, so the
+    structural number is bytes moved per engine tick.  The jnp baseline
+    materialises gate-downscale, block-SAD and model-downscale separately
+    (+ the per-lane dynamic_update_slice admission); the fused kernel reads
+    the frame batch once and writes (model, gate, score) from VMEM.
+    """
+    print("\n== fused ingest_frame kernel vs 3-pass jnp baseline (v5e) ==")
+    S, C, m, g = 64, 3, 48, 32
+    f4 = 4
+    gate, model = S * g * g * C * f4, S * m * m * C * f4
+    score = S * f4
+    print(f"{'S,HxW,dtype':>20s} {'3pass_bytes':>12s} {'fused_bytes':>12s} "
+          f"{'reduction':>9s} {'v5e_3pass_us':>12s} {'v5e_fused_us':>12s}")
+    for res, dtype, db in ((64, "float32", f4), (256, "float32", f4),
+                           (256, "uint8", 1)):
+        fb = S * res * res * C * db
+        three = ((fb + gate)                    # downscale to gate res
+                 + (2 * gate + score)           # block-SAD vs refs
+                 + (fb + model)                 # model-res downscale
+                 + 2 * (model + gate))          # update_slice loop + refs
+        fused = (fb + gate) + (model + gate + score) \
+            + 2 * (model + gate)                # one read + scatter_admit
+        us3 = three / HW_V5E.hbm_bw * 1e6
+        usf = fused / HW_V5E.hbm_bw * 1e6
+        tag = f"{S},{res}x{res},{dtype}"
+        print(f"{tag:>20s} {three:12.2e} {fused:12.2e} {three / fused:8.1f}x "
+              f"{us3:12.2f} {usf:12.2f}")
+        rows.append((f"ingest_bytes_reduction_{res}_{dtype}", three / fused,
+                     "x_vs_3pass"))
+    H = W = 64
+
+    frames = jnp.asarray(RNG.random((S, H, W, C)), jnp.float32)
+    refs = jnp.asarray(RNG.random((S, g, g, C)), jnp.float32)
+    kw = dict(model_res=m, gate_res=g, block=8)
+    f3 = jax.jit(lambda f, r: ref.ingest_frame_ref(f, r, **kw))
+    cpu3 = _wall(f3, frames, refs)
+    print(f"cpu 3-pass jnp baseline: {cpu3:.0f} us/tick (S={S})")
+    rows.append(("ingest_cpu_3pass", cpu3, "us_per_tick_jnp"))
+
+    # differential parity of the fused kernel (interpret mode — wall-clock
+    # here is Python interpretation, NOT a perf number; TPU is the target)
+    got = vision_ops.ingest_frame(frames, refs, **kw, interpret=True)
+    want = f3(frames, refs)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want))
+    print(f"fused-vs-golden parity: max|delta| = {err:.2e}")
+    rows.append(("ingest_parity_max_abs_err", err, "vs_jnp_golden"))
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     flash_attention_model(rows)
     decode_attention_model(rows)
     recurrence_model(rows)
+    ingest_model(rows)
     return rows
 
 

@@ -3,8 +3,14 @@
 The paper's own contribution is system-level (scheduling/deadline policy --
 see ``repro.core``), so these kernels serve the transformer/recurrent inner
 loops of the assigned architecture pool: flash attention (prefill + decode),
-the RG-LRU linear recurrence, and the chunkwise mLSTM.
+the RG-LRU linear recurrence, and the chunkwise mLSTM.  ``vision_ops.py``
+adds the frame-ingest suite for the fleet streaming subsystem: the fused
+downscale + normalize + block-SAD ``ingest_frame`` kernel and the masked
+``scatter_admit`` batch/reference scatter behind the engine's ``use_pallas``
+flag.
 
 Each kernel has a pure-jnp oracle in ``ref.py``; ``tests/test_kernels.py``
-sweeps shapes/dtypes in ``interpret=True`` mode against the oracles.
+and ``tests/test_vision_kernels.py`` (via the reusable differential harness
+in ``tests/kernel_harness.py``) sweep shapes/dtypes in ``interpret=True``
+mode against the oracles.
 """

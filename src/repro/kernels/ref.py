@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 
@@ -113,3 +114,86 @@ def mlstm_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                     jnp.exp(-m))
     out = jnp.einsum("btsh,bshd->bthd", scores / n, vf)
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Frame-ingest suite (vision_ops): downscale + normalize + block-SAD + scatter
+# ---------------------------------------------------------------------------
+
+
+def normalize_ref(frames: jax.Array) -> jax.Array:
+    """Cast to fp32; uint8 frames additionally scale to [0, 1]."""
+    x = frames.astype(jnp.float32)
+    if frames.dtype == jnp.uint8:
+        x = x * (1.0 / 255.0)
+    return x
+
+
+def downscale_ref(frames: jax.Array, res: int, *,
+                  method: str = "nearest") -> jax.Array:
+    """(S, H, W, C) -> (S, res, res, C) fp32, normalized.
+
+    ``nearest`` matches ``models.vision.downscale`` exactly (strided gather
+    at ``i * H // res``); ``box`` mean-pools the bucket
+    ``[i*H//res, (i+1)*H//res)`` per output pixel (requires res <= H, W).
+    """
+    x = normalize_ref(frames)
+    S, H, W, C = x.shape
+
+    def axis_take(x, n_in, axis):
+        if method == "nearest":
+            idx = jnp.arange(res) * n_in // res
+            return jnp.take(x, idx, axis=axis)
+        assert res <= n_in, (res, n_in)
+        lo = np.arange(res) * n_in // res
+        hi = (np.arange(res) + 1) * n_in // res
+        w = ((np.arange(n_in)[None, :] >= lo[:, None])
+             & (np.arange(n_in)[None, :] < hi[:, None]))
+        w = jnp.asarray(w / (hi - lo)[:, None], jnp.float32)   # rows sum to 1
+        return jnp.moveaxis(jnp.tensordot(w, x, axes=(1, axis)), 0, axis)
+
+    return axis_take(axis_take(x, H, 1), W, 2)
+
+
+def block_sad_ref(ref_frames: jax.Array, frames: jax.Array,
+                  block: int = 8) -> jax.Array:
+    """Per-stream motion score: max block mean-absolute-difference.
+
+    Pad-and-mask form: H, W need NOT divide ``block`` — edge blocks average
+    only their valid pixels.  Returns (S,) fp32.
+    """
+    S, H, W, _ = frames.shape
+    d = jnp.abs(frames.astype(jnp.float32)
+                - ref_frames.astype(jnp.float32)).mean(axis=-1)   # (S, H, W)
+    nh, nw = -(-H // block), -(-W // block)
+    d = jnp.pad(d, ((0, 0), (0, nh * block - H), (0, nw * block - W)))
+    sums = d.reshape(S, nh, block, nw, block).sum(axis=(2, 4))
+    cnt_h = np.minimum(block, H - np.arange(nh) * block)
+    cnt_w = np.minimum(block, W - np.arange(nw) * block)
+    counts = jnp.asarray(np.outer(cnt_h, cnt_w), jnp.float32)
+    return (sums / counts).reshape(S, -1).max(axis=-1)
+
+
+def ingest_frame_ref(frames: jax.Array, refs: jax.Array, *, model_res: int,
+                     gate_res: int, block: int = 8,
+                     method: str = "nearest"):
+    """Golden for the fused ingest kernel: the three jnp passes it replaces.
+
+    Returns (model (S,m,m,C) fp32, gate (S,g,g,C) fp32, scores (S,) fp32).
+    """
+    model = downscale_ref(frames, model_res, method=method)
+    gate = downscale_ref(frames, gate_res, method=method)
+    scores = block_sad_ref(refs, gate, block=block)
+    return model, gate, scores
+
+
+def scatter_admit_ref(batch: jax.Array, model: jax.Array, refs: jax.Array,
+                      gate: jax.Array, admit: jax.Array):
+    """Masked row scatter: admitted rows adopt the new frame + reference.
+
+    batch/model: (S, m, m, C); refs/gate: (S, g, g, C); admit: (S,) bool.
+    Returns (batch', refs').
+    """
+    m = admit.reshape(-1, 1, 1, 1)
+    return (jnp.where(m, model.astype(batch.dtype), batch),
+            jnp.where(m, gate.astype(refs.dtype), refs))

@@ -1,0 +1,301 @@
+"""Pallas frame-ingest kernel suite: fused downscale + normalize + gate-score.
+
+The ``VisionServeEngine`` hot path runs three materialised passes per tick in
+plain jnp — downscale to gate resolution, normalize, block-SAD against the
+per-stream reference — then a fourth downscale inside the model jit and a
+``dynamic_update_slice`` loop for admission.  Each pass round-trips the frame
+batch through HBM.  This suite fuses the ingest stage into two kernels:
+
+  ``ingest_frame``   one VMEM-resident pass per stream: normalize (uint8 ->
+                     [0,1] fp32), resample to BOTH the model resolution and
+                     the gate resolution, and score per-block SAD against the
+                     reference frame.  Emits (model, gate, score) without ever
+                     materialising an intermediate in HBM.
+  ``scatter_admit``  masked row scatter: admitted lanes adopt the new model
+                     frame in the engine batch AND the new gate reference in
+                     one pass, replacing the per-lane ``dynamic_update_slice``
+                     loop and the separate masked reference update.
+  ``downscale``      the resample half alone (``models.vision.downscale``
+                     wiring) and ``block_sad`` the score half alone
+                     (``streams.filter`` wiring).
+
+Fusion layout
+-------------
+Grid is ``(S,)`` — one program per stream lane; every operand block is one
+stream's data, so the whole working set (frame + reference + both outputs,
+~50 KB at 64x64x3 fp32) is VMEM-resident for the life of the program.
+Resampling is expressed as two one-hot / box-weight matmuls (``P_y @ X @
+P_x^T``) so it runs on the MXU and — for ``method="nearest"`` — is
+bit-identical to the gather in ``models.vision.downscale`` (a one-hot matmul
+adds exact zeros).  Block-SAD uses 0/1 block-membership matmuls followed by a
+division by the per-block valid-pixel count, so H, W need not divide
+``block`` (pad-and-mask semantics, matching ``ref.block_sad_ref``).
+
+Host/XLA split assumption
+-------------------------
+The host owns stream lifecycle, backlog deques and the admission *decision*
+(adaptive thresholds are tiny scalar state, host-side in ``MotionGate``); the
+device owns everything O(pixels): normalize, resample, score, scatter.  The
+engine stages frames into a pinned host buffer and ships one (S, H, W, C)
+array per tick; only the (S,) score vector crosses back before the admit
+mask returns for ``scatter_admit``.  Frames are assumed to arrive at engine
+frame resolution (small, e.g. 64x64) — decode/crop from camera-native
+resolution happens upstream, so per-program VMEM stays far under budget.
+
+``interpret=None`` auto-selects interpreter mode off-TPU: this container is
+CPU-only, so the tier-1 parity suite (``tests/test_vision_kernels.py``)
+executes the kernel bodies interpreted against ``ref.py`` goldens; on TPU the
+same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+METHODS = ("nearest", "box")
+
+
+def default_interpret() -> bool:
+    """Pallas interpreter mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _norm_scale(dtype) -> float:
+    return 1.0 / 255.0 if dtype == jnp.uint8 else 1.0
+
+
+def _resample_weights(n_out: int, n_in: int, method: str) -> jax.Array:
+    """(n_out, n_in) resampling matrix: one-hot rows (nearest) or box rows
+    averaging ``[i*n_in//n_out, (i+1)*n_in//n_out)`` (rows sum to 1)."""
+    i = jax.lax.broadcasted_iota(jnp.int32, (n_out, n_in), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n_out, n_in), 1)
+    if method == "nearest":
+        return (j == (i * n_in) // n_out).astype(jnp.float32)
+    lo = (i * n_in) // n_out
+    hi = ((i + 1) * n_in) // n_out
+    w = ((j >= lo) & (j < hi)).astype(jnp.float32)
+    return w / (hi - lo).astype(jnp.float32)
+
+
+def _block_weights(n: int, block: int):
+    """0/1 membership matrix (nb, n) for fixed-size blocks (last partial)
+    plus the per-block valid count (nb,) — pad-and-mask block means."""
+    nb = pl.cdiv(n, block)
+    i = jax.lax.broadcasted_iota(jnp.int32, (nb, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (nb, n), 1)
+    w = ((j >= i * block) & (j < (i + 1) * block)).astype(jnp.float32)
+    k = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)       # TPU: 2D iota
+    cnt = jnp.minimum(block, n - k * block).astype(jnp.float32)
+    return w, cnt
+
+
+def _mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _resample(x: jax.Array, wy: jax.Array, wx: jax.Array) -> jax.Array:
+    """(H, W, C) -> (m, n, C) via two MXU matmuls: wy @ x then wx @ x^T."""
+    H, W, C = x.shape
+    m, n = wy.shape[0], wx.shape[0]
+    t = _mm(wy, x.reshape(H, W * C))                       # (m, W*C)
+    t = t.reshape(m, W, C).swapaxes(0, 1).reshape(W, m * C)
+    t = _mm(wx, t)                                         # (n, m*C)
+    return t.reshape(n, m, C).swapaxes(0, 1)               # (m, n, C)
+
+
+def _sad_score(small: jax.Array, ref: jax.Array, block: int) -> jax.Array:
+    """Max block mean-absolute-difference of two (g, g, C) frames."""
+    g = small.shape[0]
+    d = jnp.abs(small - ref.astype(jnp.float32)).mean(axis=-1)   # (g, g)
+    wb, cnt = _block_weights(g, block)                       # cnt: (nb, 1)
+    sums = _mm(_mm(wb, d), wb.swapaxes(0, 1))
+    # wb @ d @ wb^T sums each block; divide by the valid-pixel count so a
+    # partial edge block averages only real pixels (pad-and-mask)
+    return jnp.max(sums / (cnt * cnt.swapaxes(0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+def _ingest_kernel(frames_ref, refs_ref, model_out, gate_out, score_out, *,
+                   scale: float, method: str, block: int,
+                   model_res: int, gate_res: int):
+    x = frames_ref[0].astype(jnp.float32) * scale
+    H, W, _ = x.shape
+    model = _resample(x, _resample_weights(model_res, H, method),
+                      _resample_weights(model_res, W, method))
+    small = _resample(x, _resample_weights(gate_res, H, method),
+                      _resample_weights(gate_res, W, method))
+    model_out[0] = model
+    gate_out[0] = small
+    score_out[0, 0] = _sad_score(small, refs_ref[0], block)
+
+
+def _downscale_kernel(frames_ref, out_ref, *, scale: float, method: str,
+                      res: int):
+    x = frames_ref[0].astype(jnp.float32) * scale
+    H, W, _ = x.shape
+    out_ref[0] = _resample(x, _resample_weights(res, H, method),
+                           _resample_weights(res, W, method))
+
+
+def _block_sad_kernel(refs_ref, frames_ref, score_out, *, block: int):
+    score_out[0, 0] = _sad_score(frames_ref[0].astype(jnp.float32),
+                                 refs_ref[0], block)
+
+
+def _scatter_kernel(admit_ref, batch_ref, model_ref, refs_ref, gate_ref,
+                    batch_out, refs_out):
+    take = admit_ref[0, 0] != 0
+    batch_out[0] = jnp.where(take, model_ref[0].astype(batch_out.dtype),
+                             batch_ref[0])
+    refs_out[0] = jnp.where(take, gate_ref[0].astype(refs_out.dtype),
+                            refs_ref[0])
+
+
+# ---------------------------------------------------------------------------
+# jit'd wrappers (grid = (S,): one program per stream lane)
+# ---------------------------------------------------------------------------
+
+
+def _row(shape):
+    """BlockSpec for one stream's row of an (S, ...) operand."""
+    return pl.BlockSpec((1,) + tuple(shape), lambda s: (s,) + (0,) * len(shape))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model_res", "gate_res", "block", "method", "interpret"))
+def _ingest_frame_jit(frames, refs, *, model_res, gate_res, block, method,
+                      interpret):
+    S, H, W, C = frames.shape
+    g = refs.shape[1]
+    kernel = functools.partial(
+        _ingest_kernel, scale=_norm_scale(frames.dtype), method=method,
+        block=block, model_res=model_res, gate_res=gate_res)
+    model, gate, score = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[_row((H, W, C)), _row((g, g, C))],
+        out_specs=(_row((model_res, model_res, C)),
+                   _row((gate_res, gate_res, C)),
+                   pl.BlockSpec((1, 1), lambda s: (s, 0))),
+        out_shape=(jax.ShapeDtypeStruct((S, model_res, model_res, C),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((S, gate_res, gate_res, C),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((S, 1), jnp.float32)),
+        interpret=interpret,
+    )(frames, refs)
+    return model, gate, score[:, 0]
+
+
+def ingest_frame(frames: jax.Array, refs: jax.Array, *, model_res: int,
+                 gate_res: int, block: int = 8, method: str = "nearest",
+                 interpret: bool | None = None):
+    """Fused ingest: (S,H,W,C) frames + (S,g,g,C) refs ->
+    (model (S,m,m,C) fp32, gate (S,g,g,C) fp32, scores (S,) fp32)."""
+    # box feasibility must hold for BOTH output resolutions: an upsampling
+    # box bucket is empty and would emit NaN, not raise
+    _check(frames, method, max(model_res, gate_res))
+    assert refs.shape[1] == refs.shape[2] == gate_res, (refs.shape, gate_res)
+    return _ingest_frame_jit(
+        frames, refs, model_res=model_res, gate_res=gate_res, block=block,
+        method=method,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("res", "method", "interpret"))
+def _downscale_jit(frames, *, res, method, interpret):
+    S, H, W, C = frames.shape
+    kernel = functools.partial(_downscale_kernel,
+                               scale=_norm_scale(frames.dtype),
+                               method=method, res=res)
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[_row((H, W, C))],
+        out_specs=_row((res, res, C)),
+        out_shape=jax.ShapeDtypeStruct((S, res, res, C), jnp.float32),
+        interpret=interpret,
+    )(frames)
+
+
+def downscale(frames: jax.Array, res: int, *, method: str = "nearest",
+              interpret: bool | None = None) -> jax.Array:
+    """(S, H, W, C) -> (S, res, res, C) fp32 normalized resample."""
+    _check(frames, method, res)
+    return _downscale_jit(
+        frames, res=res, method=method,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _block_sad_jit(refs, frames, *, block, interpret):
+    S, H, W, C = frames.shape
+    kernel = functools.partial(_block_sad_kernel, block=block)
+    score = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[_row((H, W, C)), _row((H, W, C))],
+        out_specs=pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        interpret=interpret,
+    )(refs, frames)
+    return score[:, 0]
+
+
+def block_sad(refs: jax.Array, frames: jax.Array, block: int = 8, *,
+              interpret: bool | None = None) -> jax.Array:
+    """Per-stream max block-MAD of (S,H,W,C) frames vs refs -> (S,) fp32."""
+    assert refs.shape == frames.shape, (refs.shape, frames.shape)
+    return _block_sad_jit(
+        refs, frames, block=block,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _scatter_admit_jit(batch, model, refs, gate, admit, *, interpret):
+    S = batch.shape[0]
+    bshape, gshape = batch.shape[1:], refs.shape[1:]
+    admit2d = admit.astype(jnp.int32).reshape(S, 1)
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, 1), lambda s: (s, 0)),
+                  _row(bshape), _row(bshape), _row(gshape), _row(gshape)],
+        out_specs=(_row(bshape), _row(gshape)),
+        out_shape=(jax.ShapeDtypeStruct(batch.shape, batch.dtype),
+                   jax.ShapeDtypeStruct(refs.shape, refs.dtype)),
+        # a TPU deployment would add input_output_aliases={1: 0, 3: 1} to
+        # update the batch pool in place; kept copying here so callers (and
+        # the parity harness) may reuse their inputs after the call
+        interpret=interpret,
+    )(admit2d, batch, model, refs, gate)
+
+
+def scatter_admit(batch: jax.Array, model: jax.Array, refs: jax.Array,
+                  gate: jax.Array, admit: jax.Array, *,
+                  interpret: bool | None = None):
+    """Masked admission scatter: rows of ``admit`` adopt the new model frame
+    in ``batch`` and the new gate frame in ``refs``; gated rows keep both.
+    Returns (batch', refs')."""
+    assert batch.shape == model.shape, (batch.shape, model.shape)
+    assert refs.shape == gate.shape, (refs.shape, gate.shape)
+    return _scatter_admit_jit(
+        batch, model, refs, gate, admit,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+def _check(frames, method, res):
+    assert frames.ndim == 4, frames.shape
+    assert method in METHODS, method
+    if method == "box":
+        # box buckets [i*H//res, (i+1)*H//res) are empty when upsampling
+        assert res <= frames.shape[1] and res <= frames.shape[2], \
+            (res, frames.shape)

@@ -243,9 +243,24 @@ def model_flops(cfg: VisionConfig) -> float:
 # ---------------------------------------------------------------------------
 
 
-def downscale(frames: jax.Array, res: int) -> jax.Array:
+def downscale(frames: jax.Array, res: int, *, use_pallas: bool = False,
+              method: str = "nearest", interpret=None) -> jax.Array:
     """(B, H, W, 3) -> (B, res, res, 3) nearest-neighbour (cheap, like the
-    paper's Bitmap scaling)."""
+    paper's Bitmap scaling).
+
+    ``use_pallas`` dispatches to the ``kernels.vision_ops`` resample kernel
+    (normalized fp32 out; bit-identical to the gather for fp32 inputs and
+    ``method="nearest"``, box filtering also available); the default jnp
+    gather keeps the model jits self-contained.
+    """
+    if use_pallas:
+        from repro.kernels import vision_ops
+        return vision_ops.downscale(frames, res, method=method,
+                                    interpret=interpret)
+    # the jnp gather is nearest-only: refuse rather than silently aliasing
+    # when a caller asked for box filtering without the kernel path
+    assert method == "nearest", \
+        f"method={method!r} requires use_pallas=True (kernels.vision_ops)"
     B, H, W, _ = frames.shape
     ys = (jnp.arange(res) * H // res)
     xs = (jnp.arange(res) * W // res)

@@ -14,7 +14,11 @@ Design:
     stream's last-admitted reference at a small gate resolution; the score
     is the *maximum block* mean-absolute-difference, so a pedestrian
     entering one corner of an otherwise static scene still trips the gate
-    (a full-frame mean would wash it out).
+    (a full-frame mean would wash it out).  Edge blocks are pad-and-masked,
+    so arbitrary gate resolutions work; ``use_pallas=True`` dispatches to
+    the fused ``repro.kernels.vision_ops`` kernel (the engine's hot path
+    fuses downscale+normalize+score via ``vision_ops.ingest_frame`` and
+    feeds the scores straight into :meth:`MotionGate.decide`).
   * :class:`MotionGate` — per-engine state: one reference frame and one
     adaptive threshold per slot.  Everything device-side is fixed-shape
     (``(slots, gate_res, gate_res, 3)``) with boolean masks, mirroring the
@@ -44,18 +48,50 @@ from repro.core.early_stop import EWMA
 from repro.models.vision import downscale
 
 
+def _normalize(frames: jax.Array) -> jax.Array:
+    """fp32 in [0,1]: uint8 frames scale by 1/255 (same rule as the fused
+    kernel and the ref goldens, so use_pallas on/off score identically)."""
+    x = frames.astype(jnp.float32)
+    if frames.dtype == jnp.uint8:
+        x = x * (1.0 / 255.0)
+    return x
+
+
+# NOTE: deliberately mirrors (not imports) ref.block_sad_ref — the goldens
+# stay independent of every production path so a shared bug cannot hide;
+# tests/test_vision_kernels.py pins this copy to the golden.
 @partial(jax.jit, static_argnames=("block",))
-def block_sad(ref: jax.Array, frames: jax.Array, block: int = 8) -> jax.Array:
+def _block_sad_jnp(ref: jax.Array, frames: jax.Array, block: int) -> jax.Array:
+    S, H, W, _ = frames.shape
+    # cast before subtracting: uint8 difference would wrap modulo 256
+    d = jnp.abs(frames.astype(jnp.float32)
+                - ref.astype(jnp.float32)).mean(axis=-1)       # (S, H, W)
+    nh, nw = -(-H // block), -(-W // block)
+    # pad-and-mask: arbitrary gate resolutions work; partial edge blocks
+    # average only their valid pixels (zero-padded sums / true counts)
+    d = jnp.pad(d, ((0, 0), (0, nh * block - H), (0, nw * block - W)))
+    sums = d.reshape(S, nh, block, nw, block).sum(axis=(2, 4))
+    cnt_h = np.minimum(block, H - np.arange(nh) * block)
+    cnt_w = np.minimum(block, W - np.arange(nw) * block)
+    counts = jnp.asarray(np.outer(cnt_h, cnt_w), jnp.float32)
+    return (sums / counts).reshape(S, -1).max(axis=-1)
+
+
+def block_sad(ref: jax.Array, frames: jax.Array, block: int = 8, *,
+              use_pallas: bool = False,
+              interpret: Optional[bool] = None) -> jax.Array:
     """Per-stream motion score: max block mean-absolute-difference.
 
-    ref/frames: (S, H, W, C) with H, W divisible by ``block``.
-    Returns (S,) float32 in [0, 1] for [0, 1]-ranged inputs.
+    ref/frames: (S, H, W, C); H, W need NOT divide ``block`` (edge blocks
+    average their valid pixels only).  Returns (S,) float32 in [0, 1] for
+    [0, 1]-ranged inputs.  ``use_pallas`` dispatches to the fused kernel in
+    ``repro.kernels.vision_ops`` (interpret-mode fallback off-TPU).
     """
-    S, H, W, _ = frames.shape
-    d = jnp.abs(frames - ref).mean(axis=-1)                    # (S, H, W)
-    blocks = d.reshape(S, H // block, block, W // block, block)
-    per_block = blocks.mean(axis=(2, 4))                       # (S, nb, nb)
-    return per_block.reshape(S, -1).max(axis=-1)
+    if use_pallas:
+        from repro.kernels import vision_ops
+        return vision_ops.block_sad(ref, frames, block=block,
+                                    interpret=interpret)
+    return _block_sad_jnp(ref, frames, block)
 
 
 @jax.jit
@@ -84,8 +120,10 @@ class MotionGate:
                  target_skip: Tuple[float, float] = (0.05, 0.7),
                  step: float = 0.002, decay: float = 0.85,
                  window: int = 16, alpha: float = 0.2,
-                 thresh_floor: float = 1e-3) -> None:
-        assert gate_res % block == 0, (gate_res, block)
+                 thresh_floor: float = 1e-3, thresh_ceil: float = 1.0,
+                 use_pallas: bool = False) -> None:
+        assert thresh_floor <= init_thresh <= thresh_ceil, \
+            (thresh_floor, init_thresh, thresh_ceil)
         self.slots = slots
         self.gate_res = gate_res
         self.block = block
@@ -94,7 +132,9 @@ class MotionGate:
         self.decay = decay
         self.window = window
         self.thresh_floor = thresh_floor
+        self.thresh_ceil = thresh_ceil
         self.init_thresh = init_thresh
+        self.use_pallas = use_pallas
         self.refs = jnp.zeros((slots, gate_res, gate_res, 3), jnp.float32)
         self.has_ref = np.zeros(slots, bool)
         self.thresh = np.full(slots, init_thresh, np.float32)
@@ -139,14 +179,28 @@ class MotionGate:
         Returns (slots,) bool admit mask (subset of ``active``) and updates
         references, thresholds, and stats.
         """
-        small = downscale(frames.astype(jnp.float32), self.gate_res)
-        scores = np.asarray(block_sad(self.refs, small, self.block))
+        if self.use_pallas:
+            from repro.kernels import vision_ops
+            small = vision_ops.downscale(frames, self.gate_res)
+            scores = np.asarray(vision_ops.block_sad(self.refs, small,
+                                                     block=self.block))
+        else:
+            small = downscale(_normalize(frames), self.gate_res)
+            scores = np.asarray(block_sad(self.refs, small, self.block))
+        admit = self.decide(scores, active)
+        self.refs = _gate_update(self.refs, small, jnp.asarray(admit))
+        return admit
+
+    def decide(self, scores: np.ndarray, active: np.ndarray) -> np.ndarray:
+        """Threshold the motion scores into an admit mask and run the AIMD
+        controller + stats.  Does NOT refresh references — callers that own
+        the gate-resolution frames (the engine's fused ``ingest_frame`` +
+        ``scatter_admit`` path) commit them in the same device pass; the
+        legacy :meth:`admit` path commits via :func:`_gate_update`."""
         moving = scores > self.thresh
         # first frame of a stream always admits (no reference yet)
         admit = active & (moving | ~self.has_ref)
-        self.refs = _gate_update(self.refs, small,
-                                 jnp.asarray(admit))
-        self.has_ref |= admit
+        self.has_ref = self.has_ref | admit
         self._adapt(active, admit)
         n_act, n_adm = int(active.sum()), int(admit.sum())
         self.stats.offered += n_act
@@ -173,7 +227,11 @@ class MotionGate:
                                      self.thresh_floor)
                 self._since_adapt[s] = 0
             elif skip < lo:
-                self.thresh[s] += self.step           # admitting duplicates
+                # admitting duplicates: raise, bounded by the ceiling (a
+                # score can never exceed the frame value range, so an
+                # unbounded threshold would gate everything forever)
+                self.thresh[s] = min(self.thresh[s] + self.step,
+                                     self.thresh_ceil)
                 self._since_adapt[s] = 0
 
     def similar(self) -> "MotionGate":
@@ -183,4 +241,6 @@ class MotionGate:
                           target_skip=self.target_skip, step=self.step,
                           decay=self.decay, window=self.window,
                           alpha=self.skip_ewma[0].alpha,
-                          thresh_floor=self.thresh_floor)
+                          thresh_floor=self.thresh_floor,
+                          thresh_ceil=self.thresh_ceil,
+                          use_pallas=self.use_pallas)

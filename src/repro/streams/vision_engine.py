@@ -9,6 +9,15 @@
     for outer streams, pose for inner) with ``dynamic_update_slice`` at the
     lane index, so the engine compiles each program exactly once and never
     recompiles regardless of which lanes are live on a given tick;
+  * ``use_pallas=True`` swaps the ingest stage for the fused
+    ``kernels.vision_ops`` path: frames stage into a pinned host buffer,
+    one ``ingest_frame`` kernel pass normalizes + downscales to model AND
+    gate resolution + scores block-SAD, the host thresholds the (slots,)
+    scores (``MotionGate.decide``), and one ``scatter_admit`` pass writes
+    admitted rows into the batch and refreshes gate references — replacing
+    the per-lane ``dynamic_update_slice`` loop and three jnp passes; the
+    batch pool then holds model-resolution frames (the model jit's internal
+    downscale degenerates to identity), same never-recompile contract;
   * outer/hazard streams pre-empt inner/distraction streams: they jump the
     binding queue and, when every lane is taken, evict the most recently
     bound inner stream (hazards outrank distraction — paper §3.2.5);
@@ -88,12 +97,16 @@ class VisionServeEngine:
                  frame_res: int = 64, input_res: int = 48,
                  fps: int = 30, eda: Optional[EDAConfig] = None,
                  gate: Optional[MotionGate] = None, use_gate: bool = True,
+                 use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None,
                  max_pending: int = 256, quantum: int = 32,
                  ledger: Optional[Ledger] = None,
                  rng: Optional[jax.Array] = None) -> None:
         self.name = name
         self.slots = slots
         self.frame_res = frame_res
+        self.input_res = input_res
+        self.use_pallas = use_pallas
         self.fps = fps
         self.eda = eda or EDAConfig()
         self.policy = EarlyStopPolicy(esd=self.eda.esd)
@@ -108,9 +121,26 @@ class VisionServeEngine:
         self.dp = V.init_detector(self.dc, r1)
         self.pp = V.init_pose(self.pc, r2)
 
-        shape = (slots, frame_res, frame_res, 3)
+        # fused-ingest path: the batch pool holds model-resolution frames
+        # (ingest_frame emits them); legacy path stages at frame resolution
+        # and lets the model jit downscale internally
+        res = input_res if use_pallas else frame_res
+        shape = (slots, res, res, 3)
         self.batches = {OUTER: jnp.zeros(shape, jnp.float32),
                         INNER: jnp.zeros(shape, jnp.float32)}
+        if use_pallas:
+            from repro.kernels import vision_ops
+            self._vk = vision_ops
+            self._interpret = (vision_ops.default_interpret()
+                               if pallas_interpret is None
+                               else pallas_interpret)
+            # pinned host staging buffer: lanes write rows, one device
+            # transfer per tick; stale inactive rows are masked by `active`
+            self._stage = np.zeros((slots, frame_res, frame_res, 3),
+                                   np.float32)
+            # gateless scatter still flows through scatter_admit; it needs a
+            # (fixed-shape) reference operand even when no gate holds one
+            self._null_refs = jnp.zeros((slots, 1, 1, 3), jnp.float32)
         # one gate per model class: lanes are disjoint per stream, but the
         # two classes dispatch separately and keep separate stats; a custom
         # gate's configuration applies to both classes
@@ -379,15 +409,22 @@ class VisionServeEngine:
             self._trim_to_deadline(st)
             frame = st.pending.popleft()
             st.served_since_bind += 1      # gated frames consume quantum too
-            batch = _load_frame(batch, jnp.asarray(frame, jnp.float32),
-                                jnp.int32(lane))
+            if self.use_pallas:
+                self._stage[lane] = frame
+            else:
+                batch = _load_frame(batch, jnp.asarray(frame, jnp.float32),
+                                    jnp.int32(lane))
             active[lane] = True
-        self.batches[kind] = batch
         if not active.any():
+            self.batches[kind] = batch
             return 0
 
         gate = self.gates[kind]
-        admit = gate.admit(batch, active) if gate is not None else active
+        if self.use_pallas:
+            batch, admit = self._ingest_pallas(batch, gate, active)
+        else:
+            admit = gate.admit(batch, active) if gate is not None else active
+        self.batches[kind] = batch
         for lane in np.nonzero(active & ~admit)[0]:
             self.lanes[lane].gated += 1
 
@@ -416,6 +453,30 @@ class VisionServeEngine:
             self.results[st.key].append(flag)
         self.frames_processed += n_admit
         return n_admit
+
+    def _ingest_pallas(self, batch: jax.Array, gate: Optional[MotionGate],
+                       active: np.ndarray):
+        """Fused ingest tick: one kernel pass scores + downscales the staged
+        frames, the host thresholds, one masked scatter commits admitted
+        rows into the batch and the gate references."""
+        staged = jnp.asarray(self._stage)
+        if gate is not None:
+            model, small, scores = self._vk.ingest_frame(
+                staged, gate.refs, model_res=self.input_res,
+                gate_res=gate.gate_res, block=gate.block,
+                interpret=self._interpret)
+            admit = gate.decide(np.asarray(scores), active)
+            batch, gate.refs = self._vk.scatter_admit(
+                batch, model, gate.refs, small, jnp.asarray(admit),
+                interpret=self._interpret)
+        else:
+            model = self._vk.downscale(staged, self.input_res,
+                                       interpret=self._interpret)
+            admit = active
+            batch, _ = self._vk.scatter_admit(
+                batch, model, self._null_refs, self._null_refs,
+                jnp.asarray(admit), interpret=self._interpret)
+        return batch, admit
 
     def drain(self, max_ticks: int = 100_000) -> int:
         """Step until every backlog is empty.  Returns frames processed."""

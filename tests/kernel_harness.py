@@ -1,0 +1,91 @@
+"""Reusable differential-parity harness: Pallas kernels vs pure-jnp goldens.
+
+Every kernel PR gets parity coverage from the same three pieces:
+
+  * :class:`ParityCase` — one named comparison: a kernel callable, its
+    golden from ``repro.kernels.ref``, concrete inputs, and shared kwargs.
+    ``kernel_kwargs`` carries kernel-only arguments (``interpret=True`` in
+    this CPU container).
+  * :func:`assert_parity` — runs both sides, checks the output pytrees have
+    the same structure/shapes/dtypes, and asserts allclose with a per-input-
+    dtype tolerance (fp32-tight, bf16-loose) unless the case overrides it.
+  * :func:`ids` — stable pytest parametrize ids from the case names.
+
+Typical use (see ``tests/test_vision_kernels.py``):
+
+    CASES = [ParityCase("ingest_f32", vision_ops.ingest_frame,
+                        ref.ingest_frame_ref, (frames, refs),
+                        kwargs=dict(model_res=48, gate_res=32)), ...]
+
+    @pytest.mark.parametrize("case", CASES, ids=ids(CASES))
+    def test_parity(case):
+        assert_parity(case)
+
+Cases are built with concrete arrays (seeded here via :func:`tensor`) so a
+failure reproduces exactly; sweeps are expressed as case lists, not hidden
+random loops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TIGHT = dict(rtol=2e-5, atol=2e-5)
+LOOSE = dict(rtol=2e-2, atol=2e-2)
+
+_RNG = np.random.default_rng(1234)
+
+
+def tensor(*shape, dtype=jnp.float32, lo=0.0, hi=1.0) -> jax.Array:
+    """Seeded test tensor in [lo, hi); uint8 draws the full byte range."""
+    if dtype == jnp.uint8:
+        return jnp.asarray(_RNG.integers(0, 256, shape), jnp.uint8)
+    return jnp.asarray(_RNG.uniform(lo, hi, shape), dtype)
+
+
+def default_tol(*arrays) -> Dict[str, float]:
+    """bf16 anywhere in the inputs -> loose tolerance, else fp32-tight."""
+    leaves = jax.tree_util.tree_leaves(arrays)
+    if any(getattr(a, "dtype", None) == jnp.bfloat16 for a in leaves):
+        return LOOSE
+    return TIGHT
+
+
+@dataclass
+class ParityCase:
+    name: str
+    kernel: Callable
+    ref: Callable
+    args: Tuple
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    kernel_kwargs: Dict[str, Any] = field(default_factory=dict)
+    tol: Optional[Dict[str, float]] = None        # None -> per-dtype default
+
+    def tolerance(self) -> Dict[str, float]:
+        return self.tol if self.tol is not None else default_tol(*self.args)
+
+
+def assert_parity(case: ParityCase) -> None:
+    got = case.kernel(*case.args, **case.kwargs, **case.kernel_kwargs)
+    want = case.ref(*case.args, **case.kwargs)
+    got_l, got_tree = jax.tree_util.tree_flatten(got)
+    want_l, want_tree = jax.tree_util.tree_flatten(want)
+    assert got_tree == want_tree, \
+        f"{case.name}: output structure {got_tree} != golden {want_tree}"
+    tol = case.tolerance()
+    for i, (g, w) in enumerate(zip(got_l, want_l)):
+        assert g.shape == w.shape, \
+            f"{case.name}[{i}]: shape {g.shape} != {w.shape}"
+        assert g.dtype == w.dtype, \
+            f"{case.name}[{i}]: dtype {g.dtype} != {w.dtype}"
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            err_msg=f"{case.name}[{i}]", **tol)
+
+
+def ids(cases: Sequence[ParityCase]):
+    return [c.name for c in cases]

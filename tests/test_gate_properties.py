@@ -1,0 +1,115 @@
+"""Property tests for the MotionGate AIMD threshold controller.
+
+Runs under real ``hypothesis`` when installed, else the vendored
+deterministic fallback (``tests/_hypothesis_stub.py``).  Three properties:
+
+  * bounds     — whatever the skip pattern, every per-lane threshold stays
+                 inside [thresh_floor, thresh_ceil];
+  * monotone   — a lane observing a higher skip fraction ends with a
+                 threshold no higher than a lane observing a lower one
+                 (decay pushes down, additive raise pushes up);
+  * converge   — on a synthetic stationary scene (fixed frame + sensor
+                 noise) the controller steers the realised skip fraction
+                 into the ``target_skip`` band from any starting threshold.
+
+The controller is driven through :meth:`MotionGate.decide` with synthetic
+score streams (the seam the engine's fused Pallas ingest path uses), except
+the convergence property which exercises the full :meth:`admit` path on
+frames.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                # pragma: no cover
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.streams import MotionGate
+
+
+def _drive(gate: MotionGate, skip_fraction: float, n: int) -> None:
+    """Feed a deterministic skip pattern at the given fraction: scores of
+    0.0 (certain skip once a reference exists) or 2.0 (certain admit)."""
+    active = np.array([True])
+    gate.decide(np.array([2.0], np.float32), active)     # establish ref
+    err = 0.0
+    for _ in range(n):
+        err += skip_fraction
+        skip = err >= 1.0
+        if skip:
+            err -= 1.0
+        gate.decide(np.array([0.0 if skip else 2.0], np.float32), active)
+
+
+@settings(max_examples=20)
+@given(init=st.floats(min_value=0.01, max_value=0.9),
+       window=st.integers(min_value=1, max_value=32),
+       frac=st.floats(min_value=0.0, max_value=1.0))
+def test_threshold_always_within_floor_and_ceiling(init, window, frac):
+    gate = MotionGate(slots=1, init_thresh=init, window=window,
+                      step=0.05, decay=0.5,
+                      thresh_floor=1e-3, thresh_ceil=0.95)
+    active = np.array([True])
+    rng = np.random.default_rng(7)
+    for i in range(200):
+        score = 2.0 if rng.random() > frac else 0.0
+        gate.decide(np.array([score], np.float32), active)
+        t = float(gate.thresh[0])
+        assert gate.thresh_floor <= t <= gate.thresh_ceil, (i, t)
+
+
+@settings(max_examples=15)
+@given(init=st.floats(min_value=0.05, max_value=0.5),
+       window=st.integers(min_value=2, max_value=8))
+def test_threshold_monotone_in_skip_fraction(init, window):
+    """skip 0.9 (above band) must end at or below skip 0.4 (in band) which
+    must end at or below skip 0.0 (below band): AIMD direction is monotone
+    in the observed skip fraction."""
+    fracs = (0.9, 0.4, 0.0)                # band is (0.05, 0.7)
+    final = []
+    for frac in fracs:
+        gate = MotionGate(slots=1, init_thresh=init, window=window,
+                          alpha=0.3, step=0.002, decay=0.85)
+        _drive(gate, frac, n=40 * window)
+        final.append(float(gate.thresh[0]))
+    assert final[0] <= final[1] <= final[2], dict(zip(fracs, final))
+    assert final[0] < final[2]             # extremes strictly separated
+
+
+@settings(max_examples=5)
+@given(init=st.floats(min_value=0.001, max_value=0.3),
+       seed=st.integers(min_value=0, max_value=3))
+def test_converges_into_target_skip_band_on_stationary_scene(init, seed):
+    """A parked vehicle (fixed scene + sensor noise) must settle with its
+    realised skip fraction inside the target band — neither admitting every
+    noise frame nor gating forever."""
+    lo, hi = 0.2, 0.6
+    gate = MotionGate(slots=1, init_thresh=max(init, 1e-3), window=4,
+                      step=0.01, decay=0.7, alpha=0.3, target_skip=(lo, hi))
+    rng = np.random.default_rng(seed)
+    base = rng.random((1, 64, 64, 3)).astype(np.float32)
+    active = np.array([True])
+    admits = []
+    for _ in range(400):
+        noise = rng.uniform(-0.05, 0.05, base.shape).astype(np.float32)
+        frame = jnp.asarray(np.clip(base + noise, 0.0, 1.0))
+        admits.append(bool(gate.admit(frame, active)[0]))
+    tail_skip = 1.0 - np.mean(admits[-120:])
+    assert lo - 0.15 <= tail_skip <= hi + 0.15, tail_skip
+    assert float(gate.thresh[0]) >= gate.thresh_floor
+
+
+def test_ceiling_clamps_additive_raise():
+    """A lane admitting everything raises its threshold but never past the
+    configured ceiling."""
+    gate = MotionGate(slots=1, init_thresh=0.05, window=1, step=0.2,
+                      thresh_ceil=0.3)
+    _drive(gate, 0.0, n=50)                # all admits -> raise every window
+    assert float(gate.thresh[0]) == pytest.approx(0.3)
+
+
+def test_gate_rejects_inconsistent_threshold_bounds():
+    with pytest.raises(AssertionError):
+        MotionGate(slots=1, init_thresh=0.5, thresh_ceil=0.2)

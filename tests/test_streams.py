@@ -48,6 +48,24 @@ def test_block_sad_detects_localised_motion():
     assert score > 10 * full_mean
 
 
+def test_block_sad_pads_and_masks_arbitrary_resolution():
+    """30x30 frames with block=8 (regression: H, W used to need to divide
+    ``block``): partial edge blocks must average only their valid pixels."""
+    x = jnp.asarray(_frames(2, res=30))
+    np.testing.assert_allclose(np.asarray(block_sad(x, x, block=8)), 0.0,
+                               atol=1e-7)
+    # a patch exactly filling the 6x6 bottom-right partial block scores 1.0;
+    # dividing by the full 8x8 block area would dilute it to 36/64
+    ref = jnp.zeros((1, 30, 30, 3))
+    cur = ref.at[0, 24:, 24:, :].set(1.0)
+    assert float(block_sad(ref, cur, block=8)[0]) == pytest.approx(1.0)
+    # ...and a MotionGate at a non-divisible gate resolution works end to end
+    gate = MotionGate(slots=1, gate_res=30, block=8)
+    frames = jnp.asarray(_frames(1, res=64))
+    assert gate.admit(frames, np.array([True])).tolist() == [True]
+    assert gate.admit(frames, np.array([True])).tolist() == [False]
+
+
 def test_gate_admits_first_frame_then_blocks_duplicates():
     gate = MotionGate(slots=2, init_thresh=0.02)
     frames = jnp.asarray(_frames(2, res=64))
@@ -328,6 +346,81 @@ def test_engine_never_recompiles_across_occupancy_patterns():
 def V_cache_size():
     from repro.models import vision as V
     return (V.analyse_outer._cache_size() + V.analyse_inner._cache_size())
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas ingest path
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_engine_matches_jnp_engine_end_to_end():
+    """use_pallas on/off must agree on every admit decision, gated count and
+    danger flag — the fused kernel path is a pure implementation swap."""
+    rng = np.random.default_rng(3)
+    clips = {k: rng.random((8, 64, 64, 3)).astype(np.float32)
+             for k in ("a", "b")}
+    for k in clips:                               # duplicates exercise gate
+        clips[k][3] = clips[k][2]
+    outcomes = {}
+    for use_pallas in (False, True):
+        eng = _engine(slots=2, use_gate=True, use_pallas=use_pallas)
+        eng.open_stream("a", OUTER)
+        eng.open_stream("b", INNER)
+        for i in range(8):
+            for k in clips:
+                eng.push(k, clips[k][i])
+        done = eng.drain()
+        outcomes[use_pallas] = (
+            done,
+            {k: (eng.streams[k].processed, eng.streams[k].gated,
+                 list(eng.results[k])) for k in clips})
+    assert outcomes[False] == outcomes[True]
+    assert outcomes[True][1]["a"][1] > 0          # the gate actually fired
+
+
+def test_pallas_engine_gateless_path_processes_all_frames():
+    eng = _engine(slots=2, use_pallas=True)       # use_gate=False default
+    eng.open_stream("a", OUTER)
+    for f in _frames(5, seed=1):
+        eng.push("a", f)
+    assert eng.drain() == 5
+    assert eng.streams["a"].processed == 5
+
+
+def test_engine_never_recompiles_across_pallas_paths():
+    """The never-recompile contract extends to the fused path: after one
+    warm tick per (path, class), lane bind/evict churn and further ticks
+    must add zero jit cache entries on the model jits AND the kernel jits."""
+    from repro.kernels import vision_ops as vk
+
+    def kernel_cache_size():
+        return (vk._ingest_frame_jit._cache_size()
+                + vk._scatter_admit_jit._cache_size()
+                + vk._downscale_jit._cache_size())
+
+    engines = {up: _engine(slots=3, use_gate=True, use_pallas=up)
+               for up in (False, True)}
+    for eng in engines.values():                  # warm both classes
+        eng.open_stream("o0", OUTER)
+        eng.open_stream("i0", INNER)
+        for key, seed in (("o0", 1), ("i0", 2)):
+            eng.push(key, _frames(1, seed=seed)[0])
+        eng.step()
+    n_model, n_kernel = V_cache_size(), kernel_cache_size()
+
+    for eng in engines.values():                  # churn: bind/evict/rotate
+        eng.open_stream("o1", OUTER)
+        eng.open_stream("i1", INNER)
+        eng.open_stream("i2", INNER)              # waits, then evicted about
+        for tick in range(3):
+            for key, seed in (("o0", 3), ("o1", 4), ("i0", 5), ("i1", 6)):
+                eng.push(key, _frames(1, seed=seed + tick)[0])
+            eng.step()
+        eng.close_stream("o0")
+        eng.push("i2", _frames(1, seed=9)[0])
+        eng.step()
+    assert V_cache_size() == n_model
+    assert kernel_cache_size() == n_kernel
 
 
 # ---------------------------------------------------------------------------

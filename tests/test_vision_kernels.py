@@ -1,0 +1,237 @@
+"""Differential parity: vision_ops Pallas kernels (interpret) vs ref goldens.
+
+Sweeps dtypes (fp32 / bf16 / uint8 frames), odd pad-forcing shapes, both
+resample methods, and the admit-mask extremes, via the reusable harness in
+``kernel_harness.py``.  Tolerances are asserted per dtype (fp32-tight,
+bf16-loose); the nearest-neighbour path is additionally held bit-exact
+against the legacy ``models.vision.downscale`` gather.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from kernel_harness import (LOOSE, TIGHT, ParityCase, assert_parity,
+                            default_tol, ids, tensor)
+from repro.kernels import ref, vision_ops
+from repro.models.vision import downscale as legacy_downscale
+from repro.streams import MotionGate, block_sad
+
+I = dict(interpret=True)
+
+
+def _frames(S, H, W, dtype):
+    return tensor(S, H, W, 3, dtype=dtype)
+
+
+def _ingest_case(name, S, H, W, *, m, g, b, dtype=jnp.float32,
+                 method="nearest"):
+    return ParityCase(
+        name, vision_ops.ingest_frame, ref.ingest_frame_ref,
+        (_frames(S, H, W, dtype), tensor(S, g, g, 3)),
+        kwargs=dict(model_res=m, gate_res=g, block=b, method=method),
+        kernel_kwargs=I)
+
+
+INGEST_CASES = [
+    _ingest_case(f"ingest_{dt}_{method}", 2, 64, 64, m=48, g=32, b=8,
+                 dtype=getattr(jnp, dt), method=method)
+    for dt in ("float32", "bfloat16", "uint8")
+    for method in ("nearest", "box")
+] + [
+    # odd shapes: gate_res not divisible by block, rectangular frames,
+    # model_res that forces non-uniform nearest strides
+    _ingest_case("ingest_odd_30x30_g13", 1, 30, 30, m=16, g=13, b=8),
+    _ingest_case("ingest_rect_37x53", 3, 37, 53, m=24, g=10, b=4,
+                 method="box"),
+    _ingest_case("ingest_uint8_odd", 2, 30, 30, m=15, g=9, b=4,
+                 dtype=jnp.uint8, method="box"),
+    _ingest_case("ingest_gate_eq_frame", 1, 32, 32, m=32, g=32, b=8),
+]
+
+
+@pytest.mark.parametrize("case", INGEST_CASES, ids=ids(INGEST_CASES))
+def test_ingest_frame_parity(case):
+    assert_parity(case)
+
+
+def test_per_dtype_tolerances_are_asserted():
+    """The harness must pick the loose band for bf16 and tight for fp32."""
+    assert default_tol(tensor(1, 4, 4, 3, dtype=jnp.bfloat16)) == LOOSE
+    assert default_tol(tensor(1, 4, 4, 3)) == TIGHT
+    assert default_tol(tensor(1, 4, 4, 3, dtype=jnp.uint8)) == TIGHT
+
+
+# ---------------------------------------------------------------------------
+# block_sad
+# ---------------------------------------------------------------------------
+
+
+SAD_CASES = [
+    ParityCase("sad_32_div", vision_ops.block_sad, ref.block_sad_ref,
+               (tensor(2, 32, 32, 3), tensor(2, 32, 32, 3)),
+               kwargs=dict(block=8), kernel_kwargs=I),
+    ParityCase("sad_30_pad", vision_ops.block_sad, ref.block_sad_ref,
+               (tensor(2, 30, 30, 3), tensor(2, 30, 30, 3)),
+               kwargs=dict(block=8), kernel_kwargs=I),
+    ParityCase("sad_bf16", vision_ops.block_sad, ref.block_sad_ref,
+               (tensor(1, 16, 16, 3, dtype=jnp.bfloat16),
+                tensor(1, 16, 16, 3, dtype=jnp.bfloat16)),
+               kwargs=dict(block=8), kernel_kwargs=I),
+]
+
+
+@pytest.mark.parametrize("case", SAD_CASES, ids=ids(SAD_CASES))
+def test_block_sad_parity(case):
+    assert_parity(case)
+
+
+def test_block_sad_identical_frames_score_zero():
+    x = tensor(3, 30, 30, 3)
+    np.testing.assert_allclose(
+        np.asarray(vision_ops.block_sad(x, x, block=8, interpret=True)),
+        0.0, atol=1e-7)
+
+
+def test_jnp_block_sad_matches_golden_on_odd_shape():
+    """The streams.filter jnp path shares pad-and-mask semantics."""
+    a, b = tensor(2, 30, 30, 3), tensor(2, 30, 30, 3)
+    np.testing.assert_allclose(np.asarray(block_sad(a, b, block=8)),
+                               np.asarray(ref.block_sad_ref(a, b, block=8)),
+                               **TIGHT)
+
+
+def test_jnp_block_sad_uint8_does_not_wrap():
+    """uint8 inputs must be widened before subtracting: |2 - 5| is 3, not
+    the modulo-256 wraparound 253 (regression)."""
+    a = jnp.full((1, 16, 16, 3), 5, jnp.uint8)
+    b = jnp.full((1, 16, 16, 3), 2, jnp.uint8)
+    np.testing.assert_allclose(np.asarray(block_sad(a, b, block=8)), 3.0,
+                               **TIGHT)
+    np.testing.assert_allclose(np.asarray(block_sad(a, b, block=8)),
+                               np.asarray(ref.block_sad_ref(a, b, block=8)),
+                               **TIGHT)
+
+
+def test_ingest_frame_rejects_box_upsample_on_either_resolution():
+    """Box buckets are empty when upsampling: both the model and the gate
+    resolution must be validated, or the kernel silently emits NaN while
+    the golden raises (regression)."""
+    frames, refs = tensor(1, 16, 16, 3), tensor(1, 8, 8, 3)
+    with pytest.raises(AssertionError):
+        vision_ops.ingest_frame(frames, refs, model_res=32, gate_res=8,
+                                method="box", interpret=True)
+    with pytest.raises(AssertionError):
+        ref.ingest_frame_ref(frames, refs, model_res=32, gate_res=8,
+                             method="box")
+
+
+# ---------------------------------------------------------------------------
+# scatter_admit (mask extremes)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_case(name, admit, dtype=jnp.float32):
+    S = len(admit)
+    return ParityCase(
+        name, vision_ops.scatter_admit, ref.scatter_admit_ref,
+        (tensor(S, 48, 48, 3, dtype=dtype), tensor(S, 48, 48, 3),
+         tensor(S, 32, 32, 3), tensor(S, 32, 32, 3),
+         jnp.asarray(admit, bool)),
+        kernel_kwargs=I, tol=dict(rtol=0, atol=0))   # pure select: exact
+
+
+SCATTER_CASES = [
+    _scatter_case("scatter_none_admitted", [0, 0, 0, 0]),
+    _scatter_case("scatter_all_admitted", [1, 1, 1, 1]),
+    _scatter_case("scatter_mixed", [1, 0, 0, 1]),
+    _scatter_case("scatter_single_lane", [1]),
+    _scatter_case("scatter_bf16_batch", [1, 0], dtype=jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SCATTER_CASES, ids=ids(SCATTER_CASES))
+def test_scatter_admit_parity(case):
+    assert_parity(case)
+
+
+# ---------------------------------------------------------------------------
+# downscale: wiring + bit-exactness vs the legacy gather
+# ---------------------------------------------------------------------------
+
+
+DOWNSCALE_CASES = [
+    ParityCase("down_nearest_48", vision_ops.downscale, ref.downscale_ref,
+               (tensor(2, 64, 64, 3), 48), kernel_kwargs=I),
+    ParityCase("down_box_17", vision_ops.downscale, ref.downscale_ref,
+               (tensor(2, 37, 53, 3), 17), kwargs=dict(method="box"),
+               kernel_kwargs=I),
+    ParityCase("down_uint8", vision_ops.downscale, ref.downscale_ref,
+               (tensor(1, 30, 30, 3, dtype=jnp.uint8), 13), kernel_kwargs=I),
+]
+
+
+@pytest.mark.parametrize("case", DOWNSCALE_CASES, ids=ids(DOWNSCALE_CASES))
+def test_downscale_parity(case):
+    assert_parity(case)
+
+
+def test_nearest_downscale_bit_exact_vs_legacy_gather():
+    """One-hot matmul resampling must equal the gather to the last bit for
+    fp32 frames — this is what keeps use_pallas on/off engines identical."""
+    x = tensor(2, 64, 64, 3)
+    got = np.asarray(vision_ops.downscale(x, 48, interpret=True))
+    want = np.asarray(legacy_downscale(x, 48))
+    assert (got == want).all()
+    # and through the models.vision wiring flag
+    via_flag = np.asarray(legacy_downscale(x, 48, use_pallas=True,
+                                           interpret=True))
+    assert (via_flag == want).all()
+
+
+def test_legacy_downscale_refuses_box_without_pallas():
+    """The jnp gather is nearest-only; asking it for box filtering must
+    fail loudly, not silently alias (regression)."""
+    with pytest.raises(AssertionError, match="use_pallas"):
+        legacy_downscale(tensor(1, 16, 16, 3), 8, method="box")
+
+
+def test_box_downscale_averages_buckets():
+    """2x2 box buckets: each output pixel is the exact 4-pixel mean."""
+    x = tensor(1, 8, 8, 3)
+    got = np.asarray(vision_ops.downscale(x, 4, method="box", interpret=True))
+    want = np.asarray(x, np.float32).reshape(1, 4, 2, 4, 2, 3).mean((2, 4))
+    np.testing.assert_allclose(got, want, **TIGHT)
+
+
+# ---------------------------------------------------------------------------
+# MotionGate through the pallas flag
+# ---------------------------------------------------------------------------
+
+
+def test_motion_gate_use_pallas_matches_jnp_gate():
+    jnp_gate = MotionGate(2, init_thresh=0.02)
+    pallas_gate = MotionGate(2, init_thresh=0.02, use_pallas=True)
+    assert pallas_gate.similar().use_pallas        # config survives similar()
+    active = np.array([True, True])
+    seqs = [tensor(2, 64, 64, 3) for _ in range(3)]
+    seqs.insert(1, seqs[0])                        # a duplicate tick
+    for frames in seqs:
+        a, b = jnp_gate.admit(frames, active), \
+            pallas_gate.admit(frames, active)
+        assert a.tolist() == b.tolist()
+    assert jnp_gate.stats.gated == pallas_gate.stats.gated > 0
+
+
+def test_motion_gate_uint8_frames_score_identically_across_paths():
+    """Both gate paths must normalize uint8 to [0,1] before scoring, or the
+    pallas path would see 255x-smaller scores and gate real motion
+    (regression)."""
+    gates = [MotionGate(1, init_thresh=0.005, use_pallas=up)
+             for up in (False, True)]
+    active = np.array([True])
+    a = jnp.full((1, 64, 64, 3), 100, jnp.uint8)
+    b = jnp.full((1, 64, 64, 3), 103, jnp.uint8)    # 3/255 ~ 0.012 > thresh
+    for g in gates:
+        assert g.admit(a, active).tolist() == [True]    # first frame
+        assert g.admit(b, active).tolist() == [True]    # real motion admits
+        assert g.admit(b, active).tolist() == [False]   # duplicate gates
