@@ -10,7 +10,8 @@ import sys
 import time
 
 MODULES = ["turnaround", "energy", "esd_sweep", "kernel_micro",
-           "serving_bench", "fleet_bench", "roofline_report"]
+           "serving_bench", "fleet_bench", "scenario_soak",
+           "roofline_report"]
 
 
 def main() -> None:

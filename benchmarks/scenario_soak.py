@@ -1,0 +1,66 @@
+"""Scenario soak: the full scenario library + the 2k-tick churn soak.
+
+Runs every scenario in ``repro.simulate.SCENARIOS`` at full length
+against the real fleet stack on virtual clocks, checks every invariant
+(ledger conservation, capacity bounds, placement, outer-priority bound,
+gate-state travel, zero post-warmup recompiles), certifies determinism
+by double-running the golden scenario, and prints one row per scenario.
+
+    PYTHONPATH=src python -m benchmarks.scenario_soak [--skip-soak]
+
+Wall-clock here is host simulation speed, not serving performance — the
+deliverables are the invariant verdicts, the virtual-tick volume, and
+the per-seed digests (any of which changing is a behavioural diff).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.simulate import SCENARIOS, get_scenario, run_scenario
+
+
+def main(rows=None, skip_soak: bool = False):
+    rows = rows if rows is not None else []
+    total_ticks = 0
+    total_violations = 0
+    names = [n for n in sorted(SCENARIOS)
+             if not (skip_soak and n == "soak_churn")]
+    print(f"{'scenario':22s} {'ticks':>6s} {'wall_s':>7s} {'joined':>6s} "
+          f"{'off':>7s} {'adm':>7s} {'gate':>6s} {'ddl':>6s} "
+          f"{'rebind':>6s} {'viol':>4s}  digest")
+    for name in names:
+        t0 = time.time()
+        res = run_scenario(get_scenario(name))
+        wall = time.time() - t0
+        s = res.summary
+        total_ticks += s["ticks"]
+        total_violations += s["violations"]
+        print(f"{name:22s} {s['ticks']:6d} {wall:7.1f} {s['joined']:6d} "
+              f"{s['off']:7d} {s['adm']:7d} {s['gate']:6d} {s['ddl']:6d} "
+              f"{s['rebinds']:6d} {s['violations']:4d}  "
+              f"{res.digest[:12]}")
+        for v in res.violations:
+            print(f"    !! {v}")
+
+    # determinism certificate: the golden scenario, twice
+    a = run_scenario(get_scenario("golden_churn"))
+    b = run_scenario(get_scenario("golden_churn"))
+    det = a.digest == b.digest
+    print(f"\nvirtual ticks simulated: {total_ticks}   "
+          f"invariant violations: {total_violations}   "
+          f"determinism (golden twice): {'OK' if det else 'MISMATCH'}")
+    rows.append(("scenario_soak_ticks", total_ticks, "virtual_ticks"))
+    rows.append(("scenario_soak_violations", total_violations, "count"))
+    rows.append(("scenario_soak_deterministic", float(det), "1=identical"))
+    assert det, "golden scenario trace diverged between identical runs"
+    assert total_violations == 0, f"{total_violations} invariant violations"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-soak", action="store_true",
+                    help="skip the 2000-tick soak_churn scenario")
+    args = ap.parse_args()
+    main(skip_soak=args.skip_soak)

@@ -8,7 +8,10 @@ deadline-driven distributed analytics runtime.
   runtime       master loop + event clock reproducing the section 4.2 tables
   telemetry     per-segment turnaround decomposition ledger
   energy        energy proxy model (section 4.2.3)
+  clock         Clock seam: WallClock for serving, VirtualClock for the
+                deterministic fleet-scenario simulator (repro.simulate)
 """
+from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
 from repro.core.early_stop import DynamicESD, EarlyStopPolicy, budget_mask  # noqa: F401
 from repro.core.runtime import (EDARuntime, DeviceProfile, PAPER_DEVICES,   # noqa: F401
                                 SimExecutor)

@@ -37,6 +37,13 @@ class SegmentRecord:
     esd: float = 0.0
     frames_total: int = 0
     frames_processed: int = 0
+    # Explicit skip decomposition (None = producer does not account per
+    # cause, e.g. the EDARuntime cost model, where skipped is simply
+    # total - processed).  Producers that do account (VisionServeEngine)
+    # must satisfy processed + gated + dropped == total — Ledger.check().
+    frames_gated: Optional[int] = None      # motion-gate rejects
+    frames_dropped: Optional[int] = None    # deadline + backpressure + churn
+    frames_deadline_dropped: Optional[int] = None  # subset of dropped
     is_master: bool = False
     energy_j: float = 0.0
 
@@ -103,6 +110,44 @@ class Ledger:
 
     def add(self, rec: SegmentRecord) -> None:
         self.records.append(rec)
+
+    def check(self) -> None:
+        """Frame-conservation assertion over every record.
+
+        For any record: 0 <= processed <= total.  For records carrying the
+        explicit skip decomposition (the fleet engine's), every offered
+        frame must be accounted exactly once:
+
+            processed + gated + dropped == total
+            deadline-dropped <= dropped
+
+        Raises ``AssertionError`` naming every violating stream — this is
+        the invariant that makes accounting drift in the serving path fail
+        loudly instead of quietly skewing skip-rate tables.
+        """
+        errors = []
+        for r in self.records:
+            if not 0 <= r.frames_processed <= r.frames_total:
+                errors.append(
+                    f"{r.video_id}/{r.stream}@{r.device}: processed "
+                    f"{r.frames_processed} outside [0, {r.frames_total}]")
+            if r.frames_gated is None and r.frames_dropped is None:
+                continue                      # no per-cause accounting
+            gated = r.frames_gated or 0
+            dropped = r.frames_dropped or 0
+            ddl = r.frames_deadline_dropped or 0
+            if r.frames_processed + gated + dropped != r.frames_total:
+                errors.append(
+                    f"{r.video_id}/{r.stream}@{r.device}: "
+                    f"processed {r.frames_processed} + gated {gated} "
+                    f"+ dropped {dropped} != offered {r.frames_total}")
+            if ddl > dropped:
+                errors.append(
+                    f"{r.video_id}/{r.stream}@{r.device}: deadline-dropped "
+                    f"{ddl} exceeds dropped {dropped}")
+        if errors:
+            raise AssertionError(
+                "ledger conservation violated:\n  " + "\n  ".join(errors))
 
     # ------------------------------------------------------------------
     def by_device(self) -> Dict[str, List[SegmentRecord]]:

@@ -83,6 +83,22 @@ class DashCamSource:
             yield self.pair(i)
 
 
+def frame_loop(seed: int, res: int = 64, frames: int = 48,
+               moving_objects: int = 2):
+    """Deterministic endlessly-looped dash-cam clip for long-lived
+    simulated vehicles (``repro.simulate``): one :func:`synth_frames`
+    clip, cycled by index.  Consecutive frames are *similar* (the blobs
+    move a little), so a motion gate sees realistic near-duplicate
+    structure instead of iid noise.  Returns ``at(i) -> (res, res, 3)``.
+    """
+    clip = synth_frames(seed, frames, res, moving_objects)
+
+    def at(i: int) -> np.ndarray:
+        return clip[i % frames]
+
+    return at
+
+
 # ---------------------------------------------------------------------------
 # LM token pipeline
 # ---------------------------------------------------------------------------

@@ -1,0 +1,28 @@
+"""Deterministic fleet-scenario simulation over the real serving stack.
+
+  scenario    declarative DSL (replicas via HardwareInfo, vehicle
+              profiles, churn rates, scripted failures) + the built-in
+              scenario library (``SCENARIOS``)
+  runner      interprets a scenario against the production FleetGateway /
+              VisionServeEngine / CapacityScheduler / EnergyModel stack
+              on per-replica virtual clocks — no mocks
+  trace       canonical event trace; SHA-256 digest is the run's seed-
+              deterministic fingerprint (golden-trace regression pin)
+  invariants  global checkers: ledger conservation, capacity bounds,
+              placement consistency, outer-priority preemption bound,
+              gate-state travel across rebinds, zero post-warmup
+              recompiles
+
+Reproduce any run from its seed:
+
+    PYTHONPATH=src python examples/fleet_scenarios.py --scenario <name>
+"""
+from repro.simulate.invariants import (InvariantSuite, Violation,  # noqa: F401
+                                       jit_cache_sizes)
+from repro.simulate.runner import (ScenarioResult, ScenarioRunner,  # noqa: F401
+                                   build_fleet, run_scenario)
+from repro.simulate.scenario import (SCENARIOS, ReplicaSpec,  # noqa: F401
+                                     Scenario, ScriptedEvent,
+                                     VehicleProfile, get_scenario,
+                                     list_scenarios)
+from repro.simulate.trace import Event, Trace  # noqa: F401

@@ -1,0 +1,178 @@
+"""Global invariant checkers for fleet scenario runs.
+
+Each checker inspects the *live* stack (gateway, engines, scheduler) or
+the finished run (ledger, trace, jit caches) and appends
+:class:`Violation` records instead of raising — a soak wants the full
+violation list, not the first failure.  The suite encodes the properties
+the paper's transient-fleet claim rests on:
+
+  conservation   every offered frame is admitted, gated, or dropped —
+                 exactly once (``Ledger.check`` per stream, plus the
+                 fleet-level offered == pushes cross-check);
+  capacity       no engine binds more streams than it has lanes; every
+                 live session is placed on a live replica and every
+                 admission respected the overcommit bound at join time;
+  placement      session bookkeeping is consistent: gateway sessions,
+                 engine streams, and scheduler state agree;
+  priority       an outer (hazard) stream with pending frames is never
+                 left waiting behind a bound inner stream past the
+                 preemption bound (one tick — the engine preempts at tick
+                 start);
+  gate travel    a rebound stream's adaptive gate threshold is identical
+                 before and after the rebind (state follows the stream);
+  no recompile   after the warmup tick, the model jits and kernel jits
+                 acquire zero new cache entries — churn must not compile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.core.telemetry import Ledger
+from repro.streams.gateway import FleetGateway
+from repro.streams.vision_engine import OUTER
+
+
+@dataclass(frozen=True)
+class Violation:
+    tick: int
+    invariant: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[tick {self.tick}] {self.invariant}: {self.detail}"
+
+
+def jit_cache_sizes() -> int:
+    """Total jit cache entries across the model + kernel + admission jits
+    the fleet path dispatches — the quantity that must not grow after
+    warmup, whatever the churn."""
+    from repro.kernels import vision_ops as vk
+    from repro.models import vision as V
+    from repro.streams import filter as sf
+    from repro.streams import vision_engine as ve
+    return (V.analyse_outer._cache_size()
+            + V.analyse_inner._cache_size()
+            + ve._load_frame._cache_size()
+            + sf._block_sad_jnp._cache_size()
+            + sf._gate_update._cache_size()
+            + vk._ingest_frame_jit._cache_size()
+            + vk._scatter_admit_jit._cache_size()
+            + vk._downscale_jit._cache_size())
+
+
+class InvariantSuite:
+    """Online + final invariant checks for one scenario run."""
+
+    def __init__(self, gw: FleetGateway) -> None:
+        self.gw = gw
+        self.violations: List[Violation] = []
+
+    def _flag(self, tick: int, invariant: str, detail: str) -> None:
+        self.violations.append(Violation(tick, invariant, detail))
+
+    # ------------------------------------------------------------------
+    # per-tick checks (cheap; called after every gateway tick)
+    # ------------------------------------------------------------------
+    def on_tick(self, tick: int) -> None:
+        self._check_capacity(tick)
+        self._check_placement(tick)
+        self._check_outer_priority(tick)
+
+    def _check_capacity(self, tick: int) -> None:
+        for r in self.gw.replicas:
+            if r.bound_count > r.slots:
+                self._flag(tick, "capacity",
+                           f"{r.name} binds {r.bound_count} > {r.slots}")
+            if r.name in self.gw.dead and r.session_count:
+                self._flag(tick, "capacity",
+                           f"dead replica {r.name} holds "
+                           f"{r.session_count} sessions")
+
+    def _check_placement(self, tick: int) -> None:
+        live = {r.name for r in self.gw.live_replicas()}
+        placed = 0
+        for vehicle, pair in self.gw.sessions.items():
+            for sess in pair:
+                if sess.engine not in live:
+                    self._flag(tick, "placement",
+                               f"{sess.key} placed on non-live replica "
+                               f"{sess.engine}")
+                    continue
+                eng = self.gw._by_name[sess.engine]
+                if sess.key not in eng.streams:
+                    self._flag(tick, "placement",
+                               f"{sess.key} missing from {sess.engine}")
+                placed += 1
+        total = sum(r.session_count for r in self.gw.replicas)
+        if placed != total:
+            self._flag(tick, "placement",
+                       f"gateway tracks {placed} streams, engines hold "
+                       f"{total} — a session leaked or double-bound")
+
+    def _check_outer_priority(self, tick: int) -> None:
+        """Preemption bound: right after a tick, no engine may hold a
+        bound inner stream while an outer stream with pending frames sits
+        unbound (the engine preempts at tick start, so one tick is the
+        contractual bound)."""
+        for r in self.gw.live_replicas():
+            inner_bound = any(s is not None and s.priority > 0
+                              for s in r.lanes)
+            if not inner_bound:
+                continue
+            for st in r.streams.values():
+                if st.kind == OUTER and st.pending and not st.bound:
+                    self._flag(tick, "priority",
+                               f"outer {st.key} starved on {r.name} "
+                               f"({len(st.pending)} pending) while an "
+                               f"inner stream holds a lane")
+
+    # ------------------------------------------------------------------
+    # event-driven checks
+    # ------------------------------------------------------------------
+    def on_join(self, tick: int, admitted: bool, active_before: int,
+                capacity: int, overcommit: float) -> None:
+        fits = active_before + 2 <= capacity * overcommit
+        if admitted and not fits:
+            self._flag(tick, "capacity",
+                       f"admission past overcommit: {active_before}+2 > "
+                       f"{capacity}*{overcommit}")
+        if not admitted and fits:
+            self._flag(tick, "capacity",
+                       f"spurious refusal: {active_before}+2 <= "
+                       f"{capacity}*{overcommit}")
+
+    def on_rebind(self, tick: int, key: str, thresh_before,
+                  thresh_after) -> None:
+        if thresh_before is None and thresh_after is None:
+            return
+        if thresh_before != thresh_after:
+            self._flag(tick, "gate-travel",
+                       f"{key} threshold changed across rebind: "
+                       f"{thresh_before} -> {thresh_after}")
+
+    # ------------------------------------------------------------------
+    # final checks
+    # ------------------------------------------------------------------
+    def finalize(self, tick: int, ledger: Ledger, pushes: int,
+                 cache_after_warmup: int) -> None:
+        try:
+            ledger.check()
+        except AssertionError as e:
+            self._flag(tick, "conservation", str(e))
+        offered = sum(r.frames_total for r in ledger.records)
+        if offered != pushes:
+            self._flag(tick, "conservation",
+                       f"ledger offered {offered} != frames pushed "
+                       f"{pushes} — a push vanished unaccounted")
+        cache_now = jit_cache_sizes()
+        if cache_now != cache_after_warmup:
+            self._flag(tick, "recompile",
+                       f"jit caches grew after warmup: "
+                       f"{cache_after_warmup} -> {cache_now}")
+
+    # ------------------------------------------------------------------
+    def report(self) -> str:
+        if not self.violations:
+            return "all invariants held"
+        return "\n".join(str(v) for v in self.violations)

@@ -1,0 +1,374 @@
+"""Scenario runner: drives the real fleet stack on virtual clocks.
+
+``run_scenario`` interprets a declarative :class:`~.scenario.Scenario`
+against the production FleetGateway / VisionServeEngine / MotionGate /
+CapacityScheduler / EnergyModel stack — no mocks, the same objects the
+serving examples construct — with one :class:`~repro.core.clock.
+VirtualClock` per replica whose rates derive from the replica's
+``HardwareInfo``.  Every run emits a canonical :class:`~.trace.Trace`
+(deterministic SHA-256 digest per seed) and an invariant report.
+
+Per virtual tick the runner:
+
+  1. applies scripted events (replica fail/restore, with gate-threshold
+     snapshots around every rebind);
+  2. draws Poisson joins and geometric/fixed-lifetime leaves from the
+     scenario rng;
+  3. pushes each live vehicle's frames (burst patterns and scene
+     duplication from the vehicle profile) and accrues EnergyModel cost
+     against the vehicle battery — exhaustion forces departure;
+  4. ticks the gateway (every live replica steps once on its own clock);
+  5. runs the per-tick invariant checkers and emits the aggregate event.
+
+At the end every remaining vehicle leaves (flushing its ledger records),
+the conservation/recompile finalizers run, and the result carries the
+trace, the ledger, and the violation list.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import EDAConfig
+from repro.core.clock import FRAME, TICK, VirtualClock
+from repro.core.energy import EnergyModel
+from repro.core.telemetry import Ledger
+from repro.simulate.invariants import InvariantSuite, Violation, \
+    jit_cache_sizes
+from repro.simulate.scenario import (FLOPS_PER_FRAME, TICK_OVERHEAD_MS,
+                                     Scenario, VehicleProfile)
+from repro.simulate.trace import Trace
+from repro.streams.gateway import FleetGateway
+from repro.streams.vision_engine import VisionServeEngine
+
+
+class _Vehicle:
+    """Live-vehicle state: frame source, duplicate structure, battery."""
+
+    def __init__(self, name: str, profile: VehicleProfile, seed: int,
+                 index: int, res: int, joined_tick: int) -> None:
+        self.name = name
+        self.profile = profile
+        self.rng = np.random.default_rng([seed, index])
+        self.res = res
+        self.joined_tick = joined_tick
+        self.energy_j = 0.0
+        self.frame_idx = 0
+        self._last: Dict[str, np.ndarray] = {}
+        self._scene_cursor = 0
+        if profile.scene == "dashcam":
+            from repro.data.synthetic import frame_loop
+            base = seed * 100_003 + 2 * index
+            self._loops = {"outer": frame_loop(base, res),
+                           "inner": frame_loop(base + 1, res,
+                                               moving_objects=1)}
+        elif profile.scene != "noise":
+            raise ValueError(f"unknown scene {profile.scene!r}")
+
+    def _fresh_pair(self) -> Dict[str, np.ndarray]:
+        """Advance the scene by one frame (both cameras move together)."""
+        if self.profile.scene == "dashcam":
+            i = self._scene_cursor
+            self._scene_cursor += 1
+            return {k: loop(i) for k, loop in self._loops.items()}
+        return {k: self.rng.random((self.res, self.res, 3),
+                                   dtype=np.float32)
+                for k in ("outer", "inner")}
+
+    def next_frames(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """This tick's (outer, inner) frame pairs.  One duplicate draw per
+        pair — the scene moves (or doesn't) for both cameras at once."""
+        out = []
+        p = self.profile
+        for j in range(p.frames_per_tick):
+            if not self._last:
+                dup = False                      # first frame is always new
+            elif p.dup_pattern:
+                dup = bool(p.dup_pattern[self.frame_idx
+                                         % len(p.dup_pattern)])
+            elif p.duplicate_prob > 0:
+                dup = bool(self.rng.random() < p.duplicate_prob)
+            else:
+                dup = False
+            if not dup:
+                self._last = self._fresh_pair()
+            out.append((self._last["outer"], self._last["inner"]))
+            self.frame_idx += 1
+        return out
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    trace: Trace
+    ledger: Ledger
+    violations: List[Violation]
+    summary: Dict[str, object]
+
+    @property
+    def digest(self) -> str:
+        return self.trace.digest()
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def warm_jits(scenario: Scenario) -> None:
+    """Compile every jit the scenario's engine geometry can dispatch, on a
+    throwaway engine (separate ledger, virtual clock — nothing leaks into
+    the run).  The recompile invariant demands zero cache growth after the
+    scenario's warmup tick, but a scenario is free to starve a whole model
+    class for its entire scripted length (priority_inversion holds inner
+    streams off the lanes for 200 ticks) — first dispatch would then land
+    mid-soak and read as a recompile.  Real deployments warm serving jits
+    before taking traffic for exactly the same reason."""
+    import jax
+    slots = {spec.slots for spec in scenario.replicas}
+    for n in sorted(slots):
+        eng = VisionServeEngine(
+            "warmup", slots=n, frame_res=scenario.frame_res,
+            input_res=scenario.input_res, fps=scenario.fps,
+            use_gate=scenario.use_gate, use_pallas=scenario.use_pallas,
+            clock=VirtualClock(), rng=jax.random.key(0))
+        eng.open_stream("w/outer", "outer")
+        eng.open_stream("w/inner", "inner")
+        frame = np.zeros((scenario.frame_res, scenario.frame_res, 3),
+                         np.float32)
+        for _ in range(2):                   # 2nd tick hits the gated path
+            eng.push("w/outer", frame)
+            eng.push("w/inner", frame)
+            eng.step()
+
+
+def build_fleet(scenario: Scenario) -> FleetGateway:
+    """Instantiate the real engine replicas (virtual clocks, shared
+    ledger) and the gateway, exactly as a serving deployment would."""
+    import jax
+    replicas = []
+    for i, spec in enumerate(scenario.replicas):
+        clock = VirtualClock(rates={
+            FRAME: spec.virtual_frame_cost_ms() / 1000.0,
+            TICK: TICK_OVERHEAD_MS / 1000.0,
+        })
+        replicas.append(VisionServeEngine(
+            spec.name, slots=spec.slots,
+            frame_res=scenario.frame_res, input_res=scenario.input_res,
+            fps=scenario.fps, eda=EDAConfig(esd=scenario.esd),
+            use_gate=scenario.use_gate, use_pallas=scenario.use_pallas,
+            quantum=scenario.quantum, max_pending=scenario.max_pending,
+            clock=clock, rng=jax.random.key(i)))
+    gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
+                      overcommit=scenario.overcommit)
+    # install the heterogeneous HW priors (the gateway defaults to a
+    # cores-only prior; scenarios speak full HardwareInfo — the paper's
+    # HW_INFO handshake, refined by measurement as the run progresses)
+    for spec in scenario.replicas:
+        gw.sched.by_name(spec.name).hw = spec.hw
+    return gw
+
+
+def _stream_thresh(eng: VisionServeEngine, key: str) -> Optional[float]:
+    st = eng.streams[key]
+    gate = eng.gates[st.kind]
+    if gate is None:
+        return None
+    if st.bound:
+        return float(gate.thresh[st.lane])
+    if st.gate_state is not None:
+        return float(st.gate_state["thresh"])
+    return float(gate.init_thresh)
+
+
+class ScenarioRunner:
+    def __init__(self, scenario: Scenario) -> None:
+        self.s = scenario
+        warm_jits(scenario)
+        self.gw = build_fleet(scenario)
+        self.trace = Trace()
+        self.inv = InvariantSuite(self.gw)
+        self.energy = EnergyModel()
+        self.rng = np.random.default_rng(scenario.seed)
+        self.vehicles: Dict[str, _Vehicle] = {}
+        self._counter = 0
+        self._pushes = 0
+        self._joined = 0
+        self._closed = dict(off=0, adm=0, gate=0, drop=0, ddl=0)
+        self._prev = self._totals()
+        self._cache_after_warmup: Optional[int] = None
+        frame_bytes = scenario.frame_res * scenario.frame_res * 3 * 4
+        self._pair_flops = (FLOPS_PER_FRAME["outer"]
+                            + FLOPS_PER_FRAME["inner"])
+        self._pair_bytes = 2 * frame_bytes
+
+    # ------------------------------------------------------------------
+    def _totals(self) -> Dict[str, int]:
+        """Fleet-cumulative frame accounting: closed records (folded in
+        incrementally at leave time — rescanning the ledger every tick
+        would be O(ticks x records)) plus the currently open streams."""
+        t = dict(self._closed)
+        for eng in self.gw.replicas:
+            for st in eng.streams.values():
+                t["off"] += st.offered
+                t["adm"] += st.processed
+                t["gate"] += st.gated
+                t["drop"] += st.dropped
+                t["ddl"] += st.deadline_dropped
+        return t
+
+    # ------------------------------------------------------------------
+    def _join(self, tick: int) -> None:
+        name = f"v{self._counter:03d}"
+        profile = self.s.profiles[self._counter % len(self.s.profiles)]
+        act, cap = self.gw.active_streams(), self.gw.capacity()
+        pair = self.gw.join(name, now_ms=float(tick))
+        self.inv.on_join(tick, pair is not None, act, cap,
+                         self.s.overcommit)
+        if pair is None:
+            self.trace.emit(tick, "refuse", veh=name, act=act, cap=cap)
+            return
+        self._counter += 1
+        self._joined += 1
+        self.vehicles[name] = _Vehicle(
+            name, profile, self.s.seed, self._counter, self.s.frame_res,
+            joined_tick=tick)
+        self.trace.emit(tick, "join", veh=name, profile=profile.name,
+                        outer=pair[0].engine, inner=pair[1].engine,
+                        act=act, cap=cap)
+
+    def _leave(self, tick: int, name: str, reason: str) -> None:
+        veh = self.vehicles.pop(name)
+        recs = self.gw.leave(name)
+        for rec in recs:                     # vehicle energy onto its recs
+            rec.energy_j = veh.energy_j / len(recs)
+            self._closed["off"] += rec.frames_total
+            self._closed["adm"] += rec.frames_processed
+            self._closed["gate"] += rec.frames_gated or 0
+            self._closed["drop"] += rec.frames_dropped or 0
+            self._closed["ddl"] += rec.frames_deadline_dropped or 0
+        self.trace.emit(
+            tick, "leave", veh=name, reason=reason,
+            off=sum(r.frames_total for r in recs),
+            adm=sum(r.frames_processed for r in recs),
+            gate=sum(r.frames_gated or 0 for r in recs),
+            drop=sum(r.frames_dropped or 0 for r in recs),
+            ddl=sum(r.frames_deadline_dropped or 0 for r in recs),
+            energy=veh.energy_j)
+
+    def _scripted(self, tick: int) -> None:
+        for ev in self.s.scripted:
+            if ev.tick != tick:
+                continue
+            if ev.action == "fail_replica":
+                eng = self.gw._by_name[ev.arg]
+                before = {k: _stream_thresh(eng, k)
+                          for k in list(eng.streams)}
+                moved = self.gw.fail_replica(ev.arg, now_ms=float(tick))
+                self.trace.emit(tick, "fail", replica=ev.arg,
+                                moved=len(moved))
+                for key, src, dst in moved:
+                    after = _stream_thresh(self.gw._by_name[dst], key)
+                    self.inv.on_rebind(tick, key, before[key], after)
+                    self.trace.emit(
+                        tick, "rebind", key=key, src=src, dst=dst,
+                        thresh=-1.0 if after is None else after)
+            elif ev.action == "restore_replica":
+                self.gw.restore_replica(ev.arg, now_ms=float(tick))
+                self.trace.emit(tick, "restore", replica=ev.arg)
+            else:
+                raise ValueError(f"unknown scripted action {ev.action!r}")
+
+    def _push_all(self, tick: int) -> None:
+        for name in list(self.vehicles):
+            veh = self.vehicles[name]
+            flops = bytes_moved = 0.0
+            for outer, inner in veh.next_frames():
+                self.gw.push(name, outer, inner)
+                self._pushes += 2
+                flops += self._pair_flops
+                bytes_moved += self._pair_bytes
+            veh.energy_j += self.energy.segment_energy_j(
+                veh.profile.device_class, flops, bytes_moved,
+                active_s=1.0 / self.s.fps)
+
+    def _churn(self, tick: int) -> None:
+        for name in list(self.vehicles):
+            veh = self.vehicles[name]
+            life = veh.profile.lifetime_ticks
+            if life and tick - veh.joined_tick >= life:
+                self._leave(tick, name, "lifetime")
+            elif self.s.leave_rate and self.rng.random() < self.s.leave_rate:
+                self._leave(tick, name, "churn")
+
+    def _battery(self, tick: int) -> None:
+        for name in list(self.vehicles):
+            veh = self.vehicles[name]
+            if veh.energy_j >= veh.profile.battery_j:
+                self._leave(tick, name, "battery")
+
+    # ------------------------------------------------------------------
+    def run(self) -> ScenarioResult:
+        s = self.s
+        for _ in range(s.initial_vehicles):
+            self._join(0)
+        for tick in range(s.ticks):
+            self._scripted(tick)
+            if s.join_rate and len(self.vehicles) < s.max_vehicles:
+                for _ in range(int(self.rng.poisson(s.join_rate))):
+                    if len(self.vehicles) >= s.max_vehicles:
+                        break
+                    self._join(tick)
+            if tick:                          # initial cohort joins at 0
+                self._churn(tick)
+            self._push_all(tick)
+            self._battery(tick)
+            self.gw.tick()
+            self.inv.on_tick(tick)
+            cur = self._totals()
+            delta = {k: cur[k] - self._prev[k] for k in cur}
+            self._prev = cur
+            self.trace.emit(
+                tick, "tick", **delta,
+                bound=sum(r.bound_count for r in self.gw.live_replicas()),
+                wait=sum(len(r.waiting)
+                         for r in self.gw.live_replicas()),
+                live=len(self.vehicles))
+            if tick == s.warmup_ticks:
+                self._cache_after_warmup = jit_cache_sizes()
+        # drain + close every survivor so the ledger holds the whole run
+        self.gw.drain(max_ticks=4 * s.ticks + 64)
+        for name in list(self.vehicles):
+            self._leave(s.ticks, name, "end")
+        for spec in s.replicas:
+            w = self.gw.sched.by_name(spec.name)
+            eng = self.gw._by_name[spec.name]
+            self.trace.emit(s.ticks, "replica", name=spec.name,
+                            ticks=eng.ticks,
+                            processed=eng.frames_processed,
+                            busy_ms=eng.busy_s * 1000.0,
+                            capacity=w.capacity())
+        if self._cache_after_warmup is None:
+            self._cache_after_warmup = jit_cache_sizes()
+        self.inv.finalize(s.ticks, self.gw.ledger, self._pushes,
+                          self._cache_after_warmup)
+        totals = self._totals()
+        summary = {
+            "scenario": s.name, "seed": s.seed, "ticks": s.ticks,
+            "joined": self._joined, "refused": self.gw.refused,
+            "rebinds": len(self.gw.rebinds),
+            "battery_departures": len(
+                [e for e in self.trace.of_kind("leave")
+                 if e.get("reason") == "battery"]),
+            **totals,
+            "violations": len(self.inv.violations),
+        }
+        return ScenarioResult(scenario=s, trace=self.trace,
+                              ledger=self.gw.ledger,
+                              violations=self.inv.violations,
+                              summary=summary)
+
+
+def run_scenario(scenario: Scenario) -> ScenarioResult:
+    return ScenarioRunner(scenario).run()

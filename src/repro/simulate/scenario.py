@@ -1,0 +1,318 @@
+"""Declarative fleet-scenario DSL + the built-in scenario library.
+
+A :class:`Scenario` is pure data: replica specs (heterogeneity enters via
+``HardwareInfo``, exactly the paper's HW_INFO handshake), vehicle profiles
+(frame cadence, duplicate structure, battery), churn rates, deadline/ESD
+policy, and scripted events (replica failure/restore).  The runner
+(:mod:`repro.simulate.runner`) interprets one against the *real*
+FleetGateway → VisionServeEngine → MotionGate → CapacityScheduler →
+EnergyModel stack — no mocks — on per-replica virtual clocks.
+
+Adding a scenario is one function + a ``@_scenario`` registration; see the
+README "Scenarios" section.  Reproduce any run from its seed:
+
+    PYTHONPATH=src python examples/fleet_scenarios.py --scenario <name>
+
+Same seed ⇒ identical canonical trace (SHA-256-pinned by the golden test).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.scheduler import HardwareInfo
+
+# Virtual frame cost calibration: a reference replica (default
+# HardwareInfo: 2 GHz x 8 cores, capacity prior 16) spends 4 ms of virtual
+# time per frame of model inference; everything else scales inversely with
+# the capacity prior, mirroring how the paper's measured frames/s scale
+# with device strength.
+REF_FRAME_COST_MS = 4.0
+REF_CAPACITY_PRIOR = 16.0
+TICK_OVERHEAD_MS = 0.2          # staging + gating + host bookkeeping / tick
+
+# Per-frame energy accounting (vehicle side), matching the runtime's
+# MobileNetV1/MoveNet FLOP estimates.
+FLOPS_PER_FRAME = {"outer": 0.8e9, "inner": 0.5e9}
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """One engine replica; speed derives from the HW_INFO prior."""
+    name: str
+    slots: int = 4
+    hw: HardwareInfo = field(default_factory=HardwareInfo)
+    frame_cost_ms: Optional[float] = None    # explicit override
+
+    def virtual_frame_cost_ms(self) -> float:
+        if self.frame_cost_ms is not None:
+            return self.frame_cost_ms
+        prior = max(self.hw.capacity_prior(), 1e-6)
+        return REF_FRAME_COST_MS * REF_CAPACITY_PRIOR / prior
+
+
+@dataclass(frozen=True)
+class VehicleProfile:
+    """One class of vehicle: frame cadence, scene structure, battery."""
+    name: str = "standard"
+    device_class: str = "pixel6"        # EnergyModel table key
+    frames_per_tick: int = 1
+    # scene duplication: dup_pattern cycles over the frames of a tick
+    # ((0, 1, 1) = a 30 fps camera over a 10 fps scene — two of every
+    # three frames duplicate the previous one); with no pattern,
+    # duplicate_prob draws per frame from the vehicle's rng
+    dup_pattern: Tuple[int, ...] = ()
+    duplicate_prob: float = 0.0
+    # frame source: "noise" draws iid frames (scores far from gate
+    # thresholds — maximally robust traces); "dashcam" cycles a seeded
+    # data.synthetic.frame_loop clip (smoothly moving blobs — realistic
+    # near-duplicate structure for the adaptive gate)
+    scene: str = "noise"
+    battery_j: float = float("inf")     # departure when cumulative energy
+    lifetime_ticks: int = 0             # fixed session length (0 = churn)
+
+
+@dataclass(frozen=True)
+class ScriptedEvent:
+    tick: int
+    action: str                         # fail_replica | restore_replica
+    arg: str = ""
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    seed: int
+    ticks: int
+    replicas: Tuple[ReplicaSpec, ...]
+    profiles: Tuple[VehicleProfile, ...] = (VehicleProfile(),)
+    initial_vehicles: int = 2
+    join_rate: float = 0.0              # Poisson mean joins per tick
+    leave_rate: float = 0.0             # per-vehicle leave probability/tick
+    max_vehicles: int = 32
+    deadline_ms: float = 0.0
+    esd: float = 0.0
+    overcommit: float = 1.5
+    use_gate: bool = True
+    use_pallas: bool = False
+    frame_res: int = 64
+    input_res: int = 32
+    fps: int = 10
+    quantum: int = 32
+    max_pending: int = 64
+    warmup_ticks: int = 10              # recompile-free after this tick
+    scripted: Tuple[ScriptedEvent, ...] = ()
+    description: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Library
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def _scenario(fn: Callable[[], Scenario]) -> Callable[[], Scenario]:
+    s = fn()
+    assert s.name not in SCENARIOS, s.name
+    SCENARIOS[s.name] = s
+    return fn
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(SCENARIOS)}")
+    s = SCENARIOS[name]
+    return replace(s, **overrides) if overrides else s
+
+
+def list_scenarios() -> Dict[str, str]:
+    return {name: s.description for name, s in SCENARIOS.items()}
+
+
+def _uniform_replicas(n: int, slots: int = 4) -> Tuple[ReplicaSpec, ...]:
+    return tuple(ReplicaSpec(f"r{i}", slots=slots) for i in range(n))
+
+
+@_scenario
+def steady_state() -> Scenario:
+    return Scenario(
+        name="steady_state", seed=101, ticks=120,
+        replicas=_uniform_replicas(2),
+        profiles=(VehicleProfile(duplicate_prob=0.5),),
+        initial_vehicles=3,
+        description="Fixed fleet, no churn: continuous frames with 50% "
+                    "scene duplication exercise gate + batching baselines.")
+
+
+@_scenario
+def dashcam_scene() -> Scenario:
+    return Scenario(
+        name="dashcam_scene", seed=111, ticks=200,
+        replicas=_uniform_replicas(2),
+        profiles=(VehicleProfile(name="dashcam", scene="dashcam"),),
+        initial_vehicles=3, join_rate=0.15, leave_rate=0.02,
+        max_vehicles=8,
+        description="Looped synthetic dash-cam clips (data.synthetic."
+                    "frame_loop): smoothly-moving scenes exercise the "
+                    "adaptive gate thresholds on realistic near-"
+                    "duplicates instead of iid noise.")
+
+
+@_scenario
+def poisson_churn() -> Scenario:
+    return Scenario(
+        name="poisson_churn", seed=202, ticks=400,
+        replicas=_uniform_replicas(3),
+        profiles=(VehicleProfile(duplicate_prob=0.3),),
+        initial_vehicles=2, join_rate=0.35, leave_rate=0.04,
+        max_vehicles=12,
+        description="Transient fleet: Poisson joins, geometric session "
+                    "lifetimes — admission/backpressure under churn.")
+
+
+@_scenario
+def heterogeneous_fleet() -> Scenario:
+    return Scenario(
+        name="heterogeneous_fleet", seed=303, ticks=300,
+        replicas=(
+            ReplicaSpec("weak", hw=HardwareInfo(cpu_ghz=1.0, cores=4)),
+            ReplicaSpec("mid", hw=HardwareInfo(cpu_ghz=2.0, cores=8)),
+            ReplicaSpec("strong", hw=HardwareInfo(cpu_ghz=3.2, cores=8)),
+        ),
+        profiles=(VehicleProfile(duplicate_prob=0.3),),
+        initial_vehicles=4, join_rate=0.2, leave_rate=0.03,
+        max_vehicles=10,
+        description="Replica speed spread from HardwareInfo priors: the "
+                    "capacity EWMAs diverge and placement follows strength.")
+
+
+@_scenario
+def battery_drain() -> Scenario:
+    return Scenario(
+        name="battery_drain", seed=404, ticks=250,
+        replicas=_uniform_replicas(2),
+        profiles=(
+            VehicleProfile(name="lowbatt", device_class="pixel3",
+                           battery_j=0.35, duplicate_prob=0.2),
+            VehicleProfile(name="flagship", device_class="findx2pro",
+                           battery_j=1.2, duplicate_prob=0.2),
+        ),
+        initial_vehicles=4, join_rate=0.25, max_vehicles=10,
+        description="Energy-bounded sessions: cumulative EnergyModel cost "
+                    "exhausts vehicle batteries and forces departures.")
+
+
+@_scenario
+def burst_duplicates() -> Scenario:
+    return Scenario(
+        name="burst_duplicates", seed=505, ticks=250,
+        replicas=_uniform_replicas(2),
+        profiles=(VehicleProfile(name="cam30on10", frames_per_tick=3,
+                                 dup_pattern=(0, 1, 1)),),
+        initial_vehicles=3, join_rate=0.1, leave_rate=0.02,
+        max_vehicles=8, max_pending=96,
+        description="30 fps cameras over a 10 fps scene: bursty 3x frame "
+                    "duplication — the motion gate must shed ~2/3.")
+
+
+@_scenario
+def priority_inversion() -> Scenario:
+    return Scenario(
+        name="priority_inversion", seed=606, ticks=200,
+        replicas=(ReplicaSpec("r0", slots=2),),
+        profiles=(VehicleProfile(duplicate_prob=0.2),),
+        initial_vehicles=4, join_rate=0.0, leave_rate=0.0,
+        overcommit=4.0, quantum=4, use_gate=True,
+        description="8 streams on 2 lanes: outer/inner inversion pressure "
+                    "— hazards must preempt within the bound, inner must "
+                    "still make progress through quantum rotation.")
+
+
+@_scenario
+def replica_failure() -> Scenario:
+    return Scenario(
+        name="replica_failure", seed=707, ticks=260,
+        replicas=_uniform_replicas(3),
+        profiles=(VehicleProfile(duplicate_prob=0.4),),
+        initial_vehicles=5, join_rate=0.15, leave_rate=0.02,
+        max_vehicles=10,
+        scripted=(ScriptedEvent(60, "fail_replica", "r1"),
+                  ScriptedEvent(140, "restore_replica", "r1")),
+        description="Replica r1 dies mid-run and later recovers: sessions "
+                    "rebind with gate state intact, then refill.")
+
+
+@_scenario
+def deadline_pressure() -> Scenario:
+    return Scenario(
+        name="deadline_pressure", seed=808, ticks=220,
+        replicas=(
+            ReplicaSpec("slow0", hw=HardwareInfo(cpu_ghz=0.25, cores=4)),
+            ReplicaSpec("slow1", hw=HardwareInfo(cpu_ghz=0.25, cores=4)),
+        ),
+        profiles=(VehicleProfile(frames_per_tick=2, duplicate_prob=0.1),),
+        initial_vehicles=4, join_rate=0.1, leave_rate=0.02,
+        max_vehicles=8,
+        deadline_ms=800.0, esd=2.0,
+        description="Slow replicas + 2x ingest rate + ESD deadline: stale "
+                    "backlogs must be trimmed into deadline drops, not "
+                    "served late.")
+
+
+@_scenario
+def pallas_ingest() -> Scenario:
+    return Scenario(
+        name="pallas_ingest", seed=909, ticks=40,
+        replicas=_uniform_replicas(2, slots=2),
+        profiles=(VehicleProfile(duplicate_prob=0.5),),
+        initial_vehicles=2, join_rate=0.1, leave_rate=0.02,
+        max_vehicles=4, use_pallas=True,
+        description="Short churn run through the fused Pallas ingest path "
+                    "(interpret mode off-TPU): kernel path obeys the same "
+                    "invariants and never recompiles post-warmup.")
+
+
+@_scenario
+def golden_churn() -> Scenario:
+    return Scenario(
+        name="golden_churn", seed=1234, ticks=150,
+        replicas=_uniform_replicas(2),
+        profiles=(
+            VehicleProfile(duplicate_prob=0.4),
+            VehicleProfile(name="burst", frames_per_tick=3,
+                           dup_pattern=(0, 1, 1), lifetime_ticks=40),
+        ),
+        initial_vehicles=3, join_rate=0.25, leave_rate=0.03,
+        max_vehicles=8, deadline_ms=300.0, esd=2.0,
+        description="Frozen regression scenario: churn + bursts + gate + "
+                    "deadline; its trace digest is committed in "
+                    "tests/golden/ and drift fails the golden test.")
+
+
+@_scenario
+def soak_churn() -> Scenario:
+    return Scenario(
+        name="soak_churn", seed=4242, ticks=2000,
+        replicas=(
+            ReplicaSpec("strong", hw=HardwareInfo(cpu_ghz=3.2, cores=8)),
+            ReplicaSpec("mid", hw=HardwareInfo(cpu_ghz=2.0, cores=8)),
+            ReplicaSpec("weak", hw=HardwareInfo(cpu_ghz=1.0, cores=4)),
+        ),
+        profiles=(
+            VehicleProfile(duplicate_prob=0.4),
+            VehicleProfile(name="burst", frames_per_tick=3,
+                           dup_pattern=(0, 1, 1)),
+            VehicleProfile(name="lowbatt", device_class="pixel3",
+                           battery_j=0.12, duplicate_prob=0.2),
+        ),
+        initial_vehicles=4, join_rate=0.3, leave_rate=0.025,
+        max_vehicles=12, deadline_ms=1500.0, esd=2.0,
+        scripted=(ScriptedEvent(500, "fail_replica", "mid"),
+                  ScriptedEvent(900, "restore_replica", "mid"),
+                  ScriptedEvent(1400, "fail_replica", "weak"),
+                  ScriptedEvent(1700, "restore_replica", "weak"),),
+        description="The 2k-tick invariant soak: heterogeneous replicas, "
+                    "Poisson churn, bursts, battery departures, two "
+                    "fail/restore cycles, gating and deadlines at once.")

@@ -17,10 +17,9 @@ the paper's paired-download protocol, scaled out.  The gateway:
 """
 from __future__ import annotations
 
-import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -41,6 +40,11 @@ class StreamSession:
     joined_ms: float = 0.0
     pushed: int = 0
     shed: int = 0                     # frames dropped by backpressure
+    # counters at the last rebind: leave() credits the current replica's
+    # capacity EWMA only with work done *since adoption* — throughput
+    # measured on a failed origin replica must not skew the adopter's
+    credit_frames: int = 0
+    credit_ms: float = 0.0
 
     @property
     def key(self) -> str:
@@ -60,9 +64,25 @@ class _FleetScheduler(CapacityScheduler):
     The everyone-busy branch also considers the master replica: the paper
     excludes the master there because it coordinates the phones, but an
     engine replica named "master" is just the first replica — concentrating
-    all overcommitted sessions on the others would skew their latency."""
+    all overcommitted sessions on the others would skew their latency.
+
+    ``down`` holds failed replicas (paper: a phone leaving the network
+    mid-segment).  While any replica is down every pick runs over the live
+    pool only; with an empty ``down`` the paper's decision tree is used
+    unchanged."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.down: Set[str] = set()
 
     def _pick_worker(self, now_ms):
+        if self.down:
+            alive = [w for w in self.devices if w.name not in self.down]
+            if not alive:
+                raise RuntimeError("every replica is down")
+            free = [w for w in alive if w.free_at(now_ms)]
+            return max(free or alive,
+                       key=lambda w: (w.capacity(), -w.queue_len))
         anyone_free = (self.master.free_at(now_ms)
                        or any(w.free_at(now_ms) for w in self.workers))
         if not anyone_free:
@@ -71,7 +91,8 @@ class _FleetScheduler(CapacityScheduler):
         return super()._pick_worker(now_ms)
 
     def schedule_pair(self, outer, inner, now_ms, **kw):
-        if len(self.workers) <= 1 or kw.get("segmentation"):
+        if not self.down and (len(self.workers) <= 1
+                              or kw.get("segmentation")):
             return super().schedule_pair(outer, inner, now_ms, **kw)
         first = self._pick_worker(now_ms)
         first.queue_len += 1                    # provisional, for pick 2
@@ -116,17 +137,22 @@ class FleetGateway:
         self._by_name: Dict[str, VisionServeEngine] = {
             r.name: r for r in self.replicas}
         self.sessions: Dict[str, Tuple[StreamSession, StreamSession]] = {}
+        self.dead: Set[str] = set()           # failed replicas (by name)
         self.refused = 0
+        self.rebinds: List[Tuple[str, str, str]] = []  # (key, from, to)
         self.closed: List[SegmentRecord] = []
 
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
+    def live_replicas(self) -> List[VisionServeEngine]:
+        return [r for r in self.replicas if r.name not in self.dead]
+
     def capacity(self) -> int:
-        return sum(r.slots for r in self.replicas)
+        return sum(r.slots for r in self.live_replicas())
 
     def active_streams(self) -> int:
-        return sum(r.session_count for r in self.replicas)
+        return sum(r.session_count for r in self.live_replicas())
 
     def join(self, vehicle: str, now_ms: float = 0.0,
              deadline_ms: Optional[float] = None
@@ -174,8 +200,10 @@ class FleetGateway:
         recs = []
         for sess in self.sessions.pop(vehicle):
             rec = self._by_name[sess.engine].close_stream(sess.key)
-            self.sched.complete(sess.assignment, rec.frames_processed,
-                                rec.processing_ms)
+            self.sched.complete(
+                sess.assignment,
+                rec.frames_processed - sess.credit_frames,
+                rec.processing_ms - sess.credit_ms)
             recs.append(rec)
         self.closed.extend(recs)
         return recs
@@ -189,12 +217,70 @@ class FleetGateway:
         is excluded forever after its first session and its lanes idle
         while workers oversubscribe).  Full replicas keep their session
         count as queue_len (and a future busy horizon) so the scheduler's
-        shortest-queue tie-break orders them at full resolution."""
+        shortest-queue tie-break orders them at full resolution.  Dead
+        replicas read permanently busy with a poisoned queue as defence in
+        depth — the scheduler's ``down`` filter already excludes them."""
         for r in self.replicas:
             w = self.sched.by_name(r.name)
+            if r.name in self.dead:
+                w.busy_until_ms = float("inf")
+                w.queue_len = 10 ** 9
+                continue
             has_free_lanes = r.session_count < r.slots
             w.busy_until_ms = 0.0 if has_free_lanes else now_ms + 1.0
             w.queue_len = 0 if has_free_lanes else r.session_count
+
+    # ------------------------------------------------------------------
+    # replica failure / recovery
+    # ------------------------------------------------------------------
+    def fail_replica(self, name: str, now_ms: float = 0.0
+                     ) -> List[Tuple[str, str, str]]:
+        """Take a replica out of service and rebind its sessions onto the
+        survivors (the fleet analogue of a phone dropping off Wi-Fi Direct
+        mid-segment).  Streams are *detached*, not closed: counters, the
+        pending backlog, and the saved gate state (including the adapted
+        threshold) travel to the adopting replica.  Returns the rebind
+        list ``[(stream_key, from_replica, to_replica), ...]``."""
+        if name not in self._by_name:
+            raise KeyError(name)
+        if name in self.dead:
+            raise ValueError(f"replica {name!r} is already down")
+        if len(self.live_replicas()) <= 1:
+            raise RuntimeError("cannot fail the last live replica")
+        self.dead.add(name)
+        self.sched.down.add(name)
+        dead_engine = self._by_name[name]
+        moved: List[Tuple[str, str, str]] = []
+        # outer (hazard) streams rebind first: if the survivors are tight
+        # on lanes the priority class must win the good placements
+        orphans = sorted((s for pair in self.sessions.values() for s in pair
+                          if s.engine == name),
+                         key=lambda s: (s.stream != OUTER, s.key))
+        for sess in orphans:
+            st = dead_engine.detach_stream(sess.key)
+            self._sync_load(now_ms)
+            target = self.sched._pick_worker(now_ms).name
+            self._by_name[target].adopt_stream(st)
+            sess.engine = target
+            sess.assignment = Assignment(sess.assignment.segment, target)
+            sess.credit_frames = st.processed
+            sess.credit_ms = st.processing_ms
+            self.sched.commit(sess.assignment, busy_until_ms=now_ms)
+            moved.append((sess.key, name, target))
+        w = self.sched.by_name(name)
+        w.busy_until_ms = float("inf")
+        w.queue_len = 10 ** 9
+        self.rebinds.extend(moved)
+        return moved
+
+    def restore_replica(self, name: str, now_ms: float = 0.0) -> None:
+        """Bring a failed replica back into service (empty lanes; it fills
+        again through new joins and scheduler placement)."""
+        if name not in self.dead:
+            raise ValueError(f"replica {name!r} is not down")
+        self.dead.discard(name)
+        self.sched.down.discard(name)
+        self._sync_load(now_ms)       # re-derives the worker's free state
 
     def backlog(self, vehicle: str) -> int:
         """Frames still queued across the vehicle's two streams."""
@@ -205,13 +291,16 @@ class FleetGateway:
     # serving loop
     # ------------------------------------------------------------------
     def tick(self) -> int:
-        """Step every replica once; feed measured frames/s back into the
-        scheduler's capacity EWMAs (the HW_INFO -> measurement handoff)."""
+        """Step every live replica once; feed measured frames/s back into
+        the scheduler's capacity EWMAs (the HW_INFO -> measurement
+        handoff).  Timing reads each replica's own clock, so a simulated
+        replica's virtual speed profile flows into the same capacity
+        estimate a wall-clocked replica's real speed does."""
         done = 0
-        for r in self.replicas:
-            t0 = time.perf_counter()
+        for r in self.live_replicas():
+            t0 = r.clock.now_s()
             n = r.step()
-            dt_ms = (time.perf_counter() - t0) * 1000.0
+            dt_ms = (r.clock.now_s() - t0) * 1000.0
             if n:
                 self.sched.by_name(r.name).observe(n, dt_ms)
             done += n
@@ -220,7 +309,8 @@ class FleetGateway:
     def drain(self, max_ticks: int = 100_000) -> int:
         done = 0
         ticks = 0
-        while any(r.has_work() for r in self.replicas) and ticks < max_ticks:
+        while any(r.has_work() for r in self.live_replicas()) \
+                and ticks < max_ticks:
             done += self.tick()
             ticks += 1
         return done

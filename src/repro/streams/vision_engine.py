@@ -25,16 +25,24 @@
     backlog is trimmed to the frame budget the ``EarlyStopPolicy`` affords
     at the engine's EWMA per-frame cost, and the trimmed (stale) frames are
     accounted exactly like the paper's skip rate;
-  * per-stream lifecycle closes into a ``telemetry.SegmentRecord`` so the
-    existing ``Ledger`` machinery reports fleet turnaround/skip tables
-    unchanged.
+  * per-stream lifecycle closes into a ``telemetry.SegmentRecord`` (with
+    the explicit processed/gated/dropped decomposition ``Ledger.check``
+    asserts) so the existing ``Ledger`` machinery reports fleet
+    turnaround/skip tables unchanged;
+  * all timing flows through the ``core.clock`` seam: a ``WallClock`` by
+    default (production), a per-replica ``VirtualClock`` under
+    ``repro.simulate`` — the engine *charges* dispatched work onto the
+    clock, so virtual cost profiles feed the same EWMA/deadline/ledger
+    plumbing wall time does, deterministically per seed;
+  * ``detach_stream``/``adopt_stream`` move a live stream between
+    replicas with counters, backlog, and gate state intact (replica
+    failure rebind — ``FleetGateway.fail_replica``).
 
 One engine instance is one replica; ``streams.gateway`` shards vehicle
 sessions across replicas with the ``CapacityScheduler``.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
@@ -45,6 +53,7 @@ import numpy as np
 
 from repro.config import EDAConfig
 from repro.configs.eda_vision import detector_config, pose_config
+from repro.core.clock import FRAME, TICK, Clock, WallClock
 from repro.core.early_stop import EWMA, EarlyStopPolicy
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import vision as V
@@ -78,7 +87,8 @@ class StreamState:
     offered: int = 0
     processed: int = 0
     gated: int = 0                   # motion-gate rejects
-    dropped: int = 0                 # deadline/backpressure drops
+    dropped: int = 0                 # deadline/backpressure/churn drops
+    deadline_dropped: int = 0        # subset of dropped: ESD deadline trims
     flagged: int = 0                 # danger/distraction frames
     first_s: float = 0.0
     last_s: float = 0.0
@@ -101,8 +111,10 @@ class VisionServeEngine:
                  pallas_interpret: Optional[bool] = None,
                  max_pending: int = 256, quantum: int = 32,
                  ledger: Optional[Ledger] = None,
+                 clock: Optional[Clock] = None,
                  rng: Optional[jax.Array] = None) -> None:
         self.name = name
+        self.clock = clock if clock is not None else WallClock()
         self.slots = slots
         self.frame_res = frame_res
         self.input_res = input_res
@@ -225,20 +237,66 @@ class VisionServeEngine:
             processing_ms=st.processing_ms,
             video_len_ms=1000.0 * st.offered / self.fps,
             esd=self.eda.esd,
-            frames_total=st.offered, frames_processed=st.processed)
+            frames_total=st.offered, frames_processed=st.processed,
+            frames_gated=st.gated, frames_dropped=st.dropped,
+            frames_deadline_dropped=st.deadline_dropped)
         if st.processed:
             turnaround_ms = max(st.last_s - st.first_s, 0.0) * 1000.0
         elif st.offered:
             # a session that analysed nothing must not read as near-real-
             # time: account wall time until abandonment, floored past the
             # video length so real_time is False
-            wall_ms = (time.perf_counter() - st.first_s) * 1000.0
+            wall_ms = (self.clock.now_s() - st.first_s) * 1000.0
             turnaround_ms = max(wall_ms, rec.video_len_ms + 1.0)
         else:
             turnaround_ms = 0.0
         rec.close(turnaround_ms)
         self.ledger.add(rec)
         return rec
+
+    def detach_stream(self, key: str) -> StreamState:
+        """Remove a stream *without* closing it: no ledger record, every
+        counter, the pending backlog, and the saved gate state stay on the
+        returned ``StreamState`` so another replica can adopt it (replica
+        failure rebind).  The unbind saves the lane's gate snapshot into
+        ``st.gate_state`` — the adaptive threshold travels with the stream.
+        """
+        st = self.streams.pop(key)
+        self.results.pop(key, None)
+        if st.bound:
+            self._free_lane(st)                # saves gate state via _unbind
+        elif st in self.waiting:
+            self.waiting.remove(st)
+        # convert clock-domain timestamps to *ages* (now - t): each replica
+        # has its own clock, so adopt_stream must rebase them — subtracting
+        # an origin-clock stamp from the adopter's clock would make the
+        # rebound stream's turnaround garbage
+        now = self.clock.now_s()
+        if st.offered:
+            st.first_s = now - st.first_s
+        if st.processed:
+            st.last_s = now - st.last_s
+        return st
+
+    def adopt_stream(self, st: StreamState) -> StreamState:
+        """Install a detached stream (counters/backlog/gate state intact)
+        and bind it to a lane or queue it — the receiving half of a
+        cross-replica rebind.  The ages detach_stream stored rebase into
+        this replica's clock domain, so turnaround stays the elapsed time
+        the stream actually experienced across both replicas."""
+        if st.key in self.streams:
+            raise KeyError(f"stream {st.key!r} already open")
+        now = self.clock.now_s()
+        if st.offered:
+            st.first_s = now - st.first_s
+        if st.processed:
+            st.last_s = now - st.last_s
+        st.lane = -1
+        self.streams[st.key] = st
+        self.results[st.key] = deque(maxlen=self.max_pending)
+        if not self._try_bind(st):
+            self._enqueue_waiting(st)
+        return st
 
     def push(self, key: str, frame: np.ndarray) -> bool:
         """Enqueue one frame.  Returns False if backpressure dropped it
@@ -252,9 +310,9 @@ class VisionServeEngine:
                 f"stream {key!r}: frame shape {np.shape(frame)} != {expect}")
         st.offered += 1
         if st.offered == 1:
-            # same clock domain as last_s — turnaround must subtract
-            # perf_counter from perf_counter, never a caller's sim clock
-            st.first_s = time.perf_counter()
+            # same clock domain as last_s — turnaround must subtract this
+            # engine's clock from this engine's clock, never a caller's
+            st.first_s = self.clock.now_s()
         if len(st.pending) >= self.max_pending:
             st.dropped += 1
             return False
@@ -342,6 +400,7 @@ class VisionServeEngine:
         while len(st.pending) > max(budget, 1):
             st.pending.popleft()                 # oldest frame is stalest
             st.dropped += 1
+            st.deadline_dropped += 1
 
     def step(self) -> int:
         """One tick: admit one frame per bound stream, gate, run both
@@ -389,14 +448,15 @@ class VisionServeEngine:
                 self._bind(nxt, lane)
 
         done = 0
-        t0 = time.perf_counter()
+        t0 = self.clock.now_s()
+        self.clock.charge(TICK)                  # fixed per-tick overhead
         for kind in (OUTER, INNER):              # outer/hazard class first
             done += self._step_class(kind)
         if done:
             # a stream completes one frame per whole tick (both class
             # dispatches + staging/gating) — this is the latency estimate
             # the deadline trim divides by
-            self.tick_cost_ms.update((time.perf_counter() - t0) * 1000.0)
+            self.tick_cost_ms.update((self.clock.now_s() - t0) * 1000.0)
         self.ticks += 1
         return done
 
@@ -431,18 +491,19 @@ class VisionServeEngine:
         n_admit = int(admit.sum())
         if n_admit == 0:
             return 0
-        t0 = time.perf_counter()
+        t0 = self.clock.now_s()
         if kind == OUTER:
             flags, _ = V.analyse_outer(self.dc, self.dp, batch)
             per_frame = np.asarray(flags).any(axis=1)          # (slots,)
         else:
             distracted, _ = V.analyse_inner(self.pc, self.pp, batch)
             per_frame = np.asarray(distracted)
-        dt = time.perf_counter() - t0
+        self.clock.charge(FRAME, n_admit)        # no-op on a WallClock
+        dt = self.clock.now_s() - t0
         self.busy_s += dt
         self.frame_cost_ms.update(dt * 1000.0 / n_admit)
 
-        now = time.perf_counter()
+        now = self.clock.now_s()
         for lane in np.nonzero(admit)[0]:
             st = self.lanes[lane]
             st.processed += 1

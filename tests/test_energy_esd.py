@@ -1,0 +1,174 @@
+"""EnergyModel x DynamicESD interaction + ledger conservation units.
+
+The paper's transient-device story has two halves: devices leave when
+their battery is spent (EnergyModel), and deadlines tighten when the
+fleet falls behind (DynamicESD -> EarlyStopPolicy).  These tests pin the
+interaction: energy exhaustion forces departure in the simulator, and a
+tightening ESD budget raises the realised skip-rate monotonically.
+"""
+import numpy as np
+import pytest
+
+from repro.core.clock import FRAME, TICK, VirtualClock
+from repro.core.early_stop import DynamicESD, EarlyStopPolicy
+from repro.core.energy import EnergyModel
+from repro.core.telemetry import Ledger, SegmentRecord
+from repro.simulate import get_scenario, run_scenario
+from repro.streams import OUTER, VisionServeEngine
+from repro.config import EDAConfig
+
+
+# ---------------------------------------------------------------------------
+# energy -> departure
+# ---------------------------------------------------------------------------
+
+
+def test_energy_model_accumulates_monotonically():
+    em = EnergyModel()
+    e1 = em.segment_energy_j("pixel3", flops=1.3e9, bytes_moved=1e5,
+                             active_s=0.1)
+    assert e1 > 0
+    assert em.segment_energy_j("findx2pro", 1.3e9, 1e5, 0.1) > e1  # flagship
+    assert em.battery_pct("pixel3", e1 * 100, wall_s=10.0) > \
+        em.battery_pct("pixel3", e1, wall_s=1.0)
+
+
+def test_battery_exhaustion_forces_departure_in_scenario():
+    """The battery_drain scenario must retire vehicles through the energy
+    path, not churn (its leave_rate is 0), and account their sessions."""
+    s = get_scenario("battery_drain", ticks=120)
+    assert s.leave_rate == 0.0
+    res = run_scenario(s)
+    departs = [e for e in res.trace.of_kind("leave")
+               if e.get("reason") == "battery"]
+    assert departs, "no battery departures in battery_drain"
+    for ev in departs:
+        assert ev.get("energy") > 0
+    # low-battery pixels die sooner than flagship vehicles on average
+    by_profile = {}
+    for ev in departs:
+        veh = ev.get("veh")
+        join = next(e for e in res.trace.of_kind("join")
+                    if e.get("veh") == veh)
+        by_profile.setdefault(join.get("profile"), []).append(
+            ev.tick - join.tick)
+    if {"lowbatt", "flagship"} <= set(by_profile):
+        assert (np.mean(by_profile["lowbatt"])
+                <= np.mean(by_profile["flagship"]))
+    res.ledger.check()
+
+
+# ---------------------------------------------------------------------------
+# ESD tightening -> skip rate
+# ---------------------------------------------------------------------------
+
+
+def _skip_rate_at(esd: float) -> float:
+    """Identical deterministic workload through a virtual-clocked engine;
+    only the ESD policy varies."""
+    import jax
+    eng = VisionServeEngine(
+        "e", slots=1, frame_res=64, input_res=32, fps=10,
+        eda=EDAConfig(esd=esd), use_gate=False,
+        clock=VirtualClock(rates={FRAME: 0.050, TICK: 0.001}),
+        rng=jax.random.key(0))
+    eng.open_stream("v", OUTER, deadline_ms=1000.0)
+    frames = np.random.default_rng(7).random((30, 64, 64, 3)).astype(
+        np.float32)
+    for f in frames:
+        eng.push("v", f)
+    eng.drain()
+    rec = eng.close_stream("v")
+    eng.ledger.check()
+    return rec.skip_rate
+
+
+def test_esd_tightening_raises_skip_rate_monotonically():
+    rates = [_skip_rate_at(esd) for esd in (0.0, 2.0, 4.0, 8.0)]
+    assert rates[0] == 0.0                      # no policy, no drops
+    assert rates[1] > 0.0                       # deadline bites at esd=2
+    assert all(b >= a for a, b in zip(rates, rates[1:])), rates
+
+
+def test_dynamic_esd_feedback_tightens_budget():
+    """Sustained deadline misses raise the ESD; the raised ESD's policy
+    affords strictly fewer frames — the feedback loop the simulator's
+    deadline scenarios lean on."""
+    ctl = DynamicESD(esd=1.0, step=0.5, esd_max=8.0)
+    budgets = []
+    for _ in range(12):                         # misses: turnaround > len
+        ctl.update(turnaround_ms=2500.0, video_len_ms=1000.0)
+        policy = ctl.policy()
+        budgets.append(policy.frame_budget(1000.0, total_frames=30,
+                                           est_frame_cost_ms=20.0))
+    assert ctl.esd > 1.0 and ctl.misses == 12
+    assert all(b2 <= b1 for b1, b2 in zip(budgets, budgets[1:]))
+    assert budgets[-1] < budgets[0]
+    # recovery: sustained real-time decays the ESD back down
+    for _ in range(60):
+        ctl.update(turnaround_ms=200.0, video_len_ms=1000.0)
+    assert ctl.esd < 8.0
+
+
+def test_esd_budget_monotone_in_esd():
+    for cost in (5.0, 20.0, 80.0):
+        budgets = [EarlyStopPolicy(esd=e).frame_budget(
+            1000.0, 60, cost) for e in (1.5, 2.0, 3.0, 6.0)]
+        assert all(b2 <= b1 for b1, b2 in zip(budgets, budgets[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Ledger.check units
+# ---------------------------------------------------------------------------
+
+
+def _rec(total, processed, gated=None, dropped=None, ddl=None):
+    return SegmentRecord("v", "outer", "dev", frames_total=total,
+                         frames_processed=processed, frames_gated=gated,
+                         frames_dropped=dropped,
+                         frames_deadline_dropped=ddl)
+
+
+def test_ledger_check_passes_consistent_records():
+    led = Ledger()
+    led.add(_rec(10, 4, gated=3, dropped=3, ddl=2))
+    led.add(_rec(5, 5))                  # no per-cause accounting: allowed
+    led.check()
+
+
+def test_ledger_check_flags_unaccounted_frames():
+    led = Ledger()
+    led.add(_rec(10, 4, gated=3, dropped=2))           # one frame vanished
+    with pytest.raises(AssertionError, match="!= offered 10"):
+        led.check()
+
+
+def test_ledger_check_flags_deadline_exceeding_drops():
+    led = Ledger()
+    led.add(_rec(10, 5, gated=0, dropped=5, ddl=7))
+    with pytest.raises(AssertionError, match="deadline-dropped"):
+        led.check()
+
+
+def test_ledger_check_flags_processed_out_of_range():
+    led = Ledger()
+    led.add(_rec(3, 9))
+    with pytest.raises(AssertionError, match="outside"):
+        led.check()
+
+
+def test_engine_close_populates_conservation_fields():
+    import jax
+    eng = VisionServeEngine("e", slots=1, frame_res=64, input_res=32,
+                            fps=10, use_gate=True, max_pending=4,
+                            rng=jax.random.key(0))
+    eng.open_stream("v", OUTER)
+    frame = np.random.default_rng(3).random((64, 64, 3)).astype(np.float32)
+    for _ in range(8):                   # duplicates + backpressure drops
+        eng.push("v", frame)
+    eng.drain()
+    rec = eng.close_stream("v")
+    assert rec.frames_gated is not None and rec.frames_dropped is not None
+    assert (rec.frames_processed + rec.frames_gated + rec.frames_dropped
+            == rec.frames_total == 8)
+    eng.ledger.check()

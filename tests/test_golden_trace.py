@@ -1,0 +1,68 @@
+"""Golden-trace regression: one frozen seeded churn scenario.
+
+``tests/golden/fleet_scenario_v1.json`` pins the SHA-256 digest of the
+``golden_churn`` scenario's canonical trace plus its summary counts.  Any
+behavioural drift anywhere in the fleet path — gateway admission order,
+scheduler placement, gate thresholds, deadline trims, engine preemption,
+virtual-clock cost accounting — changes the digest and fails this test
+loudly.  That is the point: silent drift is the failure mode.
+
+If a change is *intentional*, regenerate the pin and review the diff in
+the summary counts alongside the code change:
+
+    PYTHONPATH=src python -c "
+    import json
+    from repro.simulate import run_scenario, get_scenario
+    r = run_scenario(get_scenario('golden_churn'))
+    golden = {'scenario': 'golden_churn', 'seed': r.scenario.seed,
+              'ticks': r.scenario.ticks, 'digest': r.digest,
+              'events': len(r.trace), 'counts': r.trace.counts(),
+              'summary': {k: v for k, v in r.summary.items()
+                          if k in ('joined', 'refused', 'off', 'adm',
+                                   'gate', 'drop', 'ddl')}}
+    json.dump(golden, open('tests/golden/fleet_scenario_v1.json', 'w'),
+              indent=2, sort_keys=True)"
+
+The digest is computed from seed-deterministic quantities only (virtual
+clocks, counters, formatted floats) — never wall time.
+"""
+import json
+import pathlib
+
+GOLDEN_PATH = (pathlib.Path(__file__).parent
+               / "golden" / "fleet_scenario_v1.json")
+
+
+def _golden() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_golden_trace_digest_and_counts_are_stable():
+    from repro.simulate import get_scenario, run_scenario
+    golden = _golden()
+    s = get_scenario(golden["scenario"])
+    assert s.seed == golden["seed"] and s.ticks == golden["ticks"], \
+        "golden scenario definition changed — regenerate the pin"
+    res = run_scenario(s)
+    assert not res.violations, "\n".join(map(str, res.violations))
+    # counts first: when the digest drifts, these say *what* moved
+    summary = {k: res.summary[k] for k in golden["summary"]}
+    assert summary == golden["summary"], (
+        f"golden summary drifted: {summary} != {golden['summary']}")
+    assert res.trace.counts() == golden["counts"]
+    assert len(res.trace) == golden["events"]
+    assert res.digest == golden["digest"], (
+        "canonical trace drifted with counts intact — ordering or field "
+        "values changed; diff res.trace.canonical() against a known-good "
+        "checkout")
+
+
+def test_golden_scenario_is_deterministic_across_runs():
+    """Two in-process runs, identical digest — the determinism half of
+    the acceptance bar, independent of the committed pin."""
+    from repro.simulate import get_scenario, run_scenario
+    a = run_scenario(get_scenario("golden_churn"))
+    b = run_scenario(get_scenario("golden_churn"))
+    assert a.digest == b.digest
+    assert a.trace.canonical() == b.trace.canonical()

@@ -1,0 +1,136 @@
+"""Property tests for CapacityScheduler / _FleetScheduler placement.
+
+Runs under real ``hypothesis`` when installed, else the vendored
+deterministic fallback (``tests/_hypothesis_stub.py``).  Properties:
+
+  * capacity      — across arbitrary join/leave sequences the gateway
+                    never lets an engine bind more streams than lanes,
+                    and admission never exceeds the overcommit bound;
+  * placement     — every live session is placed on exactly one live
+                    replica (engines and gateway bookkeeping agree), and
+                    a refused join leaves no partial state behind;
+  * conservation  — queue lengths never go negative and every commit is
+                    matched by exactly one complete across any sequence;
+  * segmentation  — splitting the inner video conserves frame counts and
+                    only targets real devices.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                # pragma: no cover
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.scheduler import (CapacityScheduler, HardwareInfo,
+                                  Segment, WorkerState)
+from repro.streams import FleetGateway, VisionServeEngine
+
+
+def _fleet(n_replicas, slots, overcommit):
+    engines = [VisionServeEngine(f"r{i}", slots=slots, frame_res=64,
+                                 input_res=32, fps=10, use_gate=False)
+               for i in range(n_replicas)]
+    return engines, FleetGateway(engines, overcommit=overcommit)
+
+
+@settings(max_examples=12)
+@given(n_replicas=st.integers(2, 4), slots=st.integers(1, 3),
+       seed=st.integers(0, 10_000))
+def test_join_leave_sequences_conserve_placement(n_replicas, slots, seed):
+    """Arbitrary interleaved join/leave churn: every live session is
+    placed, bound lanes never exceed slots, and admission respects the
+    overcommit bound at every step."""
+    engines, gw = _fleet(n_replicas, slots, overcommit=1.5)
+    rng = np.random.default_rng(seed)
+    live = []
+    counter = 0
+    for step in range(40):
+        if live and rng.random() < 0.4:
+            veh = live.pop(int(rng.integers(len(live))))
+            gw.leave(veh)
+        else:
+            veh = f"veh{counter}"
+            counter += 1
+            act, cap = gw.active_streams(), gw.capacity()
+            res = gw.join(veh, now_ms=float(step))
+            if res is None:
+                assert act + 2 > cap * gw.overcommit   # true backpressure
+                assert veh not in gw.sessions          # no partial state
+            else:
+                assert act + 2 <= cap * gw.overcommit
+                live.append(veh)
+        # global invariants after every operation
+        assert sum(e.session_count for e in engines) == 2 * len(gw.sessions)
+        for e in engines:
+            assert e.bound_count <= e.slots
+        for pair in gw.sessions.values():
+            for sess in pair:
+                assert sess.key in gw._by_name[sess.engine].streams
+    for veh in live:
+        gw.leave(veh)
+    assert gw.active_streams() == 0
+    assert all(gw.sched.by_name(e.name).queue_len >= 0 for e in engines)
+
+
+@settings(max_examples=15)
+@given(caps=st.lists(st.floats(1.0, 50.0), min_size=2, max_size=5),
+       seed=st.integers(0, 10_000))
+def test_scheduler_queue_lengths_never_negative(caps, seed):
+    """Random schedule/commit/complete interleavings: queue_len stays
+    >= 0 and every assignment names a real device."""
+    states = [WorkerState(f"w{i}", hw=HardwareInfo(cpu_ghz=c, cores=4),
+                          is_master=(i == 0))
+              for i, c in enumerate(caps)]
+    sched = CapacityScheduler(states[0], states[1:])
+    rng = np.random.default_rng(seed)
+    names = {w.name for w in states}
+    inflight = []
+    for i in range(30):
+        if inflight and rng.random() < 0.5:
+            a = inflight.pop(int(rng.integers(len(inflight))))
+            sched.complete(a, frames=int(rng.integers(1, 30)),
+                           processing_ms=float(rng.uniform(1, 100)))
+        else:
+            outer = Segment(f"v{i}", 0, 1, 0, 30, "outer")
+            inner = Segment(f"v{i}", 0, 1, 0, 30, "inner")
+            for a in sched.schedule_pair(outer, inner, now_ms=float(i)):
+                assert a.worker in names
+                sched.commit(a, busy_until_ms=float(i))
+                inflight.append(a)
+        assert all(w.queue_len >= 0 for w in sched.devices)
+    for a in inflight:
+        sched.complete(a, 1, 1.0)
+    assert all(w.queue_len == 0 for w in sched.devices)
+
+
+@settings(max_examples=15)
+@given(frames=st.integers(2, 240), n_workers=st.integers(2, 5),
+       num_segments=st.integers(0, 6))
+def test_segmentation_conserves_frames(frames, n_workers, num_segments):
+    states = [WorkerState(f"w{i}", is_master=(i == 0))
+              for i in range(n_workers + 1)]
+    sched = CapacityScheduler(states[0], states[1:])
+    outer = Segment("v", 0, 1, 0, frames, "outer")
+    inner = Segment("v", 0, 1, 0, frames, "inner")
+    out = sched.schedule_pair(outer, inner, now_ms=0.0,
+                              segmentation=True,
+                              num_segments=num_segments)
+    names = {w.name for w in states}
+    assert all(a.worker in names for a in out)
+    assert out[0].segment.stream == "outer"            # hazard class first
+    inner_frames = sum(a.segment.frame_count for a in out[1:])
+    assert inner_frames == frames                      # exact conservation
+
+
+def test_fleet_scheduler_down_filter_excludes_dead_replicas():
+    """With a replica down every pick lands on the live pool, whatever
+    the capacity ordering says."""
+    engines, gw = _fleet(3, slots=2, overcommit=4.0)
+    # make the dying replica look strongest so exclusion is load-bearing
+    gw.sched.by_name("r1").capacity_ewma.update(1e6)
+    gw.fail_replica("r1")
+    for v in range(5):
+        assert gw.join(f"veh{v}") is not None
+    assert all(s.engine != "r1"
+               for pair in gw.sessions.values() for s in pair)

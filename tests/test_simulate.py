@@ -1,0 +1,298 @@
+"""Fleet scenario simulator: clock seam, traces, invariants, soak.
+
+The heavyweight 2k-tick soak is marked ``slow`` (run by the scenario-soak
+CI job; the tier-1 job excludes it with ``-m "not slow"``).
+"""
+import numpy as np
+import pytest
+
+from repro.core.clock import FRAME, TICK, VirtualClock, WallClock
+from repro.simulate import (SCENARIOS, ScenarioRunner, Trace, get_scenario,
+                            run_scenario)
+from repro.streams import OUTER, FleetGateway, VisionServeEngine
+
+
+# ---------------------------------------------------------------------------
+# clock seam
+# ---------------------------------------------------------------------------
+
+
+def test_wall_clock_advances_and_ignores_charges():
+    c = WallClock()
+    t0 = c.now_s()
+    c.charge(FRAME, 100)
+    assert c.now_s() >= t0                     # charge is a no-op
+
+
+def test_virtual_clock_charges_at_configured_rates():
+    c = VirtualClock(rates={FRAME: 0.004, TICK: 0.0002})
+    assert c.now_s() == 0.0
+    c.charge(TICK)
+    c.charge(FRAME, 3)
+    assert c.now_s() == pytest.approx(0.0122)
+    assert c.charged == {TICK: 1.0, FRAME: 3.0}
+    c.advance(1.0)
+    assert c.now_s() == pytest.approx(1.0122)
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_engine_on_virtual_clock_measures_virtual_costs():
+    """The EWMA plumbing must measure virtual charges through the same
+    code path that measures wall time: a 4 ms/frame clock yields a 4 ms
+    frame-cost estimate, bit-exactly."""
+    import jax
+    eng = VisionServeEngine(
+        "v", slots=2, frame_res=64, input_res=32, fps=10, use_gate=False,
+        clock=VirtualClock(rates={FRAME: 0.004, TICK: 0.0002}),
+        rng=jax.random.key(0))
+    eng.open_stream("a", OUTER)
+    eng.push("a", np.zeros((64, 64, 3), np.float32))
+    eng.step()
+    assert eng.frame_cost_ms.value == pytest.approx(4.0)
+    assert eng.tick_cost_ms.value == pytest.approx(4.2)   # + tick overhead
+    assert eng.busy_s == pytest.approx(0.004)
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+
+def test_trace_canonical_form_and_digest():
+    t = Trace()
+    t.emit(0, "join", veh="v000", cap=8)
+    t.emit(1, "tick", adm=3, energy=0.25, ok=True)
+    assert t.canonical() == ("000000 join veh=v000 cap=8\n"
+                             "000001 tick adm=3 energy=0.25 ok=1\n")
+    t2 = Trace()
+    t2.emit(0, "join", veh="v000", cap=8)
+    t2.emit(1, "tick", adm=3, energy=0.25, ok=True)
+    assert t.digest() == t2.digest()
+    t2.emit(2, "leave", veh="v000")
+    assert t.digest() != t2.digest()
+    assert t2.counts() == {"join": 1, "leave": 1, "tick": 1}
+
+
+# ---------------------------------------------------------------------------
+# replica failure / rebind plumbing (the stack under the simulator)
+# ---------------------------------------------------------------------------
+
+
+def _small_fleet(replicas=3, slots=2, **kw):
+    engines = [VisionServeEngine(f"r{i}", slots=slots, frame_res=64,
+                                 input_res=32, fps=10, use_gate=True)
+               for i in range(replicas)]
+    return engines, FleetGateway(engines, **kw)
+
+
+def test_fail_replica_rebinds_sessions_with_state():
+    engines, gw = _small_fleet()
+    gw.join("veh0")
+    gw.join("veh1")
+    frame = np.random.default_rng(0).random((64, 64, 3)).astype(np.float32)
+    for _ in range(3):
+        gw.push("veh0", frame, frame)
+        gw.tick()
+    victim = gw.sessions["veh0"][0].engine
+    # adapt the gate threshold so travel is observable
+    eng = gw._by_name[victim]
+    st = eng.streams["veh0/outer"]
+    eng.gates[st.kind].thresh[st.lane] = 0.123
+    offered_before = st.offered
+
+    moved = gw.fail_replica(victim, now_ms=10.0)
+    assert any(k == "veh0/outer" for k, _, _ in moved)
+    assert all(src == victim for _, src, _ in moved)
+    assert gw._by_name[victim].session_count == 0
+    new_engine = gw.sessions["veh0"][0].engine
+    assert new_engine != victim
+    st2 = gw._by_name[new_engine].streams["veh0/outer"]
+    assert st2.offered == offered_before       # counters travelled
+    gate2 = gw._by_name[new_engine].gates[st2.kind]
+    assert float(gate2.thresh[st2.lane]) == pytest.approx(0.123)
+
+    # dead replica excluded from placement; joins still work
+    assert gw.join("veh2") is not None
+    assert all(s.engine != victim for s in gw.sessions["veh2"])
+
+    # restore: replica takes traffic again
+    gw.restore_replica(victim)
+    for v in ("veh3", "veh4", "veh5"):
+        gw.join(v)
+    assert any(s.engine == victim
+               for pair in gw.sessions.values() for s in pair)
+    gw.drain()
+    for v in list(gw.sessions):
+        gw.leave(v)
+    gw.ledger.check()                          # conservation across rebinds
+
+
+def test_fail_replica_guards():
+    engines, gw = _small_fleet(replicas=2)
+    with pytest.raises(KeyError):
+        gw.fail_replica("nope")
+    gw.fail_replica("r1")
+    with pytest.raises(ValueError):
+        gw.fail_replica("r1")                  # already down
+    with pytest.raises(RuntimeError):
+        gw.fail_replica("r0")                  # last live replica
+    with pytest.raises(ValueError):
+        gw.restore_replica("r0")               # not down
+
+
+def test_detach_adopt_rebases_timestamps_across_clock_domains():
+    """Rebinding between replicas whose clocks disagree must yield a sane
+    elapsed turnaround — not a cross-domain subtraction clamped to zero or
+    inflated by the origin clock's head start."""
+    import jax
+    ca = VirtualClock(rates={FRAME: 0.004, TICK: 0.0002})
+    ca.advance(30.0)                               # origin clock far ahead
+    cb = VirtualClock(rates={FRAME: 0.004, TICK: 0.0002})
+    a = VisionServeEngine("a", slots=1, frame_res=64, input_res=32,
+                          fps=10, use_gate=False, clock=ca,
+                          rng=jax.random.key(0))
+    b = VisionServeEngine("b", slots=1, frame_res=64, input_res=32,
+                          fps=10, use_gate=False, clock=cb,
+                          rng=jax.random.key(1))
+    frames = np.random.default_rng(2).random((4, 64, 64, 3)).astype(
+        np.float32)
+    a.open_stream("s", OUTER)
+    a.push("s", frames[0])
+    a.step()
+    b.adopt_stream(a.detach_stream("s"))
+    for f in frames[1:]:
+        b.push("s", f)
+    b.drain()
+    rec = b.close_stream("s")
+    assert rec.frames_processed == 4
+    # elapsed: ~4 frame charges + tick overheads, far below the 30 s skew
+    assert 0.0 < rec.turnaround_ms < 1000.0
+
+
+def test_leave_after_rebind_credits_only_adopter_work():
+    """Throughput measured on a failed origin replica must not pollute
+    the adopting replica's capacity EWMA at leave()."""
+    engines, gw = _small_fleet(replicas=3, slots=4)
+    gw.join("veh0")
+    frame = np.random.default_rng(5).random((64, 64, 3)).astype(np.float32)
+    for _ in range(6):
+        gw.push("veh0", frame, frame)
+        gw.tick()
+    # fail every replica hosting one of the pair's sessions, so BOTH
+    # streams end up rebound (credit snapshot == work done so far)
+    for host in {s.engine for s in gw.sessions["veh0"]}:
+        if host in {s.engine for s in gw.sessions["veh0"]}:
+            gw.fail_replica(host)
+    sessions = gw.sessions["veh0"]
+    for sess in sessions:
+        st = gw._by_name[sess.engine].streams[sess.key]
+        assert sess.credit_frames == st.processed  # snapshot at rebind
+    adopters = {s.engine for s in sessions}
+    before = {n: gw.sched.by_name(n).capacity_ewma.value for n in adopters}
+    gw.leave("veh0")                               # no work since adoption
+    after = {n: gw.sched.by_name(n).capacity_ewma.value for n in adopters}
+    assert after == before
+
+
+def test_detach_adopt_preserves_backlog_and_counters():
+    import jax
+    a = VisionServeEngine("a", slots=1, frame_res=64, input_res=32,
+                          fps=10, use_gate=False, rng=jax.random.key(0))
+    b = VisionServeEngine("b", slots=1, frame_res=64, input_res=32,
+                          fps=10, use_gate=False, rng=jax.random.key(1))
+    a.open_stream("s", OUTER)
+    frames = np.random.default_rng(1).random((4, 64, 64, 3)).astype(
+        np.float32)
+    for f in frames[:2]:
+        a.push("s", f)
+    a.step()
+    st = a.detach_stream("s")
+    assert "s" not in a.streams
+    assert st.processed == 1 and len(st.pending) == 1
+    b.adopt_stream(st)
+    for f in frames[2:]:
+        b.push("s", f)
+    b.drain()
+    rec = b.close_stream("s")
+    assert rec.frames_total == 4 and rec.frames_processed == 4
+    b.ledger.check()
+
+
+# ---------------------------------------------------------------------------
+# scenario library
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_library_is_rich_enough():
+    assert len(SCENARIOS) >= 6
+    assert all(s.description for s in SCENARIOS.values())
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+@pytest.mark.parametrize("name", [n for n in sorted(SCENARIOS)
+                                  if n != "soak_churn"])
+def test_scenario_invariants_hold(name):
+    """Every library scenario (capped for test time) runs with zero
+    invariant violations; the full-length runs live in the scenario-soak
+    CI job / benchmark."""
+    s = get_scenario(name)
+    if s.ticks > 120:
+        s = get_scenario(name, ticks=120)
+    res = run_scenario(s)
+    assert res.violations == [], res.trace.tail(5) + "\n" + "\n".join(
+        map(str, res.violations))
+    assert res.summary["off"] > 0
+    assert res.summary["adm"] > 0
+    res.ledger.check()
+
+
+def test_same_seed_same_digest_different_seed_different_digest():
+    base = get_scenario("golden_churn", ticks=60)
+    a, b = run_scenario(base), run_scenario(base)
+    assert a.digest == b.digest                # determinism (asserted twice
+    assert a.trace.canonical() == b.trace.canonical()  # — hash and content)
+    c = run_scenario(get_scenario("golden_churn", ticks=60, seed=999))
+    assert c.digest != a.digest
+
+
+def test_scenario_exercises_claimed_behaviours():
+    """The library must actually produce the behaviours it advertises:
+    gating, deadline drops, battery departures, rebinds, refusals."""
+    gate = run_scenario(get_scenario("burst_duplicates", ticks=80))
+    assert gate.summary["gate"] > 0
+    ddl = run_scenario(get_scenario("deadline_pressure", ticks=100))
+    assert ddl.summary["ddl"] > 0
+    batt = run_scenario(get_scenario("battery_drain", ticks=120))
+    assert batt.summary["battery_departures"] > 0
+    fail = run_scenario(get_scenario("replica_failure", ticks=150))
+    assert fail.summary["rebinds"] > 0
+    assert fail.trace.of_kind("fail") and fail.trace.of_kind("restore")
+
+
+def test_runner_trace_records_rebind_thresholds():
+    res = run_scenario(get_scenario("replica_failure", ticks=80))
+    rebinds = res.trace.of_kind("rebind")
+    assert rebinds
+    assert all(ev.get("thresh") is not None for ev in rebinds)
+
+
+# ---------------------------------------------------------------------------
+# the soak (slow: scenario-soak CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_soak_churn_2000_ticks_zero_violations():
+    res = run_scenario(get_scenario("soak_churn"))
+    assert res.scenario.ticks >= 2000
+    assert res.violations == [], "\n".join(map(str, res.violations))
+    # genuine churn: joins, leaves, refusals, rebinds, battery departures
+    assert res.summary["joined"] > 50
+    assert res.summary["refused"] > 0
+    assert res.summary["rebinds"] > 0
+    assert res.summary["battery_departures"] > 0
+    assert res.summary["ddl"] > 0
+    assert res.summary["gate"] > 0
+    res.ledger.check()

@@ -390,8 +390,12 @@ def test_pallas_engine_gateless_path_processes_all_frames():
 def test_engine_never_recompiles_across_pallas_paths():
     """The never-recompile contract extends to the fused path: after one
     warm tick per (path, class), lane bind/evict churn and further ticks
-    must add zero jit cache entries on the model jits AND the kernel jits."""
+    must add zero jit cache entries on the model jits AND the kernel jits.
+    The simulator's recompile invariant watches the same jits through the
+    shared ``repro.simulate.invariants.jit_cache_sizes`` registry — also
+    pinned here so the two checks cannot drift apart."""
     from repro.kernels import vision_ops as vk
+    from repro.simulate.invariants import jit_cache_sizes
 
     def kernel_cache_size():
         return (vk._ingest_frame_jit._cache_size()
@@ -407,6 +411,7 @@ def test_engine_never_recompiles_across_pallas_paths():
             eng.push(key, _frames(1, seed=seed)[0])
         eng.step()
     n_model, n_kernel = V_cache_size(), kernel_cache_size()
+    n_registry = jit_cache_sizes()
 
     for eng in engines.values():                  # churn: bind/evict/rotate
         eng.open_stream("o1", OUTER)
@@ -421,6 +426,7 @@ def test_engine_never_recompiles_across_pallas_paths():
         eng.step()
     assert V_cache_size() == n_model
     assert kernel_cache_size() == n_kernel
+    assert jit_cache_sizes() == n_registry
 
 
 # ---------------------------------------------------------------------------
