@@ -20,12 +20,13 @@ import time
 from repro.simulate import SCENARIOS, get_scenario, run_scenario
 
 
-def main(rows=None, skip_soak: bool = False):
+def main(rows=None, skip_soak: bool = False, digests_path: str = ""):
     rows = rows if rows is not None else []
     total_ticks = 0
     total_violations = 0
     names = [n for n in sorted(SCENARIOS)
              if not (skip_soak and n == "soak_churn")]
+    digests = []
     print(f"{'scenario':22s} {'ticks':>6s} {'wall_s':>7s} {'joined':>6s} "
           f"{'off':>7s} {'adm':>7s} {'gate':>6s} {'ddl':>6s} "
           f"{'rebind':>6s} {'viol':>4s}  digest")
@@ -36,12 +37,18 @@ def main(rows=None, skip_soak: bool = False):
         s = res.summary
         total_ticks += s["ticks"]
         total_violations += s["violations"]
+        digests.append(f"{name} seed={s['seed']} {res.digest}")
         print(f"{name:22s} {s['ticks']:6d} {wall:7.1f} {s['joined']:6d} "
               f"{s['off']:7d} {s['adm']:7d} {s['gate']:6d} {s['ddl']:6d} "
               f"{s['rebinds']:6d} {s['violations']:4d}  "
               f"{res.digest[:12]}")
         for v in res.violations:
             print(f"    !! {v}")
+    if digests_path:
+        # per-seed digests survive as a CI artifact: diffing two runs'
+        # digest files localises *which* scenario drifted
+        with open(digests_path, "w") as f:
+            f.write("\n".join(digests) + "\n")
 
     # determinism certificate: the golden scenario, twice
     a = run_scenario(get_scenario("golden_churn"))
@@ -62,5 +69,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-soak", action="store_true",
                     help="skip the 2000-tick soak_churn scenario")
+    ap.add_argument("--digests", default="",
+                    help="write per-scenario trace digests to this file "
+                         "(uploaded as a CI artifact on failure)")
     args = ap.parse_args()
-    main(skip_soak=args.skip_soak)
+    main(skip_soak=args.skip_soak, digests_path=args.digests)

@@ -26,22 +26,38 @@ def auto_axis_types(n: int) -> Optional[tuple]:
 
 
 def make_mesh(axis_shapes: Sequence[int], axis_names: Tuple[str, ...],
-              *, axis_types="auto", **kw) -> Mesh:
+              *, axis_types="auto", devices=None, **kw) -> Mesh:
     """``jax.make_mesh`` accepting ``axis_types`` on every JAX version.
 
     ``axis_types="auto"`` (the default) requests Auto on all axes when the
     installed JAX supports the concept and silently degrades to a plain mesh
     otherwise.  Pass an explicit tuple to forward it verbatim (raises on old
     JAX only then, since the caller truly depends on it).
+
+    ``devices=None`` takes the first ``prod(axis_shapes)`` local devices, so
+    a mesh smaller than the host device pool (the fleet's ``replica`` axis
+    on an ``--xla_force_host_platform_device_count`` CPU mesh) Just Works
+    instead of requiring the caller to slice ``jax.devices()`` themselves.
     """
     if axis_types == "auto":
         axis_types = auto_axis_types(len(tuple(axis_names)))
+    if devices is None:
+        n = 1
+        for s in axis_shapes:
+            n *= int(s)
+        pool = jax.devices()
+        if len(pool) < n:
+            raise ValueError(f"mesh {tuple(axis_shapes)} needs {n} devices, "
+                             f"only {len(pool)} available")
+        devices = pool[:n]
     if not hasattr(jax, "make_mesh"):
         # pre-0.4.35 JAX: build the mesh by hand from the device grid
         from jax.experimental import mesh_utils
-        devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
-        return Mesh(devices, tuple(axis_names))
+        grid = mesh_utils.create_device_mesh(tuple(axis_shapes),
+                                             devices=list(devices))
+        return Mesh(grid, tuple(axis_names))
     if axis_types is not None:
         return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
-                             axis_types=axis_types, **kw)
-    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+                             devices=devices, axis_types=axis_types, **kw)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         devices=devices, **kw)

@@ -143,9 +143,12 @@ def warm_jits(scenario: Scenario) -> None:
             eng.step()
 
 
-def build_fleet(scenario: Scenario) -> FleetGateway:
+def build_fleet(scenario: Scenario, *, parallel: bool = False,
+                fleet_mode: Optional[str] = None) -> FleetGateway:
     """Instantiate the real engine replicas (virtual clocks, shared
-    ledger) and the gateway, exactly as a serving deployment would."""
+    ledger) and the gateway, exactly as a serving deployment would.
+    ``parallel=True`` builds the gateway in mesh-parallel tick mode
+    (``streams.fleet_step``) — bit-identical traces on virtual clocks."""
     import jax
     replicas = []
     for i, spec in enumerate(scenario.replicas):
@@ -161,7 +164,8 @@ def build_fleet(scenario: Scenario) -> FleetGateway:
             quantum=scenario.quantum, max_pending=scenario.max_pending,
             clock=clock, rng=jax.random.key(i)))
     gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
-                      overcommit=scenario.overcommit)
+                      overcommit=scenario.overcommit,
+                      parallel=parallel, fleet_mode=fleet_mode)
     # install the heterogeneous HW priors (the gateway defaults to a
     # cores-only prior; scenarios speak full HardwareInfo — the paper's
     # HW_INFO handshake, refined by measurement as the run progresses)
@@ -183,10 +187,12 @@ def _stream_thresh(eng: VisionServeEngine, key: str) -> Optional[float]:
 
 
 class ScenarioRunner:
-    def __init__(self, scenario: Scenario) -> None:
+    def __init__(self, scenario: Scenario, *, parallel: bool = False,
+                 fleet_mode: Optional[str] = None) -> None:
         self.s = scenario
         warm_jits(scenario)
-        self.gw = build_fleet(scenario)
+        self.gw = build_fleet(scenario, parallel=parallel,
+                              fleet_mode=fleet_mode)
         self.trace = Trace()
         self.inv = InvariantSuite(self.gw)
         self.energy = EnergyModel()
@@ -370,5 +376,11 @@ class ScenarioRunner:
                               summary=summary)
 
 
-def run_scenario(scenario: Scenario) -> ScenarioResult:
-    return ScenarioRunner(scenario).run()
+def run_scenario(scenario: Scenario, *, parallel: bool = False,
+                 fleet_mode: Optional[str] = None) -> ScenarioResult:
+    """Run a scenario; ``parallel=True`` drives the fleet through the
+    fused mesh-parallel tick instead of serial per-replica stepping (the
+    differential harness in ``tests/test_fleet_step.py`` pins the two
+    paths to bit-identical trace digests)."""
+    return ScenarioRunner(scenario, parallel=parallel,
+                          fleet_mode=fleet_mode).run()

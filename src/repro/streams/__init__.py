@@ -7,8 +7,12 @@
                  ESD deadline drops accounted as skip rate
   gateway        per-vehicle session lifecycle + CapacityScheduler placement
                  across engine replicas + join backpressure
+  fleet_step     mesh-parallel fleet tick: all replicas' device work in one
+                 shard_map dispatch over a ("replica",) mesh (vmap fallback
+                 on a single device) — FleetGateway(parallel=True)
 """
 from repro.streams.filter import GateStats, MotionGate, block_sad  # noqa: F401
+from repro.streams.fleet_step import FleetStep, resolve_mode  # noqa: F401
 from repro.streams.gateway import FleetGateway, StreamSession  # noqa: F401
 from repro.streams.vision_engine import (  # noqa: F401
     INNER, OUTER, StreamState, VisionServeEngine)

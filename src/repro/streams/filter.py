@@ -200,6 +200,17 @@ class MotionGate:
         moving = scores > self.thresh
         # first frame of a stream always admits (no reference yet)
         admit = active & (moving | ~self.has_ref)
+        return self.commit_decision(active, admit)
+
+    def commit_decision(self, active: np.ndarray,
+                        admit: np.ndarray) -> np.ndarray:
+        """Replay the host-state half of :meth:`decide` for an admit mask
+        computed elsewhere.  The fleet-parallel tick thresholds on device
+        with this gate's own ``thresh``/``has_ref`` (shipped in as fixed-
+        shape arrays) and hands the resulting mask back here, so the AIMD
+        controller, first-frame bookkeeping, and stats stay host-side and
+        bit-identical to the serial :meth:`decide` path."""
+        admit = np.asarray(admit, bool)
         self.has_ref = self.has_ref | admit
         self._adapt(active, admit)
         n_act, n_adm = int(active.sum()), int(admit.sum())

@@ -1,0 +1,388 @@
+"""Mesh-parallel fleet tick: every replica's device work in one dispatch.
+
+The serial ``FleetGateway.tick`` steps replicas one after another, so each
+tick pays (replicas x classes) separate gate + model dispatches plus a
+per-frame admission scatter, and the accelerator only ever sees one
+replica's tiny batch at a time — adding replicas adds wall-clock instead
+of dividing it, the opposite of the paper's parallel-devices scaling story
+(§3.2.5).  ``FleetStep`` stacks the per-replica engine state along a
+leading ``replica`` axis —
+
+    batch pools   (R, slots, res, res, 3)   per model class
+    stage frames  (R, slots, H, W, 3)       pinned host buffers, one upload
+    gate refs     (R, slots, g, g, 3)       + thresh/has_ref (R, slots)
+    lane masks    (R, slots) bool           liveness is masked, not reshaped
+    model params  pytrees stacked to (R, ...)
+
+— and runs ingest → gate-score → admit-threshold → model forward for *all*
+replicas in one jit containing one mapped computation:
+
+  * ``mode="shard_map"``: ``shard_map`` over a ``mesh(("replica",))``
+    built with ``sharding/compat.make_mesh``; each device executes exactly
+    the single-replica program (the mapped body indexes away its size-1
+    replica block), so per-replica math is token-for-token the serial
+    program and results are bit-identical;
+  * ``mode="vmap"``: the same stacked state through ``jax.vmap`` of the
+    same body — the single-device / CPU / interpret fallback, so the code
+    path is identical off-TPU.
+
+Inside the mapped body the existing kernels are reused unchanged:
+``kernels.vision_ops.ingest_frame`` / ``scatter_admit`` on the Pallas
+path, the ``streams.filter`` jnp gate ops + ``models.vision`` analysis
+jits on the legacy path.  Replica-stacking and per-replica unstacking both
+live *inside* the jit, and frames stage into pinned host buffers
+(``VisionServeEngine.enable_host_staging``), so a whole fleet tick issues
+exactly one device dispatch however many replicas/lanes are live.
+
+Host/device split: everything the serial path does on the host stays on
+the host, per replica, in the same order — lane rebalancing, deadline
+trims, backlog pops (``VisionServeEngine.begin_tick``/``stage_class``),
+the gate's AIMD controller and stats (``MotionGate.commit_decision``),
+counter/EWMA/ledger bookkeeping (``commit_class``/``end_tick``).  Only the
+O(pixels) work (normalize, resample, score, scatter, conv forward) and the
+admit *threshold* (a compare against the host-owned per-lane thresholds,
+shipped in as data) move into the fused dispatch.  Churn — join/leave/
+fail/rebind — therefore works exactly as in serial mode; a dead replica's
+rows ride along with an all-False lane mask and its host phases are
+skipped, so shapes never change and nothing recompiles.
+
+Under virtual clocks (``repro.simulate``) the parallel tick is
+bit-identical to the serial tick: same admit decisions, same ledger
+records, same golden-trace digests (pinned by ``tests/test_fleet_step``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.core.clock import VirtualClock
+from repro.models import vision as V
+from repro.sharding.compat import make_mesh
+from repro.streams import filter as sfilter
+from repro.streams.vision_engine import (INNER, OUTER, VisionServeEngine,
+                                         _scatter_stage_impl)
+
+MODES = ("shard_map", "vmap")
+
+
+def _shard_map():
+    if hasattr(jax, "shard_map"):                 # jax >= 0.6 spelling
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def resolve_mode(n_replicas: int, mode: Optional[str] = None) -> str:
+    """``shard_map`` on a real accelerator mesh with enough devices,
+    ``vmap`` otherwise — same stacked state and mapped body either way.
+
+    Forced host-platform CPU devices (``XLA_FLAGS=--xla_force_host_
+    platform_device_count=N``) execute their programs *sequentially* on
+    one shared thread pool, so a CPU shard_map only adds per-device
+    coordination overhead (measured: an N-way mapped conv costs N x the
+    single-device time plus 5-30 ms launch cost) — on CPU the fused
+    tick's win is dispatch/sync amortisation, which ``vmap`` captures in
+    full.  Pass ``mode="shard_map"`` explicitly to exercise the mesh path
+    off-accelerator (the parity suite does, on a forced-device mesh)."""
+    if mode is not None:
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        return mode
+    if (n_replicas > 1 and len(jax.devices()) >= n_replicas
+            and jax.default_backend() != "cpu"):
+        return "shard_map"
+    return "vmap"
+
+
+def _stack_trees(trees: Sequence[dict]):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fused(mode: str, mesh, n_replicas: int, dc, pc, input_res: int,
+                 use_pallas: bool, use_gate: bool, gate_res: int,
+                 block: int, interpret: bool):
+    """Build (and memoise) the fused fleet-tick jit for one geometry.
+
+    Keyed on everything the closure captures — mode/mesh/replica count,
+    model configs, resolutions, gate geometry, kernel path — so repeated
+    ``FleetStep`` construction (bench repeats, test sweeps, gateway
+    rebuilds) reuses one compiled XLA program instead of recompiling per
+    instance.  Model params are call arguments, never captured."""
+    if use_pallas:
+        from repro.kernels import vision_ops
+    R = n_replicas
+
+    def one_class(forward, batch, stage, refs, thr, href, act):
+        """Single replica, single model class — mirrors the device
+        half of ``VisionServeEngine._step_class`` exactly."""
+        if use_pallas:
+            if use_gate:
+                model, small, scores = vision_ops.ingest_frame(
+                    stage, refs, model_res=input_res, gate_res=gate_res,
+                    block=block, interpret=interpret)
+                admit = act & ((scores > thr) | ~href)
+                batch, refs = vision_ops.scatter_admit(
+                    batch, model, refs, small, admit, interpret=interpret)
+            else:
+                model = vision_ops.downscale(stage, input_res,
+                                             interpret=interpret)
+                admit = act
+                batch, _ = vision_ops.scatter_admit(
+                    batch, model, refs, refs, admit, interpret=interpret)
+        else:
+            # the one masked-scatter expression the bit-parity contract
+            # rests on — shared with the engine's serial host-staging path
+            batch = _scatter_stage_impl(batch, stage, act)
+            if use_gate:
+                small = V.downscale(sfilter._normalize(batch), gate_res)
+                scores = sfilter._block_sad_jnp(refs, small, block)
+                admit = act & ((scores > thr) | ~href)
+                refs = sfilter._gate_update(refs, small, admit)
+            else:
+                admit = act
+        return admit, forward(batch), batch, refs
+
+    def single(ops: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """One replica's whole tick (both classes), no replica axis."""
+        dp, pp = ops["dp"], ops["pp"]
+
+        def fwd_outer(batch):
+            flags, _ = V.analyse_outer(dc, dp, batch)
+            return flags.any(axis=1)                    # (slots,)
+
+        def fwd_inner(batch):
+            distracted, _ = V.analyse_inner(pc, pp, batch)
+            return distracted
+
+        out: Dict[str, jax.Array] = {}
+        for kind, forward in ((OUTER, fwd_outer), (INNER, fwd_inner)):
+            admit, flags, batch, refs = one_class(
+                forward, ops[f"batch_{kind}"], ops["stage"],
+                ops[f"refs_{kind}"], ops[f"thr_{kind}"],
+                ops[f"href_{kind}"], ops[f"act_{kind}"])
+            out[f"admit_{kind}"] = admit
+            out[f"flags_{kind}"] = flags
+            out[f"batch_{kind}"] = batch
+            if use_gate:
+                out[f"refs_{kind}"] = refs
+        return out
+
+    if mode == "shard_map":
+        spec = PartitionSpec("replica")
+
+        def shard_body(ops):
+            # each device holds a size-1 replica block: index it away,
+            # run the per-replica program, restore the leading axis
+            res = single(jax.tree_util.tree_map(lambda x: x[0], ops))
+            return jax.tree_util.tree_map(lambda x: x[None], res)
+
+        mapped = _shard_map()(shard_body, mesh=mesh, in_specs=spec,
+                              out_specs=spec, check_rep=False)
+    else:
+        mapped = jax.vmap(single)
+
+    def fused(ops):
+        """Stack per-replica state, run the mapped tick, hand back the
+        engine-owned arrays unstacked — so the host round-trip costs
+        zero eager dispatches either side of the one jit call."""
+        stacked = {"dp": ops["dp"], "pp": ops["pp"],
+                   "stage": jnp.asarray(ops["stage"])}
+        for k in ("thr", "href", "act"):
+            for kind in (OUTER, INNER):
+                stacked[f"{k}_{kind}"] = jnp.asarray(ops[f"{k}_{kind}"])
+        for k in ("batch", "refs"):
+            for kind in (OUTER, INNER):
+                stacked[f"{k}_{kind}"] = jnp.stack(ops[f"{k}_{kind}"])
+        out = mapped(stacked)
+        # one (4, R, slots) bool mask output = one host transfer for
+        # everything the commit loop reads
+        res = {"masks": jnp.stack(
+            [out[f"admit_{OUTER}"], out[f"admit_{INNER}"],
+             out[f"flags_{OUTER}"], out[f"flags_{INNER}"]])}
+        for key, v in out.items():
+            if not key.startswith(("admit", "flags")):
+                res[key] = tuple(v[i] for i in range(R))
+        return res
+
+    return jax.jit(fused)
+
+
+class FleetStep:
+    """One-dispatch fleet tick over stacked ``VisionServeEngine`` state."""
+
+    def __init__(self, replicas: Sequence[VisionServeEngine], *,
+                 mode: Optional[str] = None, warm: bool = True) -> None:
+        if not replicas:
+            raise ValueError("need at least one engine replica")
+        self.replicas: List[VisionServeEngine] = list(replicas)
+        ref = self.replicas[0]
+        for r in self.replicas:
+            for attr in ("slots", "frame_res", "input_res", "use_pallas"):
+                if getattr(r, attr) != getattr(ref, attr):
+                    raise ValueError(
+                        f"fleet-parallel tick needs uniform engine geometry: "
+                        f"{r.name}.{attr}={getattr(r, attr)} != "
+                        f"{ref.name}.{attr}={getattr(ref, attr)}")
+            if (r.gates[OUTER] is None) != (ref.gates[OUTER] is None):
+                raise ValueError("fleet-parallel tick needs a uniform "
+                                 "use_gate setting across replicas")
+            if r.dc != ref.dc or r.pc != ref.pc:
+                raise ValueError("fleet-parallel tick needs identical model "
+                                 "configs across replicas")
+        self.slots = ref.slots
+        self.use_pallas = ref.use_pallas
+        self.use_gate = ref.gates[OUTER] is not None
+        if self.use_gate:
+            g0 = ref.gates[OUTER]
+            for r in self.replicas:
+                for kind in (OUTER, INNER):
+                    g = r.gates[kind]
+                    if g.gate_res != g0.gate_res or g.block != g0.block:
+                        raise ValueError(
+                            "fleet-parallel tick needs uniform gate "
+                            "geometry (gate_res, block) across replicas")
+            self.gate_res, self.block = g0.gate_res, g0.block
+        else:
+            self.gate_res, self.block = 1, 8
+        R = len(self.replicas)
+        self.mode = resolve_mode(R, mode)
+        self.mesh = (make_mesh((R,), ("replica",))
+                     if self.mode == "shard_map" else None)
+        # one pinned fleet staging buffer; each engine's _stage is a view
+        # of its replica row, so the host never copies frames again and
+        # the fused call uploads the whole fleet's staging in one piece
+        self._stage_all = np.zeros(
+            (R, self.slots, ref.frame_res, ref.frame_res, 3), np.float32)
+        for i, r in enumerate(self.replicas):
+            r.enable_host_staging()
+            r._stage = self._stage_all[i]
+        # engines never retrain: stack the per-replica model params once
+        self._dp = _stack_trees([r.dp for r in self.replicas])
+        self._pp = _stack_trees([r.pp for r in self.replicas])
+        # gateless ref/scatter operands keep a fixed (tiny) shape
+        self._null_refs = tuple(
+            jnp.zeros((self.slots, self.gate_res, self.gate_res, 3),
+                      jnp.float32) for _ in range(R))
+        self._zeros_rs = np.zeros((R, self.slots), np.float32)
+        self._false_rs = np.zeros((R, self.slots), bool)
+        self._fused = self._build()
+        self.dispatches = 0            # fused device dispatches issued
+        self.last_dispatch_s = 0.0     # wall time of the last fused call
+        if warm:
+            self._warm()
+
+    # ------------------------------------------------------------------
+    # fused computation
+    # ------------------------------------------------------------------
+    def _build(self):
+        ref = self.replicas[0]
+        return _build_fused(
+            self.mode, self.mesh, len(self.replicas), ref.dc, ref.pc,
+            ref.input_res, self.use_pallas, self.use_gate, self.gate_res,
+            self.block, ref._interpret if self.use_pallas else False)
+
+    # ------------------------------------------------------------------
+    # host orchestration
+    # ------------------------------------------------------------------
+    def _gather(self, act: Dict[str, np.ndarray]) -> Dict[str, object]:
+        """Collect per-replica engine state for the fused call (tuples of
+        device arrays + host numpy masks; stacking happens inside the jit).
+        """
+        ops: Dict[str, object] = {"dp": self._dp, "pp": self._pp}
+        ops["stage"] = self._stage_all
+        for kind in (OUTER, INNER):
+            ops[f"batch_{kind}"] = tuple(
+                r.batches[kind] for r in self.replicas)
+            if self.use_gate:
+                ops[f"refs_{kind}"] = tuple(
+                    r.gates[kind].refs for r in self.replicas)
+                ops[f"thr_{kind}"] = np.stack(
+                    [r.gates[kind].thresh for r in self.replicas])
+                ops[f"href_{kind}"] = np.stack(
+                    [r.gates[kind].has_ref for r in self.replicas])
+            else:
+                ops[f"refs_{kind}"] = self._null_refs
+                ops[f"thr_{kind}"] = self._zeros_rs
+                ops[f"href_{kind}"] = self._false_rs
+            ops[f"act_{kind}"] = act[kind]
+        return ops
+
+    def _warm(self) -> None:
+        """Compile the fused tick at construction (all-inactive masks, the
+        exact shapes/dtypes every later tick uses) so churn mid-run never
+        observes a compile — the same never-recompile contract the serial
+        engines keep."""
+        act = {OUTER: np.array(self._false_rs),
+               INNER: np.array(self._false_rs)}
+        jax.block_until_ready(self._fused(self._gather(act)))
+
+    def tick(self, gw) -> int:
+        """One fleet tick with serial semantics: identical host phases per
+        live replica around a single fused device dispatch.  ``gw`` is the
+        owning ``FleetGateway`` (scheduler feedback + dead-replica set)."""
+        R = len(self.replicas)
+        live = [r for r in self.replicas if r.name not in gw.dead]
+        t0s = {r.name: r.begin_tick() for r in live}
+        act = {OUTER: np.zeros((R, self.slots), bool),
+               INNER: np.zeros((R, self.slots), bool)}
+        for i, r in enumerate(self.replicas):
+            if r.name in gw.dead:
+                continue
+            for kind in (OUTER, INNER):
+                act[kind][i] = r.stage_class(kind)
+
+        per_done = {r.name: 0 for r in live}
+        wall_share_s = {r.name: 0.0 for r in live}
+        if act[OUTER].any() or act[INNER].any():
+            wall0 = time.perf_counter()
+            out = jax.block_until_ready(self._fused(self._gather(act)))
+            wall = time.perf_counter() - wall0
+            self.dispatches += 1
+            self.last_dispatch_s = wall
+            masks = np.asarray(out["masks"])              # (4, R, slots)
+            admit = {OUTER: masks[0], INNER: masks[1]}
+            flags = {OUTER: masks[2], INNER: masks[3]}
+            total = int(admit[OUTER].sum() + admit[INNER].sum())
+            for i, r in enumerate(self.replicas):
+                if r.name in gw.dead:
+                    continue
+                on_wall = not isinstance(r.clock, VirtualClock)
+                for kind in (OUTER, INNER):
+                    a_row, m_row = act[kind][i], admit[kind][i]
+                    if a_row.any():
+                        # serial parity: state only refreshes where the
+                        # serial path would have dispatched this class
+                        r.batches[kind] = out[f"batch_{kind}"][i]
+                        if self.use_gate:
+                            r.gates[kind].refs = out[f"refs_{kind}"][i]
+                    dt = (wall * int(m_row.sum()) / total
+                          if on_wall and total else None)
+                    if dt is not None:
+                        wall_share_s[r.name] += dt
+                    per_done[r.name] += r.commit_class(
+                        kind, a_row, m_row, flags[kind][i], dt_share_s=dt)
+
+        done = 0
+        for r in live:
+            n = per_done[r.name]
+            r.end_tick(t0s[r.name], n)
+            if n:
+                if isinstance(r.clock, VirtualClock):
+                    # same reads/charges as the serial path: bit-identical
+                    dt_ms = (r.clock.now_s() - t0s[r.name]) * 1000.0
+                else:
+                    # wall clocks: the elapsed time since t0 spans the
+                    # WHOLE fleet's host+device work — feed the capacity
+                    # EWMA this replica's share of the fused dispatch
+                    # instead, matching serial observe semantics
+                    dt_ms = wall_share_s[r.name] * 1000.0
+                gw.sched.by_name(r.name).observe(n, dt_ms)
+            done += n
+        return done

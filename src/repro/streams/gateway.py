@@ -109,7 +109,8 @@ class FleetGateway:
 
     def __init__(self, replicas: Sequence[VisionServeEngine], *,
                  deadline_ms: float = 0.0, overcommit: float = 1.5,
-                 ledger: Optional[Ledger] = None) -> None:
+                 ledger: Optional[Ledger] = None, parallel: bool = False,
+                 fleet_mode: Optional[str] = None) -> None:
         if not replicas:
             raise ValueError("need at least one engine replica")
         if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
@@ -141,6 +142,14 @@ class FleetGateway:
         self.refused = 0
         self.rebinds: List[Tuple[str, str, str]] = []  # (key, from, to)
         self.closed: List[SegmentRecord] = []
+        # parallel=True fuses every live replica's device work into one
+        # mesh-parallel dispatch per tick (streams.fleet_step); host-side
+        # churn/placement/bookkeeping above is identical in both modes
+        self.parallel = bool(parallel)
+        self._fleet = None
+        if self.parallel:
+            from repro.streams.fleet_step import FleetStep
+            self._fleet = FleetStep(self.replicas, mode=fleet_mode)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -295,7 +304,14 @@ class FleetGateway:
         the scheduler's capacity EWMAs (the HW_INFO -> measurement
         handoff).  Timing reads each replica's own clock, so a simulated
         replica's virtual speed profile flows into the same capacity
-        estimate a wall-clocked replica's real speed does."""
+        estimate a wall-clocked replica's real speed does.
+
+        With ``parallel=True`` the same tick runs every live replica's
+        device work in one fused mesh dispatch (``streams.fleet_step``) —
+        identical host phases, identical accounting, bit-identical results
+        under virtual clocks."""
+        if self._fleet is not None:
+            return self._fleet.tick(self)
         done = 0
         for r in self.live_replicas():
             t0 = r.clock.now_s()

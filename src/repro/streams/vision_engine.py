@@ -73,6 +73,16 @@ def _load_impl(batch, frame, lane):
 _load_frame = jax.jit(_load_impl, donate_argnums=(0,))
 
 
+def _scatter_stage_impl(batch, staged, active):
+    """Masked row scatter: active lanes adopt their staged frame (value-
+    identical to the per-lane ``_load_frame`` loop it batches)."""
+    return jnp.where(active[:, None, None, None],
+                     staged.astype(batch.dtype), batch)
+
+
+_scatter_stage = jax.jit(_scatter_stage_impl, donate_argnums=(0,))
+
+
 @dataclass
 class StreamState:
     """One vehicle stream bound to (or waiting for) an engine lane."""
@@ -169,6 +179,11 @@ class VisionServeEngine:
             outer_gate = gate if gate is not None else MotionGate(slots)
             self.gates = {OUTER: outer_gate, INNER: outer_gate.similar()}
 
+        # fleet-parallel mode stages popped frames into the pinned host
+        # buffer (one fused upload per tick) instead of per-frame device
+        # scatters; enable_host_staging() flips this on
+        self._host_staging = False
+
         self.lanes: List[Optional[StreamState]] = [None] * slots
         self.streams: Dict[str, StreamState] = {}
         self.waiting: Deque[StreamState] = deque()
@@ -181,6 +196,17 @@ class VisionServeEngine:
         self.ticks = 0
         self.frames_processed = 0
         self.busy_s = 0.0
+
+    def enable_host_staging(self) -> None:
+        """Stage popped frames into the pinned host buffer (the Pallas
+        path's layout) on the jnp path too: the fleet-parallel tick ships
+        one (slots, H, W, 3) buffer per tick and scatters it on device,
+        replacing the per-frame ``_load_frame`` dispatch loop with
+        bit-identical batch contents."""
+        if not hasattr(self, "_stage"):
+            self._stage = np.zeros(
+                (self.slots, self.frame_res, self.frame_res, 3), np.float32)
+        self._host_staging = True
 
     # ------------------------------------------------------------------
     # stream lifecycle
@@ -402,9 +428,12 @@ class VisionServeEngine:
             st.dropped += 1
             st.deadline_dropped += 1
 
-    def step(self) -> int:
-        """One tick: admit one frame per bound stream, gate, run both
-        batched models (outer first).  Returns frames processed."""
+    def begin_tick(self) -> float:
+        """Host half of tick start: lane rebalancing + the fixed per-tick
+        clock charge.  Returns the clock reading ``end_tick`` measures the
+        tick-cost EWMA from.  Split out of :meth:`step` so the fleet-
+        parallel tick (``streams.fleet_step``) can run the identical host
+        phases around one fused device dispatch."""
         # lanes freed since the last tick soak up waiters
         for lane, cur in enumerate(self.lanes):
             if cur is None and self.waiting:
@@ -446,21 +475,36 @@ class VisionServeEngine:
                 self._unbind(cur)
                 self._enqueue_waiting(cur)
                 self._bind(nxt, lane)
-
-        done = 0
         t0 = self.clock.now_s()
         self.clock.charge(TICK)                  # fixed per-tick overhead
-        for kind in (OUTER, INNER):              # outer/hazard class first
-            done += self._step_class(kind)
+        return t0
+
+    def end_tick(self, t0_s: float, done: int) -> None:
+        """Tick-cost EWMA + tick counter — the closing half of a tick."""
         if done:
             # a stream completes one frame per whole tick (both class
             # dispatches + staging/gating) — this is the latency estimate
             # the deadline trim divides by
-            self.tick_cost_ms.update((self.clock.now_s() - t0) * 1000.0)
+            self.tick_cost_ms.update((self.clock.now_s() - t0_s) * 1000.0)
         self.ticks += 1
+
+    def step(self) -> int:
+        """One tick: admit one frame per bound stream, gate, run both
+        batched models (outer first).  Returns frames processed."""
+        t0 = self.begin_tick()
+        done = 0
+        for kind in (OUTER, INNER):              # outer/hazard class first
+            done += self._step_class(kind)
+        self.end_tick(t0, done)
         return done
 
-    def _step_class(self, kind: str) -> int:
+    def stage_class(self, kind: str) -> np.ndarray:
+        """Deadline-trim and pop one frame per bound ``kind`` stream into
+        the staging layout (batch rows on the jnp path, the pinned host
+        buffer on the Pallas path).  Returns the (slots,) active mask.
+        The device work on the staged frames happens in :meth:`_step_class`
+        serially, or in one fused fleet dispatch (``streams.fleet_step``).
+        """
         batch = self.batches[kind]
         active = np.zeros(self.slots, bool)
         for lane, st in enumerate(self.lanes):
@@ -469,22 +513,32 @@ class VisionServeEngine:
             self._trim_to_deadline(st)
             frame = st.pending.popleft()
             st.served_since_bind += 1      # gated frames consume quantum too
-            if self.use_pallas:
+            if self.use_pallas or self._host_staging:
                 self._stage[lane] = frame
             else:
                 batch = _load_frame(batch, jnp.asarray(frame, jnp.float32),
                                     jnp.int32(lane))
             active[lane] = True
-        if not active.any():
-            self.batches[kind] = batch
-            return 0
+        self.batches[kind] = batch
+        return active
 
+    def _step_class(self, kind: str) -> int:
+        active = self.stage_class(kind)
+        if not active.any():
+            return 0
+        if self._host_staging and not self.use_pallas:
+            # a host-staging engine stepped serially (e.g. a direct
+            # drain()) commits the staged rows with one masked scatter
+            self.batches[kind] = _scatter_stage(
+                self.batches[kind], jnp.asarray(self._stage),
+                jnp.asarray(active))
+        batch = self.batches[kind]
         gate = self.gates[kind]
         if self.use_pallas:
             batch, admit = self._ingest_pallas(batch, gate, active)
+            self.batches[kind] = batch
         else:
             admit = gate.admit(batch, active) if gate is not None else active
-        self.batches[kind] = batch
         for lane in np.nonzero(active & ~admit)[0]:
             self.lanes[lane].gated += 1
 
@@ -492,14 +546,30 @@ class VisionServeEngine:
         if n_admit == 0:
             return 0
         t0 = self.clock.now_s()
+        per_frame = self._forward(kind, batch)
+        return self._finish_class(admit, per_frame, t0, n_admit)
+
+    def _forward(self, kind: str, batch: jax.Array) -> np.ndarray:
+        """Model dispatch for one class; returns (slots,) per-lane flags."""
         if kind == OUTER:
             flags, _ = V.analyse_outer(self.dc, self.dp, batch)
-            per_frame = np.asarray(flags).any(axis=1)          # (slots,)
-        else:
-            distracted, _ = V.analyse_inner(self.pc, self.pp, batch)
-            per_frame = np.asarray(distracted)
+            return np.asarray(flags).any(axis=1)               # (slots,)
+        distracted, _ = V.analyse_inner(self.pc, self.pp, batch)
+        return np.asarray(distracted)
+
+    def _finish_class(self, admit: np.ndarray, per_frame: np.ndarray,
+                      t0_s: float, n_admit: int,
+                      dt_override_s: Optional[float] = None) -> int:
+        """Post-forward accounting shared by the serial and fleet paths:
+        clock charge, cost EWMAs, per-stream counters/flags/timestamps."""
         self.clock.charge(FRAME, n_admit)        # no-op on a WallClock
-        dt = self.clock.now_s() - t0
+        dt = self.clock.now_s() - t0_s
+        if dt_override_s is not None:
+            # fleet-parallel tick on a wall clock: the real dispatch ran
+            # fused across replicas elsewhere, so the caller passes this
+            # replica's share of the measured fused wall time (a virtual
+            # clock never takes this branch — its charge IS the cost)
+            dt = dt_override_s
         self.busy_s += dt
         self.frame_cost_ms.update(dt * 1000.0 / n_admit)
 
@@ -514,6 +584,29 @@ class VisionServeEngine:
             self.results[st.key].append(flag)
         self.frames_processed += n_admit
         return n_admit
+
+    def commit_class(self, kind: str, active: np.ndarray, admit: np.ndarray,
+                     per_frame: np.ndarray,
+                     dt_share_s: Optional[float] = None) -> int:
+        """Host bookkeeping for one class of a fleet-parallel tick.
+
+        The device work (gate score + admit threshold + model forward)
+        already ran inside the fused ``streams.fleet_step`` dispatch; this
+        applies exactly the accounting :meth:`_step_class` applies after
+        its own serial dispatch — gate controller replay, gated counters,
+        clock charges, per-stream stats — so the two paths stay
+        bit-identical under virtual clocks."""
+        gate = self.gates[kind]
+        if gate is not None and active.any():
+            gate.commit_decision(active, admit)
+        for lane in np.nonzero(active & ~admit)[0]:
+            self.lanes[lane].gated += 1
+        n_admit = int(admit.sum())
+        if n_admit == 0:
+            return 0
+        t0 = self.clock.now_s()
+        return self._finish_class(admit, per_frame, t0, n_admit,
+                                  dt_override_s=dt_share_s)
 
     def _ingest_pallas(self, batch: jax.Array, gate: Optional[MotionGate],
                        active: np.ndarray):
