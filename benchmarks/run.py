@@ -33,7 +33,7 @@ import time
 import traceback
 
 MODULES = ["turnaround", "energy", "esd_sweep", "kernel_micro",
-           "serving_bench", "fleet_bench", "scenario_soak",
+           "serve_bench", "fleet_bench", "scenario_soak",
            "roofline_report"]
 
 # (name-prefix, direction, relative tolerance, absolute floor) — first
@@ -49,6 +49,7 @@ GATE_RULES = [
     ("fleet_parallel_speedup", "higher", 0.30, 0.0),
     ("fleet_batching_speedup", "higher", 0.35, 0.0),
     ("fleet_gate_speedup", "higher", 0.35, 0.0),
+    ("serve_batching_speedup", "higher", 0.35, 0.0),
     ("fleet_gate_skip_rate", "equal", 0.15, 0.0),
     ("ingest_bytes_reduction_", "equal", 0.02, 0.0),
     ("ingest_parity_max_abs_err", "lower", 1.0, 1e-5),
@@ -63,6 +64,12 @@ GATE_RULES = [
     ("fleet_ingest_", "higher", 0.75, 0.0),
     ("ingest_cpu_3pass", "lower", 3.0, 0.0),
     ("fa_", "lower", 3.0, 0.0),
+    # token-engine wall-clock (serve_bench): catastrophic-only, like the
+    # other absolute metrics; the esd skip rates stay informational (they
+    # depend on measured per-token cost, which is machine-class noise)
+    ("serve_decode_us_per_token", "lower", 3.0, 0.0),
+    ("serve_ttft_", "lower", 3.0, 0.0),
+    ("serve_turnaround_", "lower", 3.0, 0.0),
 ]
 
 

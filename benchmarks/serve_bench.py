@@ -1,0 +1,129 @@
+"""Token-engine bench: decode throughput, chunked-prefill TTFT, EDA policy.
+
+The ``ServeEngine`` path of the unified EngineCore — CPU wall-clock on the
+reduced model, so the *relative* numbers (batching speedup, priority-class
+TTFT split, deadline skip behaviour) are the deliverable and absolute
+tokens/s is this host's.  Ledger percentile summaries (p50/p95/p99
+turnaround, TTFT, skip rate) are surfaced as rows so they land in the
+``BENCH_*.json`` snapshot.
+
+Gated metrics (see ``GATE_RULES`` in ``benchmarks/run.py``):
+``serve_batching_speedup`` is self-normalising and tightly toleranced;
+``serve_decode_us_per_token`` / ``serve_ttft_*`` are absolute wall-clock
+and only catch catastrophic slowdowns.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.config import EDAConfig, get_arch
+from repro.core.telemetry import Ledger
+from repro.models import transformer as T
+from repro.serving import Request, ServeEngine
+
+RNG = np.random.default_rng(0)
+
+
+def _setup(arch="starcoder2-3b"):
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _requests(cfg, n, max_new=8, n_prompt=12):
+    return [Request(rid=f"{'outer' if i % 2 == 0 else 'inner'}-{i:02d}",
+                    tokens=RNG.integers(0, cfg.vocab_size, n_prompt),
+                    max_new_tokens=max_new,
+                    priority=0 if i % 2 == 0 else 1,
+                    deadline_ms=0.0)
+            for i in range(n)]
+
+
+def decode_throughput(rows):
+    print("\n== continuous batching: decode tokens/s vs slots ==")
+    cfg, params = _setup()
+    us_per_tok = {}
+    for slots in (1, 2, 4):
+        eng = ServeEngine(cfg, params, slots=slots, cache_capacity=64,
+                          prefill_chunk=16)
+        for r in _requests(cfg, 8):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in done)
+        us_per_tok[slots] = 1e6 * dt / max(toks, 1)
+        print(f"slots={slots}: {toks / dt:7.1f} tok/s "
+              f"mean_turn={np.mean([r.turnaround_ms for r in done]):7.1f} ms")
+        rows.append((f"serve_decode_us_per_token_slots{slots}",
+                     us_per_tok[slots], "us_per_token"))
+    speedup = us_per_tok[1] / us_per_tok[4]
+    print(f"batching speedup (slots 1 -> 4): {speedup:.2f}x")
+    rows.append(("serve_batching_speedup", speedup, "x_vs_slots1"))
+
+
+def prefill_ttft(rows):
+    print("\n== chunked-prefill TTFT (long prompts through the ring) ==")
+    cfg, params = _setup()
+    ledger = Ledger()
+    # chunk must stay inside the reduced arch's sliding window (8): the
+    # 48-token prompts prefill as 6 ring-wrapping chunks per request
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=128,
+                      prefill_chunk=8, ledger=ledger)
+    for r in _requests(cfg, 8, max_new=4, n_prompt=48):
+        eng.submit(r)
+    done = eng.run()
+    ttfts = [r.ttft_ms for r in done]
+    print(f"TTFT mean {np.mean(ttfts):8.1f} ms over {len(done)} requests "
+          f"(48-token prompts, chunk=8)")
+    pct = ledger.percentiles()
+    for key in ("ttft_ms_p50", "ttft_ms_p95",
+                "turnaround_ms_p50", "turnaround_ms_p95"):
+        rows.append((f"serve_{key}", pct[key], "ledger_percentile"))
+
+
+def priority_latency_split(rows):
+    print("\n== outer/inner priority classes ==")
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
+                      prefill_chunk=16)
+    for r in _requests(cfg, 10, max_new=4):
+        eng.submit(r)
+    done = eng.run()
+    for prio, label in ((0, "outer/hazard"), (1, "inner/distract")):
+        ts = [r.ttft_ms for r in done if r.priority == prio]
+        print(f"{label:16s} mean TTFT {np.mean(ts):8.1f} ms (n={len(ts)})")
+        rows.append((f"serve_ttft_class_p{prio}", float(np.mean(ts)), label))
+
+
+def deadline_skip(rows):
+    print("\n== deadline token budgets (early stopping for serving) ==")
+    cfg, params = _setup()
+    for esd in (0.0, 2.0, 4.0):
+        eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
+                          prefill_chunk=16, eda=EDAConfig(esd=esd))
+        eng.token_cost_ms.update(40.0)
+        for r in _requests(cfg, 6, max_new=10):
+            r.deadline_ms = 800.0
+            eng.submit(r)
+        done = eng.run()
+        skip = np.mean([r.skip_rate for r in done])
+        print(f"esd={esd:3.1f}: mean skip {100 * skip:5.1f}% "
+              f"truncated {sum(r.truncated for r in done)}/{len(done)}")
+        rows.append((f"serve_esd{esd}", float(skip), "skip_rate"))
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    decode_throughput(rows)
+    prefill_ttft(rows)
+    priority_latency_split(rows)
+    deadline_skip(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,8 @@ are looked up through :func:`get_arch` / ``--arch <id>`` on the launchers.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -10,8 +10,15 @@ deadline-driven distributed analytics runtime.
   energy        energy proxy model (section 4.2.3)
   clock         Clock seam: WallClock for serving, VirtualClock for the
                 deterministic fleet-scenario simulator (repro.simulate)
+  engine_core   the shared continuous-batching EngineCore: slot-pool row
+                admission, two-class PriorityQueue, LanePool preemption,
+                tick phases + deadline budgets — both the vision and the
+                token engine are thin workload shells over it
 """
 from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.core.engine_core import (INNER, OUTER, EngineCore,  # noqa: F401
+                                    LanePool, PriorityQueue, batch_axis,
+                                    insert_row)
 from repro.core.early_stop import DynamicESD, EarlyStopPolicy, budget_mask  # noqa: F401
 from repro.core.runtime import (EDARuntime, DeviceProfile, PAPER_DEVICES,   # noqa: F401
                                 SimExecutor)

@@ -34,9 +34,11 @@ from __future__ import annotations
 import time
 from typing import Dict, Optional
 
-# Charge kinds used by the engine; a Clock may price any subset of these
+# Charge kinds used by the engines; a Clock may price any subset of these
 # (unknown kinds advance a VirtualClock by 0 — they are free).
-FRAME = "frame"
+FRAME = "frame"          # one frame of vision-model inference
+TOKEN = "token"          # one decoded token (token-engine decode tick)
+PREFILL = "prefill"      # one prompt token prefilled (chunked prefill)
 TICK = "tick"
 
 

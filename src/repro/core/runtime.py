@@ -19,8 +19,8 @@ each device's availability is tracked independently of the download clock.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 from repro.config import EDAConfig
 from repro.core.early_stop import DynamicESD, EarlyStopPolicy, EWMA

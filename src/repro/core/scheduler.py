@@ -20,7 +20,7 @@ inference segments onto pod worker groups in ``repro.serving``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.core.early_stop import EWMA
 from repro.core.segmentation import Segment, split_video

@@ -15,10 +15,24 @@ averages (Tables 4.2-4.7) and the skip-rate accounting (§4.2.2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 MS = float
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method), 0.0 for
+    an empty series — telemetry stays dependency-free."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    if len(xs) == 1:
+        return float(xs[0])
+    rank = (len(xs) - 1) * q / 100.0
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    return float(xs[lo] + (xs[hi] - xs[lo]) * (rank - lo))
 
 
 @dataclass
@@ -44,6 +58,9 @@ class SegmentRecord:
     frames_gated: Optional[int] = None      # motion-gate rejects
     frames_dropped: Optional[int] = None    # deadline + backpressure + churn
     frames_deadline_dropped: Optional[int] = None  # subset of dropped
+    # time-to-first-result: prompt-prefill TTFT for token workloads, 0.0
+    # when the producer does not measure it (vision streams, EDARuntime)
+    ttft_ms: MS = 0.0
     is_master: bool = False
     energy_j: float = 0.0
 
@@ -184,6 +201,26 @@ class Ledger:
                 energy_j=energy,
             ))
         return sums
+
+    def percentiles(self, qs: Sequence[float] = (50, 95, 99)
+                    ) -> Dict[str, float]:
+        """Tail summaries over the collected records: ``p50/p95/p99`` (by
+        default) of turnaround, TTFT and skip rate, keyed
+        ``"<metric>_p<q>"``.  TTFT percentiles cover only the records
+        whose producer measured a TTFT (token workloads); an empty ledger
+        (or no TTFT producers) yields 0.0 — benches surface these rows
+        straight into the ``BENCH_*.json`` snapshot."""
+        series = {
+            "turnaround_ms": [r.turnaround_ms for r in self.records],
+            "ttft_ms": [r.ttft_ms for r in self.records if r.ttft_ms > 0],
+            "skip_rate": [r.skip_rate for r in self.records],
+        }
+        out: Dict[str, float] = {}
+        for metric, values in series.items():
+            for q in qs:
+                key = f"{metric}_p{q:g}"
+                out[key] = percentile(values, q)
+        return out
 
     def real_time_fraction(self) -> float:
         if not self.records:

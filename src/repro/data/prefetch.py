@@ -8,7 +8,7 @@ thread rides under analysis.
 """
 from __future__ import annotations
 
-from typing import Any, Iterable, Iterator, Optional
+from typing import Any, Iterable, Iterator
 
 import jax
 

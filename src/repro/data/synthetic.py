@@ -14,7 +14,7 @@ learnable signal (integration tests assert the loss *decreases*).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional
 
 import numpy as np
 

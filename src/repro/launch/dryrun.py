@@ -35,7 +35,6 @@ from repro.models.attention import RunOpts
 from repro.roofline import analyse_compiled
 from repro.sharding import rules
 from repro.train import AdamWConfig, make_train_step
-from repro.train.optimizer import init_opt_state
 
 
 def _sds(shape_dtype, sharding):

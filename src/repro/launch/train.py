@@ -18,9 +18,7 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
 from repro.config import ParallelConfig, get_arch
 from repro.data import lm_batches

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models.layers import apply_rope, dense, dense_params
-from repro.models.param import P
 
 NEG_INF = -1e30
 

@@ -13,7 +13,6 @@ The router aux (load-balance) loss follows Switch/DeepSeek:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models.layers import apply_norm, norm_params
 from repro.models.param import P
 
 # ---------------------------------------------------------------------------

@@ -11,9 +11,8 @@ periods.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
 from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

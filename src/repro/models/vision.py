@@ -19,7 +19,7 @@ kept configurable via ``VisionConfig.input_res``.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

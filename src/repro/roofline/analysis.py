@@ -26,10 +26,9 @@ watches while hillclimbing.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
-import numpy as np
 
 from repro.config import ModelConfig, ShapeConfig
 

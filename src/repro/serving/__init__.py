@@ -1,2 +1,4 @@
-"""Serving substrate: continuous-batching engine with EDA deadline policy."""
+"""Serving substrate: the token workload shell over the shared EngineCore
+(continuous batching, chunked prefill, EDA deadline budgets, Clock/Ledger
+seams) — fleet-placeable via ``streams.gateway`` ``token_replicas``."""
 from repro.serving.engine import Request, ServeEngine  # noqa: F401

@@ -1,35 +1,52 @@
 """Continuous-batching LM serving engine with the paper's deadline policy.
 
-The engine owns a fixed pool of ``slots`` decode lanes (slot = one request's
-KV/recurrent cache row).  Requests stream in; each is
+A thin chunked-prefill-and-decode workload shell over the shared
+:class:`~repro.core.engine_core.EngineCore` — the same substrate the
+vision engine (``streams/vision_engine.py``) rides, which is what makes
+token requests fleet-placeable (``streams.gateway``) and simulator-
+drivable (``repro.simulate``).  The engine owns a fixed pool of
+``slots`` decode lanes (slot = one request's KV/recurrent cache row).
+Requests stream in; each is
 
   1. *segmented* — its prompt is prefilled in chunks (the paper's
      segmentation, here chunked prefill: keeps prefill latency bounded and
      interleavable with decode ticks),
-  2. *admitted* — written into a free slot's cache rows,
+  2. *admitted* — written into a free slot's cache rows with the core's
+     ``insert_row`` (``dynamic_update_slice`` at the slot index, so the
+     engine never recompiles),
   3. *decoded*  — one token per engine tick for every active slot,
-  4. *early-stopped* — each request carries a token budget derived from its
-     deadline and the engine's EWMA per-token cost (ESD policy): when the
-     budget is hit the request finishes with ``truncated=True`` and the
-     shortfall is accounted exactly like the paper's skip rate.
+  4. *early-stopped* — each request carries a token budget derived from
+     its deadline through the core's ESD policy at the engine's EWMA
+     per-token cost: when the budget is hit the request finishes with
+     ``truncated=True`` and the shortfall is accounted exactly like the
+     paper's skip rate,
+  5. *ledgered* — every finished request closes into a
+     ``telemetry.SegmentRecord`` (turnaround/TTFT/skip), so fleet
+     tables and percentile summaries cover token workloads unchanged.
 
 Priority classes mirror outer/inner: ``priority=0`` requests (hazard
-streams) pre-empt the admission queue of ``priority=1`` (distraction
-streams).  The per-slot design is jit-static: admission writes caches with
-``dynamic_update_slice`` at the slot index, so the engine never recompiles.
+streams) jump the admission queue of ``priority=1`` (distraction
+streams) through the core's two-class ``PriorityQueue``; a bounded-
+bypass aging pop keeps sustained hazard load from starving the
+distraction class.  All timing flows through the ``core.clock`` seam —
+decode ticks charge ``TOKEN`` work and prefill chunks charge ``PREFILL``
+work onto the clock, so under a ``VirtualClock`` turnaround and TTFT are
+deterministic functions of the scenario seed.
 """
 from __future__ import annotations
 
-import time
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import EDAConfig, ModelConfig
-from repro.core.early_stop import EWMA, EarlyStopPolicy
+from repro.core.clock import PREFILL, TOKEN, Clock
+from repro.core.engine_core import (INNER, OUTER, EngineCore, LanePool,
+                                    PriorityQueue, insert_row)
+from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import transformer as T
 from repro.models.attention import DEFAULT_OPTS, RunOpts
 
@@ -41,12 +58,20 @@ class Request:
     max_new_tokens: int
     priority: int = 1                # 0 = outer/hazard class
     deadline_ms: float = 0.0         # 0 = no deadline (no early stop)
-    arrival_s: float = field(default_factory=time.perf_counter)
+    # stamped by the engine at submit() from the ENGINE's clock — never
+    # read from wall time directly, so a virtually-clocked engine yields
+    # seed-deterministic turnaround/TTFT
+    arrival_s: float = 0.0
     # filled by the engine:
     generated: List[int] = field(default_factory=list)
     prefill_done_s: float = 0.0
     finish_s: float = 0.0
+    processing_ms: float = 0.0
     truncated: bool = False
+    prompt_truncated: bool = False   # prompt clipped to the cache ring
+    # LanePool binding protocol (slot = decode lane while active)
+    lane: int = -1
+    bound_seq: int = -1
 
     @property
     def ttft_ms(self) -> float:
@@ -63,31 +88,58 @@ class Request:
         return 1.0 - len(self.generated) / self.max_new_tokens
 
 
-class ServeEngine:
+class ServeEngine(EngineCore):
+    """Continuous-batching token server (chunked-prefill-and-decode shell).
+
+    ``overflow`` controls what happens when a prompt cannot fit the cache
+    ring (``len(prompt) > cache_capacity - 1``): ``"reject"`` (default)
+    raises at :meth:`submit` — silently corrupting other slots' cache
+    rows is never acceptable — while ``"truncate"`` clips the prompt to
+    the last ``cache_capacity - 1`` tokens and marks the request
+    ``prompt_truncated``.
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  cache_capacity: int = 512, prefill_chunk: int = 128,
                  eda: Optional[EDAConfig] = None,
                  opts: RunOpts = DEFAULT_OPTS,
-                 sample: Optional[Callable] = None) -> None:
+                 sample: Optional[Callable] = None,
+                 name: str = "serve0",
+                 ledger: Optional[Ledger] = None,
+                 clock: Optional[Clock] = None,
+                 overflow: str = "reject",
+                 starvation_limit: Optional[int] = 8) -> None:
+        super().__init__(name, slots=slots, eda=eda, ledger=ledger,
+                         clock=clock)
+        if overflow not in ("reject", "truncate"):
+            raise ValueError(f"overflow must be 'reject' or 'truncate', "
+                             f"got {overflow!r}")
         self.cfg = cfg
         self.params = params
-        self.slots = slots
         self.capacity = cache_capacity
         self.prefill_chunk = prefill_chunk
-        self.eda = eda or EDAConfig()
         self.opts = opts
         self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self.overflow = overflow
 
         self.caches = T.init_caches(cfg, slots, cache_capacity)
-        self.active: List[Optional[Request]] = [None] * slots
+        # decode lanes via the core pool: no preemption — an admitted
+        # request's cache row is never evicted mid-decode (its prefill
+        # would be wasted); hazards win at ADMISSION through the queue
+        self.pool = LanePool(slots, preempt=False)
         self.slot_pos = jnp.zeros((slots,), jnp.int32)
         self.slot_last = jnp.zeros((slots,), jnp.int32)
-        self.queue: deque = deque()
+        self.queue = PriorityQueue(starvation_limit=starvation_limit)
         self.finished: List[Request] = []
-        self.token_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
+        self.token_cost_ms = self.unit_cost_ms
+        self.tokens_generated = 0
 
         self._decode = jax.jit(self._decode_impl)
         self._prefill_one = jax.jit(self._prefill_impl)
+
+    @property
+    def active(self) -> List[Optional[Request]]:
+        return self.pool.lanes
 
     # ------------------------------------------------------------------
     # jit bodies
@@ -118,20 +170,27 @@ class ServeEngine:
     # admission
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if req.priority == 0:
-            # hazard class jumps the non-priority queue (paper: outer first)
-            idx = next((i for i, r in enumerate(self.queue)
-                        if r.priority > 0), len(self.queue))
-            self.queue.insert(idx, req)
-        else:
-            self.queue.append(req)
+        """Queue a request (hazard class jumps the non-priority queue —
+        paper: outer first) and stamp its arrival off the engine clock."""
+        n_prompt = int(np.shape(req.tokens)[0])
+        if n_prompt > self.capacity - 1:
+            if self.overflow == "reject":
+                raise ValueError(
+                    f"request {req.rid!r}: prompt length {n_prompt} "
+                    f"exceeds cache_capacity-1 = {self.capacity - 1} — "
+                    f"prefill would wrap the ring and corrupt other "
+                    f"slots' caches (construct the engine with "
+                    f"overflow='truncate' to clip instead)")
+            # keep the most recent context — the tokens the continuation
+            # actually conditions on
+            req.tokens = jnp.asarray(req.tokens)[-(self.capacity - 1):]
+            req.prompt_truncated = True
+        req.arrival_s = self.clock.now_s()
+        self.queue.push(req)
 
     def _token_budget(self, req: Request) -> int:
-        if req.deadline_ms <= 0 or self.eda.esd <= 1.0:
-            return req.max_new_tokens
-        policy = EarlyStopPolicy(esd=self.eda.esd)
-        cost = self.token_cost_ms.get(50.0)
-        return policy.frame_budget(req.deadline_ms, req.max_new_tokens, cost)
+        return self.budget(req.deadline_ms, req.max_new_tokens,
+                           self.token_cost_ms.get(50.0))
 
     def _admit(self, slot: int, req: Request) -> None:
         """Chunked prefill (the paper's segmentation) + cache insert.
@@ -149,6 +208,7 @@ class ServeEngine:
         logits = None
         c0 = 0
         max_chunk = min(self.prefill_chunk, self.capacity)
+        t0 = self.clock.now_s()
         while c0 < S:
             chunk = max_chunk
             while chunk > S - c0:
@@ -158,74 +218,97 @@ class ServeEngine:
                 pos[:, c0: c0 + chunk], jnp.int32(c0))
             c0 += chunk
         first = int(jax.device_get(self.sample(logits[0, -1])))
+        self.clock.charge(PREFILL, S)            # no-op on a WallClock
+        req.processing_ms += (self.clock.now_s() - t0) * 1000.0
 
-        self.caches = _insert_row(self.caches, row, slot)
+        self.caches = insert_row(self.caches, row, slot)
         req.generated.append(first)
-        req.prefill_done_s = time.perf_counter()
-        self.active[slot] = req
+        req.prefill_done_s = self.clock.now_s()
+        self.pool.bind(req, slot)
         self.slot_pos = self.slot_pos.at[slot].set(S)
         self.slot_last = self.slot_last.at[slot].set(first)
 
     # ------------------------------------------------------------------
     # engine loop
     # ------------------------------------------------------------------
-    def step(self) -> None:
-        """One engine tick: admit into free slots, then decode all slots."""
+    def rebalance(self) -> None:
+        """Admission at tick start (the core's ``begin_tick`` hook): free
+        slots soak up queued requests, hazard class first (with the
+        queue's bounded anti-starvation bypass)."""
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                self._admit(slot, self.queue.popleft())
+                self._admit(slot, self.queue.pop())
 
+    def _retire(self, req: Request) -> None:
+        """Close a finished request into the ledger (turnaround/TTFT/skip
+        accounted like a vision stream's SegmentRecord)."""
+        req.truncated = len(req.generated) < req.max_new_tokens
+        req.finish_s = self.clock.now_s()
+        self.finished.append(req)
+        self.pool.free(req)
+        rec = SegmentRecord(
+            video_id=req.rid,
+            stream=OUTER if req.priority == 0 else INNER,
+            device=self.name,
+            processing_ms=req.processing_ms,
+            # the deadline plays the video-length role: real_time means
+            # the request turned around inside its deadline
+            video_len_ms=req.deadline_ms,
+            esd=self.eda.esd,
+            frames_total=req.max_new_tokens,
+            frames_processed=len(req.generated),
+            ttft_ms=req.ttft_ms)
+        rec.close(req.turnaround_ms)
+        self.ledger.add(rec)
+
+    def step(self) -> int:
+        """One engine tick: admit into free slots, then decode one token
+        for every active slot.  Returns tokens generated."""
+        t0 = self.begin_tick()
         if not any(self.active):
-            return
+            self.end_tick(t0, 0)
+            return 0
 
-        t0 = time.perf_counter()
+        t_d = self.clock.now_s()
         tokens = self.slot_last[:, None]
         logits, self.caches = self._decode(self.params, self.caches,
                                            tokens, self.slot_pos)
         nxt = self.sample(logits[:, -1])
-        dt_ms = (time.perf_counter() - t0) * 1000.0
-        n_active = sum(r is not None for r in self.active)
-        self.token_cost_ms.update(dt_ms / max(n_active, 1))
-
         nxt_host = jax.device_get(nxt)
+        n_active = sum(r is not None for r in self.active)
+        dt = self.finish_dispatch(n_active, t_d, TOKEN)
+
         self.slot_pos = self.slot_pos + 1
         self.slot_last = jnp.asarray(nxt_host, jnp.int32)
-        for slot, req in enumerate(self.active):
+        for slot, req in enumerate(list(self.active)):
             if req is None:
                 continue
             req.generated.append(int(nxt_host[slot]))
+            req.processing_ms += dt * 1000.0 / n_active
             budget = self._token_budget(req)
             if len(req.generated) >= min(req.max_new_tokens, budget) \
                     or int(self.slot_pos[slot]) >= self.capacity - 1:
-                req.truncated = len(req.generated) < req.max_new_tokens
-                req.finish_s = time.perf_counter()
-                self.finished.append(req)
-                self.active[slot] = None
+                self._retire(req)
+        self.tokens_generated += n_active
+        self.end_tick(t0, n_active)
+        return n_active
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    def stats(self) -> dict:
+        """Serving-loop telemetry (mirrors the vision engine's)."""
+        return {
+            "ticks": self.ticks,
+            "tokens_generated": self.tokens_generated,
+            "busy_s": self.busy_s,
+            "token_cost_ms": self.token_cost_ms.get(0.0),
+            "tick_cost_ms": self.tick_cost_ms.get(0.0),
+        }
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0
-        while (self.queue or any(self.active)) and ticks < max_ticks:
+        while self.has_work() and ticks < max_ticks:
             self.step()
             ticks += 1
         return self.finished
-
-
-def _insert_row(caches_all, caches_row, slot: int):
-    """Write a 1-row cache pytree into the slot'th batch row of the pool."""
-    def ins(a, r):
-        # r has batch dim 1 at the same axis position as a's batch dim;
-        # broadcastable: match trailing dims, batch axis = a.ndim - r.ndim + 0
-        axis = _batch_axis(a, r)
-        return jax.lax.dynamic_update_slice_in_dim(
-            a, r.astype(a.dtype), slot, axis=axis)
-
-    return jax.tree.map(ins, caches_all, caches_row)
-
-
-def _batch_axis(a, r) -> int:
-    """Find the axis where pool ``a`` and row ``r`` disagree (slots vs 1)."""
-    assert a.ndim == r.ndim, (a.shape, r.shape)
-    for i, (da, dr) in enumerate(zip(a.shape, r.shape)):
-        if da != dr:
-            return i
-    return 0

@@ -21,13 +21,12 @@ Implementation notes:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh, PartitionSpec
 
 
 def stage_split(tree, num_stages: int):

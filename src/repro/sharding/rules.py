@@ -18,10 +18,9 @@ reduce.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.config import (ATTN, MLSTM, RGLRU, SLSTM, ModelConfig,

@@ -20,9 +20,11 @@ Reproduce any run from its seed:
 from repro.simulate.invariants import (InvariantSuite, Violation,  # noqa: F401
                                        jit_cache_sizes)
 from repro.simulate.runner import (ScenarioResult, ScenarioRunner,  # noqa: F401
-                                   build_fleet, run_scenario)
+                                   build_fleet, build_token_replicas,
+                                   run_scenario)
 from repro.simulate.scenario import (SCENARIOS, ReplicaSpec,  # noqa: F401
                                      Scenario, ScriptedEvent,
+                                     TokenReplicaSpec, TokenWorkload,
                                      VehicleProfile, get_scenario,
                                      list_scenarios)
 from repro.simulate.trace import Event, Trace  # noqa: F401

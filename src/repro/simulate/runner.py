@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.config import EDAConfig
-from repro.core.clock import FRAME, TICK, VirtualClock
+from repro.core.clock import (FRAME, PREFILL, TICK, TOKEN, VirtualClock)
 from repro.core.energy import EnergyModel
 from repro.core.telemetry import Ledger
 from repro.simulate.invariants import InvariantSuite, Violation, \
@@ -143,6 +143,39 @@ def warm_jits(scenario: Scenario) -> None:
             eng.step()
 
 
+def build_token_replicas(scenario: Scenario) -> list:
+    """Instantiate the scenario's ``ServeEngine`` replicas on virtual
+    clocks priced from their HW priors — the token analogue of the
+    vision replica construction below.  One reduced model per arch is
+    shared across replicas (the simulator studies scheduling, not
+    training: identical weights keep traces seed-deterministic)."""
+    if not scenario.token_replicas:
+        return []
+    import jax
+
+    from repro.config import get_arch
+    from repro.models import transformer as T
+    from repro.serving.engine import ServeEngine
+
+    engines = []
+    arch = (scenario.token_workload.arch if scenario.token_workload
+            else "starcoder2-3b")
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    for spec in scenario.token_replicas:
+        clock = VirtualClock(rates={
+            TOKEN: spec.virtual_token_cost_ms() / 1000.0,
+            PREFILL: spec.virtual_prefill_cost_ms() / 1000.0,
+            TICK: TICK_OVERHEAD_MS / 1000.0,
+        })
+        engines.append(ServeEngine(
+            cfg, params, name=spec.name, slots=spec.slots,
+            cache_capacity=spec.cache_capacity,
+            prefill_chunk=spec.prefill_chunk,
+            eda=EDAConfig(esd=scenario.esd), clock=clock))
+    return engines
+
+
 def build_fleet(scenario: Scenario, *, parallel: bool = False,
                 fleet_mode: Optional[str] = None) -> FleetGateway:
     """Instantiate the real engine replicas (virtual clocks, shared
@@ -165,12 +198,15 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
             clock=clock, rng=jax.random.key(i)))
     gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
                       overcommit=scenario.overcommit,
-                      parallel=parallel, fleet_mode=fleet_mode)
+                      parallel=parallel, fleet_mode=fleet_mode,
+                      token_replicas=build_token_replicas(scenario))
     # install the heterogeneous HW priors (the gateway defaults to a
     # cores-only prior; scenarios speak full HardwareInfo — the paper's
     # HW_INFO handshake, refined by measurement as the run progresses)
     for spec in scenario.replicas:
         gw.sched.by_name(spec.name).hw = spec.hw
+    for spec in scenario.token_replicas:
+        gw.token_sched.by_name(spec.name).hw = spec.hw
     return gw
 
 
@@ -204,6 +240,12 @@ class ScenarioRunner:
         self._closed = dict(off=0, adm=0, gate=0, drop=0, ddl=0)
         self._prev = self._totals()
         self._cache_after_warmup: Optional[int] = None
+        # token workload state (mixed scenarios): a dedicated rng stream
+        # so declaring token traffic never perturbs the vision draws
+        self._token_rng = np.random.default_rng([scenario.seed, 7])
+        self._token_submitted = 0
+        self._token_offered = 0       # sum of submitted max_new_tokens
+        self._token_harvest = 0       # cursor into gw.token_done
         frame_bytes = scenario.frame_res * scenario.frame_res * 3 * 4
         self._pair_flops = (FLOPS_PER_FRAME["outer"]
                             + FLOPS_PER_FRAME["inner"])
@@ -315,6 +357,40 @@ class ScenarioRunner:
                 self._leave(tick, name, "battery")
 
     # ------------------------------------------------------------------
+    # token workload (mixed vision+token scenarios)
+    # ------------------------------------------------------------------
+    def _submit_requests(self, tick: int) -> None:
+        from repro.serving.engine import Request
+        tw = self.s.token_workload
+        vocab = self.gw.token_replicas[0].cfg.vocab_size
+        n = int(self._token_rng.poisson(tw.request_rate))
+        for _ in range(n):
+            if self._token_submitted >= tw.max_requests:
+                return
+            rid = f"q{self._token_submitted:03d}"
+            plen = int(self._token_rng.integers(*tw.prompt_len))
+            prio = int(self._token_rng.random() >= tw.outer_fraction)
+            req = Request(
+                rid=rid,
+                tokens=self._token_rng.integers(0, vocab, plen),
+                max_new_tokens=tw.max_new_tokens, priority=prio,
+                deadline_ms=tw.deadline_ms)
+            engine = self.gw.submit_request(req, now_ms=float(tick))
+            self._token_submitted += 1
+            self._token_offered += tw.max_new_tokens
+            self.trace.emit(tick, "req", rid=rid, prio=prio, plen=plen,
+                            eng=engine)
+
+    def _harvest_requests(self, tick: int) -> None:
+        fresh = self.gw.token_done[self._token_harvest:]
+        self._token_harvest = len(self.gw.token_done)
+        for req in fresh:
+            self.trace.emit(
+                tick, "req_done", rid=req.rid, toks=len(req.generated),
+                turn=req.turnaround_ms, ttft=req.ttft_ms,
+                trunc=req.truncated)
+
+    # ------------------------------------------------------------------
     def run(self) -> ScenarioResult:
         s = self.s
         for _ in range(s.initial_vehicles):
@@ -330,6 +406,8 @@ class ScenarioRunner:
                 self._churn(tick)
             self._push_all(tick)
             self._battery(tick)
+            if s.token_workload and self.gw.token_replicas:
+                self._submit_requests(tick)
             self.gw.tick()
             self.inv.on_tick(tick)
             cur = self._totals()
@@ -341,10 +419,19 @@ class ScenarioRunner:
                 wait=sum(len(r.waiting)
                          for r in self.gw.live_replicas()),
                 live=len(self.vehicles))
+            if self.gw.token_replicas:
+                # emitted only for mixed scenarios, so vision-only trace
+                # digests are untouched by the token extension
+                self._harvest_requests(tick)
+                self.trace.emit(tick, "tok", sub=self._token_submitted,
+                                done=len(self.gw.token_done),
+                                backlog=self.gw.token_backlog())
             if tick == s.warmup_ticks:
                 self._cache_after_warmup = jit_cache_sizes()
         # drain + close every survivor so the ledger holds the whole run
         self.gw.drain(max_ticks=4 * s.ticks + 64)
+        if self.gw.token_replicas:
+            self._harvest_requests(s.ticks)
         for name in list(self.vehicles):
             self._leave(s.ticks, name, "end")
         for spec in s.replicas:
@@ -357,7 +444,11 @@ class ScenarioRunner:
                             capacity=w.capacity())
         if self._cache_after_warmup is None:
             self._cache_after_warmup = jit_cache_sizes()
-        self.inv.finalize(s.ticks, self.gw.ledger, self._pushes,
+        # ledger conservation covers both workload classes: every pushed
+        # frame AND every submitted request's token allotment must land in
+        # a record's frames_total exactly once
+        self.inv.finalize(s.ticks, self.gw.ledger,
+                          self._pushes + self._token_offered,
                           self._cache_after_warmup)
         totals = self._totals()
         summary = {
@@ -370,6 +461,13 @@ class ScenarioRunner:
             **totals,
             "violations": len(self.inv.violations),
         }
+        if self.gw.token_replicas:
+            done = self.gw.token_done
+            summary.update(
+                tok_submitted=self._token_submitted,
+                tok_done=len(done),
+                tok_generated=sum(len(r.generated) for r in done),
+                tok_truncated=sum(r.truncated for r in done))
         return ScenarioResult(scenario=s, trace=self.trace,
                               ledger=self.gw.ledger,
                               violations=self.inv.violations,

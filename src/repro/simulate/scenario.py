@@ -31,6 +31,14 @@ REF_FRAME_COST_MS = 4.0
 REF_CAPACITY_PRIOR = 16.0
 TICK_OVERHEAD_MS = 0.2          # staging + gating + host bookkeeping / tick
 
+# Token-engine calibration (the unified EngineCore's second workload
+# class): virtual cost per decoded token and per prefilled prompt token on
+# the reference replica — prefill is cheaper per token than decode (one
+# chunked matmul amortises many positions), both scale with the HW prior
+# exactly like frames.
+REF_TOKEN_COST_MS = 2.0
+REF_PREFILL_COST_MS = 0.4
+
 # Per-frame energy accounting (vehicle side), matching the runtime's
 # MobileNetV1/MoveNet FLOP estimates.
 FLOPS_PER_FRAME = {"outer": 0.8e9, "inner": 0.5e9}
@@ -73,6 +81,42 @@ class VehicleProfile:
 
 
 @dataclass(frozen=True)
+class TokenReplicaSpec:
+    """One token-serving (``ServeEngine``) replica; speed derives from
+    the HW_INFO prior exactly like a vision replica's."""
+    name: str
+    slots: int = 2
+    cache_capacity: int = 64
+    prefill_chunk: int = 8
+    hw: HardwareInfo = field(default_factory=HardwareInfo)
+    token_cost_ms: Optional[float] = None    # explicit override
+
+    def virtual_token_cost_ms(self) -> float:
+        if self.token_cost_ms is not None:
+            return self.token_cost_ms
+        prior = max(self.hw.capacity_prior(), 1e-6)
+        return REF_TOKEN_COST_MS * REF_CAPACITY_PRIOR / prior
+
+    def virtual_prefill_cost_ms(self) -> float:
+        return (self.virtual_token_cost_ms()
+                * REF_PREFILL_COST_MS / REF_TOKEN_COST_MS)
+
+
+@dataclass(frozen=True)
+class TokenWorkload:
+    """Declarative token-request traffic for mixed scenarios: Poisson
+    arrivals of LM decode requests routed through the gateway's token
+    scheduler — the inner/outer priority mix mirrors the vision classes."""
+    arch: str = "starcoder2-3b"         # reduced() before instantiation
+    request_rate: float = 0.3           # Poisson mean requests per tick
+    prompt_len: Tuple[int, int] = (4, 12)   # uniform [lo, hi) draw
+    max_new_tokens: int = 6
+    outer_fraction: float = 0.25        # share submitted as priority 0
+    deadline_ms: float = 0.0            # per-request deadline (ESD budget)
+    max_requests: int = 64              # total submissions cap
+
+
+@dataclass(frozen=True)
 class ScriptedEvent:
     tick: int
     action: str                         # fail_replica | restore_replica
@@ -102,6 +146,11 @@ class Scenario:
     max_pending: int = 64
     warmup_ticks: int = 10              # recompile-free after this tick
     scripted: Tuple[ScriptedEvent, ...] = ()
+    # mixed vision+token serving: token replicas join the gateway's fleet
+    # (shared ledger, own capacity scheduler) and the workload drives
+    # Poisson request arrivals through FleetGateway.submit_request
+    token_replicas: Tuple[TokenReplicaSpec, ...] = ()
+    token_workload: Optional[TokenWorkload] = None
     description: str = ""
 
 
@@ -289,6 +338,30 @@ def golden_churn() -> Scenario:
         description="Frozen regression scenario: churn + bursts + gate + "
                     "deadline; its trace digest is committed in "
                     "tests/golden/ and drift fails the golden test.")
+
+
+@_scenario
+def mixed_serving() -> Scenario:
+    return Scenario(
+        name="mixed_serving", seed=1717, ticks=80,
+        replicas=_uniform_replicas(2),
+        profiles=(VehicleProfile(duplicate_prob=0.4),),
+        initial_vehicles=2, join_rate=0.1, leave_rate=0.02,
+        max_vehicles=6, deadline_ms=400.0, esd=2.0,
+        token_replicas=(
+            TokenReplicaSpec("lm0", slots=2),
+            TokenReplicaSpec("lm1", slots=2,
+                             hw=HardwareInfo(cpu_ghz=1.0, cores=4)),
+        ),
+        # 24 ms virtual deadline at esd=2 -> ~5-token budgets on the strong
+        # replica and ~1 on the weak one: the ESD truncation path is live
+        token_workload=TokenWorkload(request_rate=0.35, deadline_ms=24.0,
+                                     max_requests=24),
+        description="Mixed vision+token serving on the unified EngineCore: "
+                    "vehicle streams and LM decode requests share the "
+                    "gateway, ledger, and deadline policy — token "
+                    "turnaround/TTFT are seed-deterministic on virtual "
+                    "clocks.")
 
 
 @_scenario

@@ -385,4 +385,10 @@ class FleetStep:
                     dt_ms = wall_share_s[r.name] * 1000.0
                 gw.sched.by_name(r.name).observe(n, dt_ms)
             done += n
+        if gw.token_replicas:
+            # mixed fleets: the fused dispatch covers the vision replicas;
+            # token decode runs its own jits, stepped with the identical
+            # host phases (and order) the serial tick uses — so mixed
+            # scenarios stay bit-identical across serial/parallel modes
+            done += gw._tick_tokens()
         return done

@@ -13,13 +13,21 @@ the paper's paired-download protocol, scaled out.  The gateway:
     letting queues grow without bound — the caller retries after churn;
   * **tracks churn**: ``leave`` closes both streams, flushes their
     ``SegmentRecord`` into the shared ledger, and credits the scheduler's
-    capacity estimate with the session's measured throughput.
+    capacity estimate with the session's measured throughput;
+  * **serves token workloads** (``token_replicas``): because the token
+    engine (``serving.ServeEngine``) rides the same ``EngineCore``
+    substrate, :meth:`submit_request` places a decode request on a token
+    replica with a second ``CapacityScheduler`` (capacity EWMA fed from
+    measured tokens/s), :meth:`tick` steps token replicas alongside the
+    vision fleet (in both serial and mesh-parallel modes), and finished
+    requests flush into the same shared ledger — one scheduling
+    substrate, heterogeneous analytics classes.
 """
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -28,6 +36,9 @@ from repro.core.scheduler import (Assignment, CapacityScheduler,
 from repro.core.segmentation import Segment
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.streams.vision_engine import INNER, OUTER, VisionServeEngine
+
+if TYPE_CHECKING:                                     # pragma: no cover
+    from repro.serving.engine import Request, ServeEngine
 
 
 @dataclass
@@ -110,7 +121,8 @@ class FleetGateway:
     def __init__(self, replicas: Sequence[VisionServeEngine], *,
                  deadline_ms: float = 0.0, overcommit: float = 1.5,
                  ledger: Optional[Ledger] = None, parallel: bool = False,
-                 fleet_mode: Optional[str] = None) -> None:
+                 fleet_mode: Optional[str] = None,
+                 token_replicas: Sequence["ServeEngine"] = ()) -> None:
         if not replicas:
             raise ValueError("need at least one engine replica")
         if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
@@ -150,6 +162,33 @@ class FleetGateway:
         if self.parallel:
             from repro.streams.fleet_step import FleetStep
             self._fleet = FleetStep(self.replicas, mode=fleet_mode)
+
+        # token-serving replicas (ServeEngine) share the fleet ledger and
+        # get their own capacity scheduler — token throughput (tokens/s)
+        # and frame throughput (frames/s) are different units, so their
+        # EWMAs must not mix in one worker pool
+        self.token_replicas: List["ServeEngine"] = list(token_replicas)
+        self._token_by_name: Dict[str, "ServeEngine"] = {}
+        self.token_sched: Optional[_FleetScheduler] = None
+        self.token_done: List["Request"] = []
+        self._token_assign: Dict[str, Assignment] = {}
+        self._token_harvested: Dict[str, int] = {}
+        if self.token_replicas:
+            names = ([r.name for r in self.replicas]
+                     + [e.name for e in self.token_replicas])
+            if len(set(names)) != len(names):
+                raise ValueError(f"replica names must be unique across "
+                                 f"vision and token fleets: {names}")
+            for e in self.token_replicas:
+                e.ledger = self.ledger        # one fleet-wide ledger
+                self._token_by_name[e.name] = e
+                self._token_harvested[e.name] = 0
+            tstates = [WorkerState(name=e.name,
+                                   hw=HardwareInfo(cores=e.slots),
+                                   is_master=(i == 0))
+                       for i, e in enumerate(self.token_replicas)]
+            self.token_sched = _FleetScheduler(tstates[0], tstates[1:],
+                                               outer_priority=True)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -297,6 +336,75 @@ class FleetGateway:
                    for s in self.sessions[vehicle])
 
     # ------------------------------------------------------------------
+    # token workloads (requests onto ServeEngine replicas)
+    # ------------------------------------------------------------------
+    def _sync_token_load(self, now_ms: float) -> None:
+        """Refresh the token scheduler's busy-ness from engine occupancy
+        (the token analogue of :meth:`_sync_load`): a replica with a free
+        decode slot reads as free; a full one keeps its in-flight count
+        as queue_len for the shortest-queue tie-break."""
+        for e in self.token_replicas:
+            w = self.token_sched.by_name(e.name)
+            in_flight = (sum(r is not None for r in e.active)
+                         + len(e.queue))
+            has_free = in_flight < e.slots
+            w.busy_until_ms = 0.0 if has_free else now_ms + 1.0
+            w.queue_len = 0 if has_free else in_flight
+
+    def submit_request(self, req: "Request", now_ms: float = 0.0) -> str:
+        """Place one token request on a token replica via the capacity
+        scheduler (measured tokens/s EWMA over the HW prior — the same
+        HW_INFO -> measurement handoff vehicle sessions use) and submit
+        it.  Returns the chosen replica's name."""
+        if not self.token_replicas:
+            raise RuntimeError("gateway has no token replicas — construct "
+                               "FleetGateway(..., token_replicas=[...])")
+        if req.rid in self._token_assign:
+            raise KeyError(f"request {req.rid!r} already submitted")
+        if len(self.token_replicas) == 1:
+            target = self.token_replicas[0].name
+        else:
+            self._sync_token_load(now_ms)
+            target = self.token_sched._pick_worker(now_ms).name
+        seg = Segment(video_id=req.rid, index=0, num_segments=1,
+                      frame_start=0, frame_count=req.max_new_tokens,
+                      stream=OUTER if req.priority == 0 else INNER)
+        assignment = Assignment(seg, target)
+        self._token_by_name[target].submit(req)
+        self.token_sched.commit(assignment, busy_until_ms=now_ms)
+        self._token_assign[req.rid] = assignment
+        return target
+
+    def _tick_tokens(self) -> int:
+        """Step every token replica once and harvest finished requests:
+        scheduler completion (tokens/s capacity credit) + the shared
+        ``token_done`` list the simulator reads.  Identical in serial and
+        mesh-parallel modes — the vision fused dispatch does not cover
+        token decode, so token engines step on their own jits."""
+        done = 0
+        for e in self.token_replicas:
+            t0 = e.clock.now_s()
+            n = e.step()
+            dt_ms = (e.clock.now_s() - t0) * 1000.0
+            if n:
+                self.token_sched.by_name(e.name).observe(n, dt_ms)
+            done += n
+            fresh = e.finished[self._token_harvested[e.name]:]
+            self._token_harvested[e.name] = len(e.finished)
+            for req in fresh:
+                self.token_sched.complete(
+                    self._token_assign.pop(req.rid),
+                    frames=len(req.generated),
+                    processing_ms=req.processing_ms)
+                self.token_done.append(req)
+        return done
+
+    def token_backlog(self) -> int:
+        """Requests still queued or decoding across the token fleet."""
+        return sum(len(e.queue) + sum(r is not None for r in e.active)
+                   for e in self.token_replicas)
+
+    # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
     def tick(self) -> int:
@@ -309,7 +417,8 @@ class FleetGateway:
         With ``parallel=True`` the same tick runs every live replica's
         device work in one fused mesh dispatch (``streams.fleet_step``) —
         identical host phases, identical accounting, bit-identical results
-        under virtual clocks."""
+        under virtual clocks.  Token replicas (if any) are stepped in both
+        modes; the return value counts frames + tokens served."""
         if self._fleet is not None:
             return self._fleet.tick(self)
         done = 0
@@ -320,12 +429,15 @@ class FleetGateway:
             if n:
                 self.sched.by_name(r.name).observe(n, dt_ms)
             done += n
+        if self.token_replicas:
+            done += self._tick_tokens()
         return done
 
     def drain(self, max_ticks: int = 100_000) -> int:
         done = 0
         ticks = 0
-        while any(r.has_work() for r in self.live_replicas()) \
+        while (any(r.has_work() for r in self.live_replicas())
+               or any(e.has_work() for e in self.token_replicas)) \
                 and ticks < max_ticks:
             done += self.tick()
             ticks += 1

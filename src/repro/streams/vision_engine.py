@@ -53,13 +53,11 @@ import numpy as np
 
 from repro.config import EDAConfig
 from repro.configs.eda_vision import detector_config, pose_config
-from repro.core.clock import FRAME, TICK, Clock, WallClock
-from repro.core.early_stop import EWMA, EarlyStopPolicy
+from repro.core.clock import FRAME, Clock
+from repro.core.engine_core import INNER, OUTER, EngineCore, LanePool
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import vision as V
 from repro.streams.filter import MotionGate
-
-OUTER, INNER = "outer", "inner"
 
 
 def _load_impl(batch, frame, lane):
@@ -110,8 +108,14 @@ class StreamState:
         return self.lane >= 0
 
 
-class VisionServeEngine:
-    """Continuous-batching frame server for a fleet of vehicle streams."""
+class VisionServeEngine(EngineCore):
+    """Continuous-batching frame server for a fleet of vehicle streams.
+
+    A workload shell over :class:`~repro.core.engine_core.EngineCore`:
+    the core owns the clock seam, ESD deadline policy, cost EWMAs, tick
+    phases, lane pool, and ledger; this class supplies the frame-ingest-
+    and-gate semantics (staging, motion gating, the two vision models).
+    """
 
     def __init__(self, name: str = "replica0", *, slots: int = 8,
                  frame_res: int = 64, input_res: int = 48,
@@ -123,18 +127,14 @@ class VisionServeEngine:
                  ledger: Optional[Ledger] = None,
                  clock: Optional[Clock] = None,
                  rng: Optional[jax.Array] = None) -> None:
-        self.name = name
-        self.clock = clock if clock is not None else WallClock()
-        self.slots = slots
+        super().__init__(name, slots=slots, eda=eda, ledger=ledger,
+                         clock=clock)
         self.frame_res = frame_res
         self.input_res = input_res
         self.use_pallas = use_pallas
         self.fps = fps
-        self.eda = eda or EDAConfig()
-        self.policy = EarlyStopPolicy(esd=self.eda.esd)
         self.max_pending = max_pending
         self.quantum = quantum
-        self.ledger = ledger if ledger is not None else Ledger()
 
         rng = rng if rng is not None else jax.random.key(0)
         r1, r2 = jax.random.split(rng)
@@ -184,18 +184,19 @@ class VisionServeEngine:
         # scatters; enable_host_staging() flips this on
         self._host_staging = False
 
-        self.lanes: List[Optional[StreamState]] = [None] * slots
+        # lane machinery lives in the core's LanePool: free-lane binding,
+        # outer-evicts-most-recent-inner preemption, victim-requeues-at-
+        # front — the hooks move per-lane gate state with the binding
+        self.pool = LanePool(slots, preempt=True,
+                             on_bind=self._on_bind,
+                             on_unbind=self._on_unbind)
         self.streams: Dict[str, StreamState] = {}
-        self.waiting: Deque[StreamState] = deque()
-        # throughput estimate (batch-amortised) vs latency estimate (a
-        # stream completes ONE frame per dispatch, however wide the batch)
-        self.frame_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
-        self.tick_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
+        # throughput estimate (batch-amortised, the core's unit EWMA) vs
+        # latency estimate (a stream completes ONE frame per dispatch,
+        # however wide the batch — the core's tick EWMA)
+        self.frame_cost_ms = self.unit_cost_ms
         self.results: Dict[str, Deque[bool]] = {}
-        self._bind_seq = 0
-        self.ticks = 0
         self.frames_processed = 0
-        self.busy_s = 0.0
 
     def enable_host_staging(self) -> None:
         """Stage popped frames into the pinned host buffer (the Pallas
@@ -229,24 +230,19 @@ class VisionServeEngine:
                          deadline_ms=deadline_ms)
         self.streams[key] = st
         self.results[key] = deque(maxlen=self.max_pending)
-        if not self._try_bind(st):
-            self._enqueue_waiting(st)
+        if not self.pool.try_bind(st):
+            self.waiting.push(st)
         return st
 
-    def _enqueue_waiting(self, st: StreamState, front: bool = False) -> None:
-        """Priority-ordered wait queue: hazard class ahead of distraction.
+    @property
+    def lanes(self) -> List[Optional[StreamState]]:
+        return self.pool.lanes
 
-        ``front`` queues the stream ahead of its own priority class (an
-        eviction victim re-binds first among peers) but never ahead of a
-        higher class — a displaced inner stream must not outrank a waiting
-        hazard stream."""
-        if front:
-            idx = next((i for i, w in enumerate(self.waiting)
-                        if w.priority >= st.priority), len(self.waiting))
-        else:
-            idx = next((i for i, w in enumerate(self.waiting)
-                        if w.priority > st.priority), len(self.waiting))
-        self.waiting.insert(idx, st)
+    @property
+    def waiting(self):
+        """Priority-ordered wait queue (core PriorityQueue): hazard class
+        ahead of distraction, FIFO within a class."""
+        return self.pool.waiting
 
     def close_stream(self, key: str) -> SegmentRecord:
         """Unbind, account leftovers as skipped, flush a SegmentRecord."""
@@ -255,7 +251,7 @@ class VisionServeEngine:
         st.dropped += len(st.pending)
         st.pending.clear()
         if st.bound:
-            self._free_lane(st)
+            self.pool.free(st)
         elif st in self.waiting:
             self.waiting.remove(st)
         rec = SegmentRecord(
@@ -290,7 +286,7 @@ class VisionServeEngine:
         st = self.streams.pop(key)
         self.results.pop(key, None)
         if st.bound:
-            self._free_lane(st)                # saves gate state via _unbind
+            self.pool.free(st)             # saves gate state via the hook
         elif st in self.waiting:
             self.waiting.remove(st)
         # convert clock-domain timestamps to *ages* (now - t): each replica
@@ -320,8 +316,8 @@ class VisionServeEngine:
         st.lane = -1
         self.streams[st.key] = st
         self.results[st.key] = deque(maxlen=self.max_pending)
-        if not self._try_bind(st):
-            self._enqueue_waiting(st)
+        if not self.pool.try_bind(st):
+            self.waiting.push(st)
         return st
 
     def push(self, key: str, frame: np.ndarray) -> bool:
@@ -346,53 +342,22 @@ class VisionServeEngine:
         return True
 
     # ------------------------------------------------------------------
-    # lane management
+    # lane management (core LanePool + gate-state travel hooks)
     # ------------------------------------------------------------------
-    def _try_bind(self, st: StreamState) -> bool:
-        for lane, cur in enumerate(self.lanes):
-            if cur is None:
-                self._bind(st, lane)
-                return True
-        if st.priority == 0:
-            victims = [s for s in self.lanes if s and s.priority > 0]
-            if victims:
-                # evict the most recently bound inner stream; it keeps its
-                # backlog and re-binds first among its class when a lane
-                # frees (but never ahead of a waiting hazard stream)
-                victim = max(victims, key=lambda s: s.bound_seq)
-                lane = self._unbind(victim)
-                self._enqueue_waiting(victim, front=True)
-                self._bind(st, lane)
-                return True
-        return False
-
-    def _bind(self, st: StreamState, lane: int) -> None:
-        self.lanes[lane] = st
-        st.lane = lane
+    def _on_bind(self, st: StreamState, lane: int) -> None:
         st.served_since_bind = 0
-        self._bind_seq += 1
-        st.bound_seq = self._bind_seq
         gate = self.gates[st.kind]
         if gate is not None:
             gate.restore(lane, st.gate_state)
 
-    def _unbind(self, st: StreamState) -> int:
+    def _on_unbind(self, st: StreamState, lane: int) -> None:
         gate = self.gates[st.kind]
         if gate is not None:
-            st.gate_state = gate.save(st.lane)
-        lane = st.lane
-        self.lanes[lane] = None
-        st.lane = -1
-        return lane
-
-    def _free_lane(self, st: StreamState) -> None:
-        lane = self._unbind(st)
-        if self.waiting:
-            self._bind(self.waiting.popleft(), lane)
+            st.gate_state = gate.save(lane)
 
     @property
     def bound_count(self) -> int:
-        return sum(s is not None for s in self.lanes)
+        return self.pool.bound_count
 
     @property
     def session_count(self) -> int:
@@ -416,28 +381,25 @@ class VisionServeEngine:
     # ------------------------------------------------------------------
     def _trim_to_deadline(self, st: StreamState) -> None:
         """ESD frame budget over the backlog; stale frames become skip."""
-        if st.deadline_ms <= 0 or not self.policy.enabled or not st.pending:
+        if not st.pending:
             return
         # a stream finishes one frame per tick, so its per-frame *latency*
         # is the tick cost, not the batch-amortised throughput cost
-        cost = self.tick_cost_ms.get(1000.0 / self.fps)
-        budget = self.policy.frame_budget(
-            st.deadline_ms, len(st.pending), cost)
+        budget = self.budget(st.deadline_ms, len(st.pending),
+                             self.tick_cost_ms.get(1000.0 / self.fps))
         while len(st.pending) > max(budget, 1):
             st.pending.popleft()                 # oldest frame is stalest
             st.dropped += 1
             st.deadline_dropped += 1
 
-    def begin_tick(self) -> float:
-        """Host half of tick start: lane rebalancing + the fixed per-tick
-        clock charge.  Returns the clock reading ``end_tick`` measures the
-        tick-cost EWMA from.  Split out of :meth:`step` so the fleet-
-        parallel tick (``streams.fleet_step``) can run the identical host
-        phases around one fused device dispatch."""
+    def rebalance(self) -> None:
+        """Tick-start lane rebalancing (the core's ``begin_tick`` hook —
+        the fleet-parallel tick runs these identical host phases around
+        one fused device dispatch)."""
         # lanes freed since the last tick soak up waiters
         for lane, cur in enumerate(self.lanes):
             if cur is None and self.waiting:
-                self._bind(self.waiting.popleft(), lane)
+                self.pool.bind(self.waiting.popleft(), lane)
         # hazard class preempts at every tick, not just at open: a waiting
         # outer stream holding frames evicts the most recently bound inner
         # (an earlier time-share demotion must never starve hazards)
@@ -447,10 +409,10 @@ class VisionServeEngine:
             if not victims:
                 break
             victim = max(victims, key=lambda s: s.bound_seq)
-            lane = self._unbind(victim)
+            lane = self.pool.unbind(victim)
             self.waiting.remove(w)
-            self._enqueue_waiting(victim, front=True)
-            self._bind(w, lane)
+            self.waiting.push(victim, front=True)
+            self.pool.bind(w, lane)
         # time-share oversubscribed lanes: a bound stream yields when its
         # backlog is empty OR its round-robin quantum expires — without the
         # quantum, continuously-fed streams would starve overcommitted
@@ -472,21 +434,9 @@ class VisionServeEngine:
                     continue
                 nxt = self.waiting[idx]
                 del self.waiting[idx]
-                self._unbind(cur)
-                self._enqueue_waiting(cur)
-                self._bind(nxt, lane)
-        t0 = self.clock.now_s()
-        self.clock.charge(TICK)                  # fixed per-tick overhead
-        return t0
-
-    def end_tick(self, t0_s: float, done: int) -> None:
-        """Tick-cost EWMA + tick counter — the closing half of a tick."""
-        if done:
-            # a stream completes one frame per whole tick (both class
-            # dispatches + staging/gating) — this is the latency estimate
-            # the deadline trim divides by
-            self.tick_cost_ms.update((self.clock.now_s() - t0_s) * 1000.0)
-        self.ticks += 1
+                self.pool.unbind(cur)
+                self.waiting.push(cur)
+                self.pool.bind(nxt, lane)
 
     def step(self) -> int:
         """One tick: admit one frame per bound stream, gate, run both
@@ -561,17 +511,12 @@ class VisionServeEngine:
                       t0_s: float, n_admit: int,
                       dt_override_s: Optional[float] = None) -> int:
         """Post-forward accounting shared by the serial and fleet paths:
-        clock charge, cost EWMAs, per-stream counters/flags/timestamps."""
-        self.clock.charge(FRAME, n_admit)        # no-op on a WallClock
-        dt = self.clock.now_s() - t0_s
-        if dt_override_s is not None:
-            # fleet-parallel tick on a wall clock: the real dispatch ran
-            # fused across replicas elsewhere, so the caller passes this
-            # replica's share of the measured fused wall time (a virtual
-            # clock never takes this branch — its charge IS the cost)
-            dt = dt_override_s
-        self.busy_s += dt
-        self.frame_cost_ms.update(dt * 1000.0 / n_admit)
+        clock charge, cost EWMAs (core ``finish_dispatch``), per-stream
+        counters/flags/timestamps.  ``dt_override_s`` carries a fleet-
+        parallel replica's share of the measured fused wall time (a
+        virtual clock never passes it — its charge IS the cost)."""
+        dt = self.finish_dispatch(n_admit, t0_s, FRAME,
+                                  dt_override_s=dt_override_s)
 
         now = self.clock.now_s()
         for lane in np.nonzero(admit)[0]:

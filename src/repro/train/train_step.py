@@ -19,8 +19,7 @@ Returned step signature: ``step(params, opt_state, batch) ->
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.config import get_arch, list_archs
+from repro.config import get_arch
 from repro.configs import ASSIGNED
 from repro.models import transformer as T
 

@@ -9,16 +9,16 @@ from dataclasses import replace
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
 except ImportError:          # bare env: vendored deterministic fallback
-    from _hypothesis_stub import given, settings, strategies as st
+    from _hypothesis_stub import given, strategies as st
 
 from repro.config import EDAConfig
 from repro.core.early_stop import DynamicESD, EarlyStopPolicy, EWMA
 from repro.core.pipeline import overlapped
-from repro.core.runtime import EDARuntime, PAPER_DEVICES, SimExecutor
-from repro.core.scheduler import (Assignment, CapacityScheduler,
-                                  HardwareInfo, WorkerState)
+from repro.core.runtime import EDARuntime, PAPER_DEVICES
+from repro.core.scheduler import (CapacityScheduler, HardwareInfo,
+                                  WorkerState)
 from repro.core.segmentation import (Segment, SegmentResult, merge_results,
                                      split_counts, split_video)
 

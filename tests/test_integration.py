@@ -13,9 +13,7 @@ import pytest
 
 from repro.config import EDAConfig
 from repro.configs.eda_vision import detector_config, pose_config
-from repro.core.runtime import (DeviceProfile, EDARuntime, PAPER_DEVICES,
-                                SimExecutor)
-from repro.core.scheduler import HardwareInfo
+from repro.core.runtime import EDARuntime, PAPER_DEVICES
 from repro.core.segmentation import Segment
 from repro.data import DashCamSource
 from repro.models import vision as V

@@ -4,7 +4,6 @@ Every kernel is exercised across GQA group sizes, odd (padding-forcing)
 shapes, windows, and dtypes; tolerances are fp32-tight and bf16-loose.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -180,8 +179,7 @@ def test_mlstm_chunkwise(B, S, H, Dh, chunk):
 
 def test_mlstm_chunkwise_matches_recurrent_step():
     """Chunkwise kernel must agree with the sequential mlstm_step form."""
-    from repro.models.ssm import mlstm_step, init_mlstm_state
-    from repro.config import get_arch
+    from repro.models.ssm import mlstm_step
     B, S, H, Dh = 1, 24, 2, 16
     q, k, v = t(B, S, H, Dh), t(B, S, H, Dh), t(B, S, H, Dh)
     ig, fg = t(B, S, H), t(B, S, H) + 2.0

@@ -1,0 +1,226 @@
+"""Mixed vision+token serving on the unified EngineCore.
+
+The tentpole contract of the shared core: the token engine
+(``serving.ServeEngine``) is fleet-placeable (``FleetGateway``
+token replicas + capacity scheduler), simulator-drivable (virtual
+clocks ⇒ seed-deterministic turnaround/TTFT), and ledger-accounted
+exactly like the vision engine — and the mixed scenario is bit-identical
+across the serial and mesh-parallel fleet tick."""
+import jax
+import numpy as np
+
+from repro.config import EDAConfig, get_arch
+from repro.core.clock import PREFILL, TICK, TOKEN, VirtualClock
+from repro.core.telemetry import Ledger, percentile
+from repro.models import transformer as T
+from repro.serving import Request, ServeEngine
+from repro.simulate import get_scenario, run_scenario
+from repro.streams import FleetGateway, VisionServeEngine
+
+RNG = np.random.default_rng(11)
+
+
+def _cfg_params(arch="starcoder2-3b"):
+    cfg = get_arch(arch).reduced()
+    return cfg, T.init_params(cfg, jax.random.key(0))
+
+
+def _vclock():
+    return VirtualClock(rates={TOKEN: 0.002, PREFILL: 0.0005,
+                               TICK: 0.0002})
+
+
+def _req(cfg, rid, n_prompt=6, max_new=4, **kw):
+    return Request(rid=rid,
+                   tokens=RNG.integers(0, cfg.vocab_size, n_prompt),
+                   max_new_tokens=max_new, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine under VirtualClock
+# ---------------------------------------------------------------------------
+def test_serve_engine_virtual_clock_deterministic_latencies():
+    """Identical submissions through two virtually-clocked engines yield
+    bit-identical TTFT/turnaround — no wall time leaks into the token
+    path (every ``time.perf_counter`` call is gone)."""
+    cfg, params = _cfg_params()
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(cfg, params, slots=2, cache_capacity=32,
+                          prefill_chunk=8, clock=_vclock())
+        rng = np.random.default_rng(5)
+        for i in range(4):
+            eng.submit(Request(
+                rid=f"r{i}", tokens=rng.integers(0, cfg.vocab_size, 5 + i),
+                max_new_tokens=3, priority=i % 2))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        outs.append([(r.rid, r.ttft_ms, r.turnaround_ms,
+                      tuple(r.generated)) for r in done])
+    assert outs[0] == outs[1]
+    # virtual latencies are pure clock arithmetic: positive and exact
+    for _, ttft, turn, _g in outs[0]:
+        assert ttft > 0 and turn >= ttft
+
+
+def test_serve_engine_charges_clock_per_kind():
+    cfg, params = _cfg_params()
+    clock = _vclock()
+    eng = ServeEngine(cfg, params, slots=1, cache_capacity=32,
+                      prefill_chunk=8, clock=clock)
+    eng.submit(_req(cfg, "a", n_prompt=7, max_new=3))
+    eng.run()
+    assert clock.charged[PREFILL] == 7          # one unit per prompt token
+    assert clock.charged[TOKEN] >= 2            # decode ticks
+    assert clock.charged[TICK] >= 1
+
+
+def test_serve_engine_emits_ledger_records():
+    cfg, params = _cfg_params()
+    ledger = Ledger()
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=32,
+                      prefill_chunk=8, ledger=ledger, clock=_vclock(),
+                      name="lmX")
+    eng.submit(_req(cfg, "h", priority=0, max_new=3))
+    eng.submit(_req(cfg, "d", priority=1, max_new=3))
+    eng.run()
+    ledger.check()                              # conservation holds
+    recs = {r.video_id: r for r in ledger.records}
+    assert recs["h"].stream == "outer" and recs["d"].stream == "inner"
+    assert all(r.device == "lmX" for r in ledger.records)
+    assert all(r.ttft_ms > 0 for r in ledger.records)
+    assert all(r.frames_total == 3 for r in ledger.records)
+    pct = ledger.percentiles()
+    assert pct["ttft_ms_p50"] > 0
+    assert pct["turnaround_ms_p99"] >= pct["turnaround_ms_p50"]
+
+
+def test_deadline_budget_truncates_on_virtual_clock():
+    """The ESD token budget derives from the deadline through the shared
+    core policy — deterministic under virtual time."""
+    cfg, params = _cfg_params()
+    eng = ServeEngine(cfg, params, slots=1, cache_capacity=32,
+                      prefill_chunk=8, eda=EDAConfig(esd=4.0),
+                      clock=_vclock())
+    eng.token_cost_ms.update(50.0)
+    eng.submit(_req(cfg, "tight", max_new=8, deadline_ms=400.0))
+    r = eng.run()[0]
+    assert r.truncated and len(r.generated) <= 3
+    assert r.skip_rate > 0.5
+
+
+# ---------------------------------------------------------------------------
+# prompt-overflow guard (cache-ring corruption regression)
+# ---------------------------------------------------------------------------
+def test_prompt_longer_than_cache_capacity_is_rejected():
+    """Regression: a prompt longer than the cache ring used to prefill
+    past the ring's end — dynamic_update_slice clamps the start index, so
+    the tail chunks silently overwrote OTHER slots' cache rows.  The
+    engine must refuse loudly instead."""
+    cfg, params = _cfg_params()
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=16,
+                      prefill_chunk=8)
+    ok = _req(cfg, "fits", n_prompt=15)
+    eng.submit(ok)                              # capacity-1 exactly: fine
+    try:
+        eng.submit(_req(cfg, "huge", n_prompt=17))
+        assert False, "overflowing prompt was accepted"
+    except ValueError as e:
+        assert "cache_capacity" in str(e)
+    # the engine still serves the valid request afterwards
+    done = eng.run()
+    assert [r.rid for r in done] == ["fits"]
+
+
+def test_prompt_overflow_truncate_mode_clips_to_recent_context():
+    cfg, params = _cfg_params()
+    eng = ServeEngine(cfg, params, slots=1, cache_capacity=16,
+                      prefill_chunk=8, overflow="truncate")
+    toks = RNG.integers(0, cfg.vocab_size, 40)
+    req = Request(rid="long", tokens=toks, max_new_tokens=2)
+    eng.submit(req)
+    assert req.prompt_truncated
+    assert np.shape(req.tokens)[0] == 15        # capacity - 1, tail kept
+    assert list(np.asarray(req.tokens)) == list(toks[-15:])
+    done = eng.run()
+    assert done[0].rid == "long" and len(done[0].generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# gateway: token requests are fleet-placeable
+# ---------------------------------------------------------------------------
+def _mixed_gateway():
+    cfg, params = _cfg_params()
+    vis = [VisionServeEngine(f"r{i}", slots=2, frame_res=16, input_res=8,
+                             use_gate=False) for i in range(2)]
+    tok = [ServeEngine(cfg, params, slots=2, cache_capacity=32,
+                       prefill_chunk=8, name=f"lm{i}", clock=_vclock())
+           for i in range(2)]
+    gw = FleetGateway(vis, token_replicas=tok)
+    return cfg, gw, tok
+
+
+def test_gateway_places_and_serves_token_requests():
+    cfg, gw, tok = _mixed_gateway()
+    placed = [gw.submit_request(_req(cfg, f"q{i}"), now_ms=float(i))
+              for i in range(5)]
+    assert all(p in {"lm0", "lm1"} for p in placed)
+    assert len(set(placed)) == 2               # load spreads, not one pile
+    gw.drain(max_ticks=200)
+    assert len(gw.token_done) == 5
+    assert gw.token_backlog() == 0
+    # scheduler capacity learned from measured tokens/s
+    assert any(gw.token_sched.by_name(e.name).capacity_ewma.value
+               is not None for e in tok)
+    # both workload classes land in the one fleet ledger
+    gw.ledger.check()
+    assert {r.video_id for r in gw.ledger.records} >= {
+        f"q{i}" for i in range(5)}
+
+
+def test_gateway_rejects_duplicate_and_unconfigured_token_submissions():
+    cfg, gw, _ = _mixed_gateway()
+    gw.submit_request(_req(cfg, "dup"))
+    try:
+        gw.submit_request(_req(cfg, "dup"))
+        assert False, "duplicate rid accepted"
+    except KeyError:
+        pass
+    vis_only = FleetGateway([VisionServeEngine("solo", slots=2,
+                                               frame_res=16, input_res=8,
+                                               use_gate=False)])
+    try:
+        vis_only.submit_request(_req(cfg, "x"))
+        assert False, "token submit without token replicas accepted"
+    except RuntimeError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the mixed scenario end to end
+# ---------------------------------------------------------------------------
+def test_mixed_scenario_deterministic_and_parallel_parity():
+    """One scenario exercises vision streams AND token requests through
+    the gateway: zero invariant violations, seed-deterministic token
+    latencies, and the mesh-parallel fleet tick reproduces the serial
+    trace bit-for-bit."""
+    s = get_scenario("mixed_serving")
+    a = run_scenario(s)
+    assert a.violations == []
+    assert a.summary["tok_done"] == a.summary["tok_submitted"] > 0
+    assert a.summary["adm"] > 0                # vision served too
+    done_events = a.trace.of_kind("req_done")
+    assert len(done_events) == a.summary["tok_done"]
+    assert all(e.get("turn") > 0 for e in done_events)
+
+    b = run_scenario(s)
+    assert b.digest == a.digest                # same seed ⇒ same trace
+    p = run_scenario(s, parallel=True)
+    assert p.digest == a.digest                # serial/parallel parity
+
+
+def test_percentile_helper_matches_numpy():
+    xs = list(RNG.random(37) * 100.0)
+    for q in (50, 95, 99):
+        assert abs(percentile(xs, q) - float(np.percentile(xs, q))) < 1e-9
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0], 99) == 3.0

@@ -1,8 +1,4 @@
 """Roofline analysis unit tests: HLO collective parser + term math."""
-import numpy as np
-import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.config import SHAPES, get_arch
 from repro.roofline import (HW_V5E, analyse_compiled, collective_bytes,

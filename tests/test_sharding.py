@@ -3,13 +3,11 @@
 These run in a subprocess so the XLA device-count flag never leaks into the
 other test processes (smoke tests must see 1 device).
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

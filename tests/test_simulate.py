@@ -7,8 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.clock import FRAME, TICK, VirtualClock, WallClock
-from repro.simulate import (SCENARIOS, ScenarioRunner, Trace, get_scenario,
-                            run_scenario)
+from repro.simulate import SCENARIOS, Trace, get_scenario, run_scenario
 from repro.streams import OUTER, FleetGateway, VisionServeEngine
 
 

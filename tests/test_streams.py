@@ -1,6 +1,5 @@
 """Fleet streaming subsystem: motion gate, vision engine, gateway."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -5,7 +5,6 @@ import tempfile
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

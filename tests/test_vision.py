@@ -1,5 +1,4 @@
 """Paper workloads (detector/pose) + flag-logic unit tests."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

@@ -16,7 +16,7 @@ from repro.kernels import ref, vision_ops
 from repro.models.vision import downscale as legacy_downscale
 from repro.streams import MotionGate, block_sad
 
-I = dict(interpret=True)
+INTERP = dict(interpret=True)
 
 
 def _frames(S, H, W, dtype):
@@ -29,7 +29,7 @@ def _ingest_case(name, S, H, W, *, m, g, b, dtype=jnp.float32,
         name, vision_ops.ingest_frame, ref.ingest_frame_ref,
         (_frames(S, H, W, dtype), tensor(S, g, g, 3)),
         kwargs=dict(model_res=m, gate_res=g, block=b, method=method),
-        kernel_kwargs=I)
+        kernel_kwargs=INTERP)
 
 
 INGEST_CASES = [
@@ -69,14 +69,14 @@ def test_per_dtype_tolerances_are_asserted():
 SAD_CASES = [
     ParityCase("sad_32_div", vision_ops.block_sad, ref.block_sad_ref,
                (tensor(2, 32, 32, 3), tensor(2, 32, 32, 3)),
-               kwargs=dict(block=8), kernel_kwargs=I),
+               kwargs=dict(block=8), kernel_kwargs=INTERP),
     ParityCase("sad_30_pad", vision_ops.block_sad, ref.block_sad_ref,
                (tensor(2, 30, 30, 3), tensor(2, 30, 30, 3)),
-               kwargs=dict(block=8), kernel_kwargs=I),
+               kwargs=dict(block=8), kernel_kwargs=INTERP),
     ParityCase("sad_bf16", vision_ops.block_sad, ref.block_sad_ref,
                (tensor(1, 16, 16, 3, dtype=jnp.bfloat16),
                 tensor(1, 16, 16, 3, dtype=jnp.bfloat16)),
-               kwargs=dict(block=8), kernel_kwargs=I),
+               kwargs=dict(block=8), kernel_kwargs=INTERP),
 ]
 
 
@@ -137,7 +137,7 @@ def _scatter_case(name, admit, dtype=jnp.float32):
         (tensor(S, 48, 48, 3, dtype=dtype), tensor(S, 48, 48, 3),
          tensor(S, 32, 32, 3), tensor(S, 32, 32, 3),
          jnp.asarray(admit, bool)),
-        kernel_kwargs=I, tol=dict(rtol=0, atol=0))   # pure select: exact
+        kernel_kwargs=INTERP, tol=dict(rtol=0, atol=0))   # pure select: exact
 
 
 SCATTER_CASES = [
@@ -161,12 +161,12 @@ def test_scatter_admit_parity(case):
 
 DOWNSCALE_CASES = [
     ParityCase("down_nearest_48", vision_ops.downscale, ref.downscale_ref,
-               (tensor(2, 64, 64, 3), 48), kernel_kwargs=I),
+               (tensor(2, 64, 64, 3), 48), kernel_kwargs=INTERP),
     ParityCase("down_box_17", vision_ops.downscale, ref.downscale_ref,
                (tensor(2, 37, 53, 3), 17), kwargs=dict(method="box"),
-               kernel_kwargs=I),
+               kernel_kwargs=INTERP),
     ParityCase("down_uint8", vision_ops.downscale, ref.downscale_ref,
-               (tensor(1, 30, 30, 3, dtype=jnp.uint8), 13), kernel_kwargs=I),
+               (tensor(1, 30, 30, 3, dtype=jnp.uint8), 13), kernel_kwargs=INTERP),
 ]
 
 
