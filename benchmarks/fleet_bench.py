@@ -26,6 +26,7 @@ CPU wall-clock on tiny models: relative numbers are the deliverable.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -165,13 +166,15 @@ def ingest_path(rows):
 
 
 def _fleet_drain(n_replicas: int, n_vehicles: int, frames: int,
-                 parallel: bool, input_res: int = INPUT_RES):
+                 parallel: bool, input_res: int = INPUT_RES,
+                 metrics=None, tracer=None):
     """Drive a whole gateway (outer+inner pairs) and drain it once."""
     replicas = [VisionServeEngine(f"r{i}", slots=4, frame_res=RES,
                                   input_res=input_res, fps=FPS,
                                   use_gate=True, rng=jax.random.key(i))
                 for i in range(n_replicas)]
-    gw = FleetGateway(replicas, parallel=parallel)
+    gw = FleetGateway(replicas, parallel=parallel,
+                      metrics=metrics, tracer=tracer)
     src = DashCamSource(granularity_s=frames / FPS, fps=FPS, res=RES, seed=7)
     clips = [src.pair(v) for v in range(n_vehicles)]
     for v in range(n_vehicles):
@@ -237,6 +240,64 @@ def parallel_fleet(rows, repeats: int = 3):
         f"serial/parallel outcomes diverged: {stats[False]} {stats[True]}")
 
 
+def obs_overhead(rows, repeats: int = 3):
+    """Observability overhead: the same gateway drain with the obs plane
+    fully on (shared MetricsRegistry + unsampled SpanTracer) vs fully off
+    (the NULL_TRACER / no-registry default).
+
+    Two columns: the wall-clock ratio on/off (the gate tolerates noise —
+    this is a tiny CPU workload where Python dict updates are a visible
+    fraction of a tick; the contract is "obs must not multiply tick
+    cost"), and a hard parity bit — per-stream processed/gated outcomes
+    must be IDENTICAL with obs on, because the plane is observe-only by
+    construction (pure clock reads, no charges).
+
+    Set ``OBS_DUMP_DIR`` to write the last obs-on run's Perfetto trace
+    (``bench_obs_trace.json``) and exposition (``bench_obs_metrics.prom``)
+    into that directory — the bench-gate CI job uploads them on failure.
+    """
+    from repro.obs import MetricsRegistry, SpanTracer
+    n_rep, n_veh, frames = 2, 4, 24
+    print("\n== observability overhead: obs on vs off (gateway drain) ==")
+    offered = n_veh * 2 * frames
+    stats = {}
+    last_obs = {}
+    for obs_on in (False, True):
+        _fleet_drain(n_rep, n_veh, frames, False)       # warm compile
+        best = None
+        for _ in range(repeats):
+            kw = (dict(metrics=MetricsRegistry(), tracer=SpanTracer())
+                  if obs_on else {})
+            done, wall, outcome = _fleet_drain(n_rep, n_veh, frames,
+                                               False, **kw)
+            if best is None or wall < best[1]:
+                best = (done, wall, outcome)
+            if obs_on:
+                last_obs = kw
+        stats[obs_on] = best
+    dump_dir = os.environ.get("OBS_DUMP_DIR", "")
+    if dump_dir and last_obs:
+        os.makedirs(dump_dir, exist_ok=True)
+        last_obs["tracer"].dump(
+            os.path.join(dump_dir, "bench_obs_trace.json"))
+        with open(os.path.join(dump_dir, "bench_obs_metrics.prom"),
+                  "w") as f:
+            f.write(last_obs["metrics"].expose())
+        print(f"[wrote bench obs trace + exposition to {dump_dir}]")
+        label = "obs on " if obs_on else "obs off"
+        print(f"{label}: {offered / best[1]:8.1f} offered-frames/s   "
+              f"inferred {best[0]}/{offered}   {best[1] * 1000:.0f} ms")
+    ratio = stats[True][1] / stats[False][1]
+    parity = (stats[False][0] == stats[True][0]
+              and stats[False][2] == stats[True][2])
+    print(f"obs overhead: {ratio:.2f}x wall   outcome parity: "
+          f"{'OK' if parity else 'MISMATCH'}")
+    rows.append(("fleet_obs_overhead", ratio, "x_vs_obs_off"))
+    rows.append(("fleet_obs_parity", float(parity), "1=identical"))
+    assert parity, (
+        f"obs-on outcomes diverged: {stats[False]} {stats[True]}")
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     batching_scaling(rows)
@@ -244,6 +305,7 @@ def main(rows=None):
     gating_effect(rows)
     ingest_path(rows)
     parallel_fleet(rows)
+    obs_overhead(rows)
     return rows
 
 

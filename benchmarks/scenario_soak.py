@@ -3,10 +3,18 @@
 Runs every scenario in ``repro.simulate.SCENARIOS`` at full length
 against the real fleet stack on virtual clocks, checks every invariant
 (ledger conservation, capacity bounds, placement, outer-priority bound,
-gate-state travel, zero post-warmup recompiles), certifies determinism
-by double-running the golden scenario, and prints one row per scenario.
+gate-state travel, zero post-warmup recompiles, metrics conservation),
+certifies determinism by double-running the golden scenario — the second
+run with the full observability plane attached, so the certificate also
+proves obs-neutrality (tracing/metrics never perturb a digest) — and
+prints one row per scenario.
 
     PYTHONPATH=src python -m benchmarks.scenario_soak [--skip-soak]
+        [--obs-dir DIR]
+
+``--obs-dir`` writes the obs-enabled golden run's Perfetto trace
+(``obs_trace.json``) and Prometheus exposition dump
+(``obs_metrics.prom``) into DIR — uploaded as CI artifacts on failure.
 
 Wall-clock here is host simulation speed, not serving performance — the
 deliverables are the invariant verdicts, the virtual-tick volume, and
@@ -15,12 +23,15 @@ the per-seed digests (any of which changing is a behavioural diff).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
+from repro.obs import MetricsRegistry, SpanTracer
 from repro.simulate import SCENARIOS, get_scenario, run_scenario
 
 
-def main(rows=None, skip_soak: bool = False, digests_path: str = ""):
+def main(rows=None, skip_soak: bool = False, digests_path: str = "",
+         obs_dir: str = ""):
     rows = rows if rows is not None else []
     total_ticks = 0
     total_violations = 0
@@ -50,17 +61,30 @@ def main(rows=None, skip_soak: bool = False, digests_path: str = ""):
         with open(digests_path, "w") as f:
             f.write("\n".join(digests) + "\n")
 
-    # determinism certificate: the golden scenario, twice
+    # determinism certificate: the golden scenario twice — the second run
+    # with the full obs plane on, so one digest equality certifies both
+    # run-to-run determinism AND obs-neutrality
     a = run_scenario(get_scenario("golden_churn"))
-    b = run_scenario(get_scenario("golden_churn"))
+    metrics, tracer = MetricsRegistry(), SpanTracer()
+    b = run_scenario(get_scenario("golden_churn"),
+                     metrics=metrics, tracer=tracer)
     det = a.digest == b.digest
+    if obs_dir:
+        os.makedirs(obs_dir, exist_ok=True)
+        tracer.dump(os.path.join(obs_dir, "obs_trace.json"))
+        with open(os.path.join(obs_dir, "obs_metrics.prom"), "w") as f:
+            f.write(metrics.expose())
+        print(f"[wrote obs_trace.json ({len(tracer)} events) and "
+              f"obs_metrics.prom ({len(metrics)} metrics) to {obs_dir}]")
     print(f"\nvirtual ticks simulated: {total_ticks}   "
           f"invariant violations: {total_violations}   "
-          f"determinism (golden twice): {'OK' if det else 'MISMATCH'}")
+          f"determinism (golden twice, 2nd run obs-on): "
+          f"{'OK' if det else 'MISMATCH'}")
     rows.append(("scenario_soak_ticks", total_ticks, "virtual_ticks"))
     rows.append(("scenario_soak_violations", total_violations, "count"))
     rows.append(("scenario_soak_deterministic", float(det), "1=identical"))
-    assert det, "golden scenario trace diverged between identical runs"
+    assert det, ("golden scenario trace diverged between identical runs "
+                 "(second run had the obs plane attached)")
     assert total_violations == 0, f"{total_violations} invariant violations"
     return rows
 
@@ -72,5 +96,10 @@ if __name__ == "__main__":
     ap.add_argument("--digests", default="",
                     help="write per-scenario trace digests to this file "
                          "(uploaded as a CI artifact on failure)")
+    ap.add_argument("--obs-dir", default="",
+                    help="write the obs-enabled golden run's Perfetto "
+                         "trace + metrics exposition dump into this dir "
+                         "(uploaded as CI artifacts on failure)")
     args = ap.parse_args()
-    main(skip_soak=args.skip_soak, digests_path=args.digests)
+    main(skip_soak=args.skip_soak, digests_path=args.digests,
+         obs_dir=args.obs_dir)

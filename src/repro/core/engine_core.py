@@ -48,6 +48,8 @@ from repro.config import EDAConfig
 from repro.core.clock import TICK, Clock, WallClock
 from repro.core.early_stop import EWMA, EarlyStopPolicy
 from repro.core.telemetry import Ledger
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import NULL_TRACER
 
 # The two analytics classes (paper §3.2.5): priority 0 = outer/hazard,
 # priority > 0 = inner/distraction.  Exported here so workload shells and
@@ -284,7 +286,9 @@ class EngineCore:
     def __init__(self, name: str, *, slots: int,
                  eda: Optional[EDAConfig] = None,
                  ledger: Optional[Ledger] = None,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None) -> None:
         self.name = name
         self.slots = slots
         self.clock = clock if clock is not None else WallClock()
@@ -295,6 +299,63 @@ class EngineCore:
         self.tick_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
         self.ticks = 0
         self.busy_s = 0.0
+        # observability seams — NULL_TRACER / no registry by default, so
+        # an uninstrumented engine pays one attribute read per phase
+        self.metrics: Optional[MetricsRegistry] = None
+        self.tracer = NULL_TRACER
+        self._tick_tracer = NULL_TRACER   # this tick's (sampled) tracer
+        self._m_ticks = self._m_tick_ms = None
+        self._m_dispatches = self._m_units = self._m_unit_ms = None
+        if metrics is not None or tracer is not None:
+            self.attach_obs(metrics=metrics, tracer=tracer)
+
+    # ------------------------------------------------------------------
+    # observability seams
+    # ------------------------------------------------------------------
+    def attach_obs(self, metrics: Optional[MetricsRegistry] = None,
+                   tracer=None) -> None:
+        """(Re)attach the observability plane: a shared
+        :class:`~repro.obs.metrics.MetricsRegistry` and/or a
+        :class:`~repro.obs.tracing.SpanTracer`.  Late attachment is the
+        normal path — the gateway attaches fleet-wide obs to replicas it
+        adopts, mirroring how it shares its ledger.  Labeled hot-path
+        children are resolved once here, never per tick."""
+        if tracer is not None:
+            self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+        m = self.metrics
+        if m is None:
+            return
+        eng = ("engine",)
+        self._m_ticks = m.counter(
+            "engine_ticks_total", "engine ticks run", eng,
+        ).labels(engine=self.name)
+        self._m_tick_ms = m.histogram(
+            "engine_tick_ms", "per-tick latency, ticks with work", eng,
+        ).labels(engine=self.name)
+        self._m_dispatches = m.counter(
+            "engine_dispatches_total", "model dispatches issued", eng,
+        ).labels(engine=self.name)
+        self._m_units = m.counter(
+            "engine_units_total", "work units (frames/tokens) dispatched",
+            eng,
+        ).labels(engine=self.name)
+        self._m_unit_ms = m.histogram(
+            "engine_unit_ms", "batch-amortised per-unit dispatch cost", eng,
+        ).labels(engine=self.name)
+
+    def tspan(self, name: str, **args):
+        """A phase span on this tick's tracer (the null span unless the
+        tick is sampled).  Timestamps come from the engine clock — pure
+        reads, so tracing never perturbs virtual time."""
+        return self._tick_tracer.span(self.clock, name, tid=self.name,
+                                      **args)
+
+    def tinstant(self, name: str, **args) -> None:
+        """A zero-duration marker (TTFT, admission) on this tick's
+        tracer."""
+        self._tick_tracer.instant(self.clock, name, tid=self.name, **args)
 
     # ------------------------------------------------------------------
     # deadline → budget (the ESD derivation, in exactly one place)
@@ -321,6 +382,9 @@ class EngineCore:
         measures the tick-cost EWMA from.  Split from the dispatch body so
         the fleet-parallel tick (``streams.fleet_step``) can run identical
         host phases around one fused device dispatch."""
+        # sample-select the tick's tracer BEFORE rebalance, so admission
+        # work done in the rebalance hook (token prefill) is covered
+        self._tick_tracer = self.tracer.for_tick(self.ticks)
         self.rebalance()
         t0 = self.clock.now_s()
         self.clock.charge(TICK)                  # fixed per-tick overhead
@@ -328,8 +392,17 @@ class EngineCore:
 
     def end_tick(self, t0_s: float, done: int) -> None:
         """Tick-cost EWMA + tick counter — the closing half of a tick."""
+        dt_ms = (self.clock.now_s() - t0_s) * 1000.0
         if done:
-            self.tick_cost_ms.update((self.clock.now_s() - t0_s) * 1000.0)
+            self.tick_cost_ms.update(dt_ms)
+        tr = self._tick_tracer
+        if tr.enabled:
+            tr.complete("tick", self.name, t0_s, dt_ms / 1000.0,
+                        tick=self.ticks, done=done)
+        if self._m_ticks is not None:
+            self._m_ticks.inc()
+            if done:
+                self._m_tick_ms.observe(dt_ms)
         self.ticks += 1
 
     def finish_dispatch(self, n_units: int, t0_s: float, charge_kind: str,
@@ -345,6 +418,10 @@ class EngineCore:
             dt = dt_override_s
         self.busy_s += dt
         self.unit_cost_ms.update(dt * 1000.0 / n_units)
+        if self._m_dispatches is not None:
+            self._m_dispatches.inc()
+            self._m_units.inc(n_units)
+            self._m_unit_ms.observe(dt * 1000.0 / n_units)
         return dt
 
     # ------------------------------------------------------------------

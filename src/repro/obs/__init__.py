@@ -1,0 +1,21 @@
+"""Fleet observability plane: sketches, metrics, spans, status.
+
+Dependency-free by construction — ``obs.sketch`` / ``obs.metrics`` /
+``obs.tracing`` import nothing from the serving stack, so every layer
+(core, streams, serving, simulate) can instrument itself without
+cycles.  ``obs.probes`` and ``obs.status`` read the stack lazily.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.probes import jit_cache_entries, register_runtime_gauges
+from repro.obs.sketch import QuantileSketch
+from repro.obs.status import FleetStatus, ReplicaStatus
+from repro.obs.tracing import (NULL_SPAN, NULL_TRACER, NullTracer,
+                               SpanTracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "QuantileSketch",
+    "SpanTracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
+    "FleetStatus", "ReplicaStatus",
+    "jit_cache_entries", "register_runtime_gauges",
+]

@@ -1,0 +1,78 @@
+"""Runtime probes: read-only views of stack internals as obs gauges.
+
+The simulator's zero-post-warmup-recompile invariant has always needed a
+way to count live jit cache entries (``simulate/invariants.py``); that
+probe is useful far beyond the simulator — a production fleet wants the
+same number on its status surface, because cache growth under churn IS
+the recompile bug.  This module owns the probe; ``simulate.invariants``
+re-exports it unchanged, and :func:`register_runtime_gauges` wires it
+(plus dispatch/backlog readings) into a :class:`~repro.obs.metrics.
+MetricsRegistry` as probe gauges whose value is read fresh at exposition
+time.
+
+Imports of the serving stack happen inside the probe bodies — obs stays
+import-light and cycle-free (``core.engine_core`` imports obs, never the
+reverse at module scope).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.obs.metrics import MetricsRegistry
+
+if TYPE_CHECKING:                                     # pragma: no cover
+    from repro.streams.gateway import FleetGateway
+
+
+def jit_cache_entries() -> int:
+    """Total jit cache entries across the model + kernel + admission jits
+    the fleet path dispatches — the quantity that must not grow after
+    warmup, whatever the churn (the simulator's recompile invariant)."""
+    from repro.kernels import vision_ops as vk
+    from repro.models import vision as V
+    from repro.streams import filter as sf
+    from repro.streams import vision_engine as ve
+    return (V.analyse_outer._cache_size()
+            + V.analyse_inner._cache_size()
+            + ve._load_frame._cache_size()
+            + sf._block_sad_jnp._cache_size()
+            + sf._gate_update._cache_size()
+            + vk._ingest_frame_jit._cache_size()
+            + vk._scatter_admit_jit._cache_size()
+            + vk._downscale_jit._cache_size())
+
+
+def register_runtime_gauges(metrics: MetricsRegistry,
+                            gw: "FleetGateway" = None) -> None:
+    """Install the standard probe gauges: ``jit_cache_entries`` always,
+    plus fleet occupancy/backlog/dispatch gauges when a gateway is given.
+    Probe gauges call back into the live stack at read time — exposition
+    always reflects the current state, with zero per-tick cost."""
+    metrics.gauge(
+        "jit_cache_entries",
+        "live jit cache entries across the fleet dispatch path "
+        "(growth after warmup = a recompile)",
+    ).set_function(jit_cache_entries)
+    if gw is None:
+        return
+    metrics.gauge(
+        "fleet_sessions", "open vehicle sessions across the fleet",
+    ).set_function(lambda: len(gw.sessions))
+    metrics.gauge(
+        "fleet_bound_lanes", "bound lanes across live vision replicas",
+    ).set_function(lambda: sum(r.bound_count for r in gw.live_replicas()))
+    metrics.gauge(
+        "fleet_backlog_frames", "pending frames across live replicas",
+    ).set_function(lambda: sum(
+        len(st.pending) for r in gw.live_replicas()
+        for st in r.streams.values()))
+    metrics.gauge(
+        "fleet_fused_dispatches",
+        "fused mesh-parallel dispatches issued (1 per tick with work, "
+        "by the fleet_step contract)",
+    ).set_function(lambda: gw._fleet.dispatches if gw._fleet else 0)
+    if gw.token_replicas:
+        metrics.gauge(
+            "fleet_token_backlog",
+            "token requests queued or decoding across the token fleet",
+        ).set_function(gw.token_backlog)

@@ -1,0 +1,170 @@
+"""FleetStatus: one point-in-time health snapshot of a serving fleet.
+
+The exposition surface's structured half: where ``MetricsRegistry.
+expose()`` answers "what are the time series", :func:`FleetStatus.
+from_gateway` answers "what is the fleet doing *right now*" — per-replica
+lane occupancy and binds, backlogs, adaptive gate thresholds, cost EWMAs,
+the fused-dispatch counter (whose 1-dispatch-per-tick contract
+``streams.fleet_step`` keeps), the jit-cache recompile probe, and
+optional per-vehicle battery/energy readings (the simulator passes its
+vehicle table; a real deployment passes telemetry from the vehicles).
+
+Everything is a read — building a status never mutates engine state, so
+it is safe to snapshot mid-run at any tick.  ``render()`` is the text
+dashboard (``examples/fleet_dashboard.py`` repaints it live);
+``to_dict()`` is the machine surface (JSON endpoint, artifact dumps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.probes import jit_cache_entries
+
+
+@dataclass
+class ReplicaStatus:
+    """One engine replica's health row (vision or token shell)."""
+    name: str
+    kind: str                        # "vision" | "token"
+    dead: bool
+    slots: int
+    bound: int
+    sessions: int                    # streams open / requests in flight
+    waiting: int                     # unbound entries in the wait queue
+    backlog: int                     # pending frames / queued requests
+    ticks: int
+    served: int                      # frames processed / tokens generated
+    busy_s: float
+    unit_cost_ms: float
+    tick_cost_ms: float
+    lane_binds: List[Optional[str]] = field(default_factory=list)
+    gate_thresh: Optional[Tuple[float, float, float]] = None  # min/mean/max
+
+    @property
+    def occupancy(self) -> float:
+        return self.bound / self.slots if self.slots else 0.0
+
+
+@dataclass
+class FleetStatus:
+    """Whole-fleet snapshot: replicas + gateway + runtime counters."""
+    replicas: List[ReplicaStatus]
+    sessions: int                    # open vehicle sessions (stream pairs)
+    refused: int
+    rebinds: int
+    fused_dispatches: int            # fleet_step's 1-per-tick counter
+    jit_cache: int                   # recompile probe reading
+    token_done: int = 0
+    ledger_records: int = 0
+    ledger_energy_j: float = 0.0
+    vehicle_energy: Dict[str, Tuple[float, float]] = field(
+        default_factory=dict)    # name -> (energy_j, battery_j)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_gateway(cls, gw, *,
+                     vehicle_energy: Optional[Dict[str, Tuple[float, float]]]
+                     = None) -> "FleetStatus":
+        """Snapshot a live :class:`~repro.streams.gateway.FleetGateway`
+        (plus its token replicas, if any).  ``vehicle_energy`` maps
+        vehicle name -> (energy_spent_j, battery_budget_j)."""
+        replicas = []
+        for r in gw.replicas:
+            gates = [g for g in r.gates.values() if g is not None]
+            thresh = None
+            if gates:
+                vals = [float(t) for g in gates for t in g.thresh]
+                thresh = (min(vals), sum(vals) / len(vals), max(vals))
+            replicas.append(ReplicaStatus(
+                name=r.name, kind="vision", dead=r.name in gw.dead,
+                slots=r.slots, bound=r.bound_count,
+                sessions=r.session_count,
+                waiting=len(r.waiting),
+                backlog=sum(len(st.pending) for st in r.streams.values()),
+                ticks=r.ticks, served=r.frames_processed, busy_s=r.busy_s,
+                unit_cost_ms=r.unit_cost_ms.get(0.0),
+                tick_cost_ms=r.tick_cost_ms.get(0.0),
+                lane_binds=[st.key if st is not None else None
+                            for st in r.lanes],
+                gate_thresh=thresh))
+        for e in gw.token_replicas:
+            in_flight = sum(req is not None for req in e.active)
+            replicas.append(ReplicaStatus(
+                name=e.name, kind="token", dead=False,
+                slots=e.slots, bound=in_flight,
+                sessions=in_flight + len(e.queue),
+                waiting=len(e.queue),
+                backlog=len(e.queue),
+                ticks=e.ticks, served=e.tokens_generated, busy_s=e.busy_s,
+                unit_cost_ms=e.unit_cost_ms.get(0.0),
+                tick_cost_ms=e.tick_cost_ms.get(0.0),
+                lane_binds=[req.rid if req is not None else None
+                            for req in e.active]))
+        return cls(
+            replicas=replicas,
+            sessions=len(gw.sessions),
+            refused=gw.refused,
+            rebinds=len(gw.rebinds),
+            fused_dispatches=gw._fleet.dispatches if gw._fleet else 0,
+            jit_cache=jit_cache_entries(),
+            token_done=len(gw.token_done),
+            ledger_records=len(gw.ledger),
+            ledger_energy_j=gw.ledger.totals["energy_j"],
+            vehicle_energy=dict(vehicle_energy or {}))
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "sessions": self.sessions, "refused": self.refused,
+            "rebinds": self.rebinds,
+            "fused_dispatches": self.fused_dispatches,
+            "jit_cache": self.jit_cache, "token_done": self.token_done,
+            "ledger_records": self.ledger_records,
+            "ledger_energy_j": self.ledger_energy_j,
+            "replicas": [{
+                "name": r.name, "kind": r.kind, "dead": r.dead,
+                "slots": r.slots, "bound": r.bound,
+                "sessions": r.sessions, "waiting": r.waiting,
+                "backlog": r.backlog, "ticks": r.ticks,
+                "served": r.served, "busy_s": r.busy_s,
+                "unit_cost_ms": r.unit_cost_ms,
+                "tick_cost_ms": r.tick_cost_ms,
+                "lane_binds": r.lane_binds,
+                "gate_thresh": r.gate_thresh,
+            } for r in self.replicas],
+            "vehicle_energy": {k: list(v)
+                               for k, v in self.vehicle_energy.items()},
+        }
+
+    def render(self) -> str:
+        """The text dashboard: one row per replica + a fleet footer."""
+        head = (f"{'replica':10s} {'kind':6s} {'state':6s} {'occ':>7s} "
+                f"{'wait':>4s} {'backlog':>7s} {'ticks':>6s} "
+                f"{'served':>7s} {'unit_ms':>8s} {'tick_ms':>8s} "
+                f"{'gate_thresh (min/mean/max)':26s}")
+        lines = [head, "-" * len(head)]
+        for r in self.replicas:
+            state = "DEAD" if r.dead else "live"
+            gate = ("-" if r.gate_thresh is None else
+                    "/".join(f"{v:.3f}" for v in r.gate_thresh))
+            lines.append(
+                f"{r.name:10s} {r.kind:6s} {state:6s} "
+                f"{r.bound}/{r.slots:<2d}{100 * r.occupancy:3.0f}% "
+                f"{r.waiting:4d} {r.backlog:7d} {r.ticks:6d} "
+                f"{r.served:7d} {r.unit_cost_ms:8.2f} "
+                f"{r.tick_cost_ms:8.2f} {gate:26s}")
+        lines.append(
+            f"fleet: {self.sessions} sessions  {self.refused} refused  "
+            f"{self.rebinds} rebinds  {self.fused_dispatches} fused "
+            f"dispatches  jit_cache={self.jit_cache}  "
+            f"ledger={self.ledger_records} recs "
+            f"({self.ledger_energy_j:.1f} J)"
+            + (f"  token_done={self.token_done}" if self.token_done else ""))
+        if self.vehicle_energy:
+            worst = sorted(self.vehicle_energy.items(),
+                           key=lambda kv: kv[1][1] - kv[1][0])[:4]
+            lines.append("battery (lowest headroom): " + "  ".join(
+                f"{name} {100 * (1 - e / b) if b else 0:.0f}%"
+                for name, (e, b) in worst))
+        return "\n".join(lines)

@@ -209,21 +209,23 @@ class ServeEngine(EngineCore):
         c0 = 0
         max_chunk = min(self.prefill_chunk, self.capacity)
         t0 = self.clock.now_s()
-        while c0 < S:
-            chunk = max_chunk
-            while chunk > S - c0:
-                chunk //= 2
-            logits, row = self._prefill_one(
-                self.params, row, toks[:, c0: c0 + chunk],
-                pos[:, c0: c0 + chunk], jnp.int32(c0))
-            c0 += chunk
-        first = int(jax.device_get(self.sample(logits[0, -1])))
-        self.clock.charge(PREFILL, S)            # no-op on a WallClock
+        with self.tspan("prefill", rid=req.rid, tokens=S, slot=slot):
+            while c0 < S:
+                chunk = max_chunk
+                while chunk > S - c0:
+                    chunk //= 2
+                logits, row = self._prefill_one(
+                    self.params, row, toks[:, c0: c0 + chunk],
+                    pos[:, c0: c0 + chunk], jnp.int32(c0))
+                c0 += chunk
+            first = int(jax.device_get(self.sample(logits[0, -1])))
+            self.clock.charge(PREFILL, S)        # no-op on a WallClock
         req.processing_ms += (self.clock.now_s() - t0) * 1000.0
 
         self.caches = insert_row(self.caches, row, slot)
         req.generated.append(first)
         req.prefill_done_s = self.clock.now_s()
+        self.tinstant("ttft", rid=req.rid, ttft_ms=req.ttft_ms)
         self.pool.bind(req, slot)
         self.slot_pos = self.slot_pos.at[slot].set(S)
         self.slot_last = self.slot_last.at[slot].set(first)
@@ -260,6 +262,14 @@ class ServeEngine(EngineCore):
             ttft_ms=req.ttft_ms)
         rec.close(req.turnaround_ms)
         self.ledger.add(rec)
+        if self.metrics is not None:
+            eng = ("engine",)
+            self.metrics.histogram(
+                "serve_ttft_ms", "time to first token, retired requests",
+                eng).labels(engine=self.name).observe(req.ttft_ms)
+            self.metrics.counter(
+                "serve_retired_total", "requests retired", eng,
+            ).labels(engine=self.name).inc()
 
     def step(self) -> int:
         """One engine tick: admit into free slots, then decode one token
@@ -270,13 +280,14 @@ class ServeEngine(EngineCore):
             return 0
 
         t_d = self.clock.now_s()
-        tokens = self.slot_last[:, None]
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           tokens, self.slot_pos)
-        nxt = self.sample(logits[:, -1])
-        nxt_host = jax.device_get(nxt)
         n_active = sum(r is not None for r in self.active)
-        dt = self.finish_dispatch(n_active, t_d, TOKEN)
+        with self.tspan("decode", n=n_active):
+            tokens = self.slot_last[:, None]
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               tokens, self.slot_pos)
+            nxt = self.sample(logits[:, -1])
+            nxt_host = jax.device_get(nxt)
+            dt = self.finish_dispatch(n_active, t_d, TOKEN)
 
         self.slot_pos = self.slot_pos + 1
         self.slot_last = jnp.asarray(nxt_host, jnp.int32)

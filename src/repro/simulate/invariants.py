@@ -43,22 +43,10 @@ class Violation:
         return f"[tick {self.tick}] {self.invariant}: {self.detail}"
 
 
-def jit_cache_sizes() -> int:
-    """Total jit cache entries across the model + kernel + admission jits
-    the fleet path dispatches — the quantity that must not grow after
-    warmup, whatever the churn."""
-    from repro.kernels import vision_ops as vk
-    from repro.models import vision as V
-    from repro.streams import filter as sf
-    from repro.streams import vision_engine as ve
-    return (V.analyse_outer._cache_size()
-            + V.analyse_inner._cache_size()
-            + ve._load_frame._cache_size()
-            + sf._block_sad_jnp._cache_size()
-            + sf._gate_update._cache_size()
-            + vk._ingest_frame_jit._cache_size()
-            + vk._scatter_admit_jit._cache_size()
-            + vk._downscale_jit._cache_size())
+# The recompile probe now lives on the observability plane
+# (``obs.probes.jit_cache_entries`` — also a status-surface gauge);
+# re-exported under its historical name for the simulate API.
+from repro.obs.probes import jit_cache_entries as jit_cache_sizes  # noqa: E402,F401
 
 
 class InvariantSuite:
@@ -160,16 +148,51 @@ class InvariantSuite:
             ledger.check()
         except AssertionError as e:
             self._flag(tick, "conservation", str(e))
-        offered = sum(r.frames_total for r in ledger.records)
+        offered = int(ledger.totals["frames_total"])
+        if ledger.records:
+            # non-aggregate ledgers: the running total must agree with a
+            # full rescan of the rows it claims to summarise
+            rescan = sum(r.frames_total for r in ledger.records)
+            if rescan != offered:
+                self._flag(tick, "conservation",
+                           f"ledger totals say {offered} frames offered "
+                           f"but the records sum to {rescan}")
         if offered != pushes:
             self._flag(tick, "conservation",
                        f"ledger offered {offered} != frames pushed "
                        f"{pushes} — a push vanished unaccounted")
+        self._check_metrics(tick, ledger)
         cache_now = jit_cache_sizes()
         if cache_now != cache_after_warmup:
             self._flag(tick, "recompile",
                        f"jit caches grew after warmup: "
                        f"{cache_after_warmup} -> {cache_now}")
+
+    def _check_metrics(self, tick: int, ledger: Ledger) -> None:
+        """Metrics conservation: the ledger's streaming sketches must
+        account every record exactly once — counts equal the exact record
+        counts and sketch sums equal the exact sums (to float tolerance).
+        Guards the obs plane itself: a sketch that dropped or double-fed
+        a record would report plausible-but-wrong fleet percentiles."""
+        n = int(ledger.totals["records"])
+        if ledger.records and len(ledger.records) != n:
+            self._flag(tick, "metrics",
+                       f"ledger holds {len(ledger.records)} records but "
+                       f"totals counted {n}")
+        sk = ledger.sketches
+        for metric, want in (("turnaround_ms", n), ("skip_rate", n),
+                             ("ttft_ms",
+                              int(ledger.totals["ttft_records"]))):
+            if sk[metric].count != want:
+                self._flag(tick, "metrics",
+                           f"{metric} sketch holds {sk[metric].count} "
+                           f"observations, expected {want}")
+        exact = (sum(r.turnaround_ms for r in ledger.records)
+                 if ledger.records else ledger.totals["turnaround_ms"])
+        got = sk["turnaround_ms"].sum
+        if abs(got - exact) > 1e-6 * max(1.0, abs(exact)):
+            self._flag(tick, "metrics",
+                       f"turnaround sketch sum {got} != exact {exact}")
 
     # ------------------------------------------------------------------
     def report(self) -> str:

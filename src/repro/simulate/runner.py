@@ -106,6 +106,11 @@ class ScenarioResult:
     ledger: Ledger
     violations: List[Violation]
     summary: Dict[str, object]
+    # the run's observability plane, when one was attached (None
+    # otherwise): a MetricsRegistry and a SpanTracer — both observe-only,
+    # so `digest` is bit-identical with or without them
+    metrics: Optional[object] = None
+    tracer: Optional[object] = None
 
     @property
     def digest(self) -> str:
@@ -177,7 +182,8 @@ def build_token_replicas(scenario: Scenario) -> list:
 
 
 def build_fleet(scenario: Scenario, *, parallel: bool = False,
-                fleet_mode: Optional[str] = None) -> FleetGateway:
+                fleet_mode: Optional[str] = None,
+                metrics=None, tracer=None) -> FleetGateway:
     """Instantiate the real engine replicas (virtual clocks, shared
     ledger) and the gateway, exactly as a serving deployment would.
     ``parallel=True`` builds the gateway in mesh-parallel tick mode
@@ -199,7 +205,8 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
     gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
                       overcommit=scenario.overcommit,
                       parallel=parallel, fleet_mode=fleet_mode,
-                      token_replicas=build_token_replicas(scenario))
+                      token_replicas=build_token_replicas(scenario),
+                      metrics=metrics, tracer=tracer)
     # install the heterogeneous HW priors (the gateway defaults to a
     # cores-only prior; scenarios speak full HardwareInfo — the paper's
     # HW_INFO handshake, refined by measurement as the run progresses)
@@ -224,11 +231,15 @@ def _stream_thresh(eng: VisionServeEngine, key: str) -> Optional[float]:
 
 class ScenarioRunner:
     def __init__(self, scenario: Scenario, *, parallel: bool = False,
-                 fleet_mode: Optional[str] = None) -> None:
+                 fleet_mode: Optional[str] = None,
+                 metrics=None, tracer=None) -> None:
         self.s = scenario
         warm_jits(scenario)
+        self.metrics = metrics
+        self.tracer = tracer
         self.gw = build_fleet(scenario, parallel=parallel,
-                              fleet_mode=fleet_mode)
+                              fleet_mode=fleet_mode,
+                              metrics=metrics, tracer=tracer)
         self.trace = Trace()
         self.inv = InvariantSuite(self.gw)
         self.energy = EnergyModel()
@@ -391,7 +402,11 @@ class ScenarioRunner:
                 trunc=req.truncated)
 
     # ------------------------------------------------------------------
-    def run(self) -> ScenarioResult:
+    def run(self, on_tick=None) -> ScenarioResult:
+        """Drive the scenario to completion.  ``on_tick(tick, runner)``,
+        when given, is called after every gateway tick — the dashboard
+        CLI's live-refresh hook; it must only *read* the stack (a
+        mutating callback would fork the trace from the golden digest)."""
         s = self.s
         for _ in range(s.initial_vehicles):
             self._join(0)
@@ -428,6 +443,8 @@ class ScenarioRunner:
                                 backlog=self.gw.token_backlog())
             if tick == s.warmup_ticks:
                 self._cache_after_warmup = jit_cache_sizes()
+            if on_tick is not None:
+                on_tick(tick, self)
         # drain + close every survivor so the ledger holds the whole run
         self.gw.drain(max_ticks=4 * s.ticks + 64)
         if self.gw.token_replicas:
@@ -471,14 +488,19 @@ class ScenarioRunner:
         return ScenarioResult(scenario=s, trace=self.trace,
                               ledger=self.gw.ledger,
                               violations=self.inv.violations,
-                              summary=summary)
+                              summary=summary,
+                              metrics=self.metrics, tracer=self.tracer)
 
 
 def run_scenario(scenario: Scenario, *, parallel: bool = False,
-                 fleet_mode: Optional[str] = None) -> ScenarioResult:
+                 fleet_mode: Optional[str] = None,
+                 metrics=None, tracer=None) -> ScenarioResult:
     """Run a scenario; ``parallel=True`` drives the fleet through the
     fused mesh-parallel tick instead of serial per-replica stepping (the
     differential harness in ``tests/test_fleet_step.py`` pins the two
-    paths to bit-identical trace digests)."""
-    return ScenarioRunner(scenario, parallel=parallel,
-                          fleet_mode=fleet_mode).run()
+    paths to bit-identical trace digests).  ``metrics``/``tracer`` attach
+    an observability plane for the run — observe-only, so the trace
+    digest is identical with or without them (``tests/test_obs_parity``).
+    """
+    return ScenarioRunner(scenario, parallel=parallel, fleet_mode=fleet_mode,
+                          metrics=metrics, tracer=tracer).run()

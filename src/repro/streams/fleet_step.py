@@ -346,6 +346,14 @@ class FleetStep:
             wall = time.perf_counter() - wall0
             self.dispatches += 1
             self.last_dispatch_s = wall
+            tr = getattr(gw, "tracer", None)
+            if tr is not None and tr.enabled:
+                # one fleet-lane span per fused dispatch: anchored at the
+                # lead replica's tick start, duration = measured host wall
+                tr.complete("fused_dispatch", "fleet", t0s[live[0].name],
+                            wall, dispatch=self.dispatches,
+                            n_active=int(act[OUTER].sum()
+                                         + act[INNER].sum()))
             masks = np.asarray(out["masks"])              # (4, R, slots)
             admit = {OUTER: masks[0], INNER: masks[1]}
             flags = {OUTER: masks[2], INNER: masks[3]}

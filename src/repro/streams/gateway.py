@@ -122,7 +122,8 @@ class FleetGateway:
                  deadline_ms: float = 0.0, overcommit: float = 1.5,
                  ledger: Optional[Ledger] = None, parallel: bool = False,
                  fleet_mode: Optional[str] = None,
-                 token_replicas: Sequence["ServeEngine"] = ()) -> None:
+                 token_replicas: Sequence["ServeEngine"] = (),
+                 metrics=None, tracer=None) -> None:
         if not replicas:
             raise ValueError("need at least one engine replica")
         if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
@@ -136,8 +137,13 @@ class FleetGateway:
         self.deadline_ms = deadline_ms
         self.overcommit = overcommit
         self.ledger = ledger if ledger is not None else Ledger()
+        # fleet-wide observability plane: every replica shares one
+        # registry/tracer, exactly like the shared ledger above
+        self.metrics = metrics
+        self.tracer = tracer
         for r in self.replicas:
             r.ledger = self.ledger            # one fleet-wide ledger
+            r.attach_obs(metrics=metrics, tracer=tracer)
 
         # replica heterogeneity enters through the HW prior; measurement
         # (frames/s per tick) refines it exactly like the phone handshake
@@ -181,6 +187,7 @@ class FleetGateway:
                                  f"vision and token fleets: {names}")
             for e in self.token_replicas:
                 e.ledger = self.ledger        # one fleet-wide ledger
+                e.attach_obs(metrics=metrics, tracer=tracer)
                 self._token_by_name[e.name] = e
                 self._token_harvested[e.name] = 0
             tstates = [WorkerState(name=e.name,
@@ -189,6 +196,10 @@ class FleetGateway:
                        for i, e in enumerate(self.token_replicas)]
             self.token_sched = _FleetScheduler(tstates[0], tstates[1:],
                                                outer_priority=True)
+
+        if metrics is not None:
+            from repro.obs.probes import register_runtime_gauges
+            register_runtime_gauges(metrics, self)
 
     # ------------------------------------------------------------------
     # lifecycle

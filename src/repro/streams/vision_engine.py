@@ -455,21 +455,23 @@ class VisionServeEngine(EngineCore):
         The device work on the staged frames happens in :meth:`_step_class`
         serially, or in one fused fleet dispatch (``streams.fleet_step``).
         """
-        batch = self.batches[kind]
-        active = np.zeros(self.slots, bool)
-        for lane, st in enumerate(self.lanes):
-            if st is None or st.kind != kind or not st.pending:
-                continue
-            self._trim_to_deadline(st)
-            frame = st.pending.popleft()
-            st.served_since_bind += 1      # gated frames consume quantum too
-            if self.use_pallas or self._host_staging:
-                self._stage[lane] = frame
-            else:
-                batch = _load_frame(batch, jnp.asarray(frame, jnp.float32),
-                                    jnp.int32(lane))
-            active[lane] = True
-        self.batches[kind] = batch
+        with self.tspan("stage", cls=kind):
+            batch = self.batches[kind]
+            active = np.zeros(self.slots, bool)
+            for lane, st in enumerate(self.lanes):
+                if st is None or st.kind != kind or not st.pending:
+                    continue
+                self._trim_to_deadline(st)
+                frame = st.pending.popleft()
+                st.served_since_bind += 1  # gated frames consume quantum too
+                if self.use_pallas or self._host_staging:
+                    self._stage[lane] = frame
+                else:
+                    batch = _load_frame(batch,
+                                        jnp.asarray(frame, jnp.float32),
+                                        jnp.int32(lane))
+                active[lane] = True
+            self.batches[kind] = batch
         return active
 
     def _step_class(self, kind: str) -> int:
@@ -485,18 +487,23 @@ class VisionServeEngine(EngineCore):
         batch = self.batches[kind]
         gate = self.gates[kind]
         if self.use_pallas:
-            batch, admit = self._ingest_pallas(batch, gate, active)
+            with self.tspan("ingest", cls=kind):
+                batch, admit = self._ingest_pallas(batch, gate, active)
             self.batches[kind] = batch
         else:
-            admit = gate.admit(batch, active) if gate is not None else active
+            with self.tspan("gate", cls=kind):
+                admit = (gate.admit(batch, active) if gate is not None
+                         else active)
         for lane in np.nonzero(active & ~admit)[0]:
             self.lanes[lane].gated += 1
 
         n_admit = int(admit.sum())
         if n_admit == 0:
             return 0
+        self.tinstant("admit", cls=kind, n=n_admit)
         t0 = self.clock.now_s()
-        per_frame = self._forward(kind, batch)
+        with self.tspan("forward", cls=kind):
+            per_frame = self._forward(kind, batch)
         return self._finish_class(admit, per_frame, t0, n_admit)
 
     def _forward(self, kind: str, batch: jax.Array) -> np.ndarray:
@@ -515,19 +522,20 @@ class VisionServeEngine(EngineCore):
         counters/flags/timestamps.  ``dt_override_s`` carries a fleet-
         parallel replica's share of the measured fused wall time (a
         virtual clock never passes it — its charge IS the cost)."""
-        dt = self.finish_dispatch(n_admit, t0_s, FRAME,
-                                  dt_override_s=dt_override_s)
+        with self.tspan("commit", n=n_admit):
+            dt = self.finish_dispatch(n_admit, t0_s, FRAME,
+                                      dt_override_s=dt_override_s)
 
-        now = self.clock.now_s()
-        for lane in np.nonzero(admit)[0]:
-            st = self.lanes[lane]
-            st.processed += 1
-            st.last_s = now
-            st.processing_ms += dt * 1000.0 / n_admit
-            flag = bool(per_frame[lane])
-            st.flagged += flag
-            self.results[st.key].append(flag)
-        self.frames_processed += n_admit
+            now = self.clock.now_s()
+            for lane in np.nonzero(admit)[0]:
+                st = self.lanes[lane]
+                st.processed += 1
+                st.last_s = now
+                st.processing_ms += dt * 1000.0 / n_admit
+                flag = bool(per_frame[lane])
+                st.flagged += flag
+                self.results[st.key].append(flag)
+            self.frames_processed += n_admit
         return n_admit
 
     def commit_class(self, kind: str, active: np.ndarray, admit: np.ndarray,
@@ -549,6 +557,7 @@ class VisionServeEngine(EngineCore):
         n_admit = int(admit.sum())
         if n_admit == 0:
             return 0
+        self.tinstant("admit", cls=kind, n=n_admit)
         t0 = self.clock.now_s()
         return self._finish_class(admit, per_frame, t0, n_admit,
                                   dt_override_s=dt_share_s)

@@ -1,0 +1,160 @@
+"""Telemetry ledger tests: percentile edge cases, sketch <-> exact
+parity, the aggregate (O(devices)) storage mode, wall_s power
+accounting, and the summary-table columns.
+
+The parity property is the load-bearing one: an ``aggregate=True``
+ledger throws its rows away and answers ``percentiles()`` from its
+sketches — those answers must stay within the sketch's ``rel_err`` of
+the exact row-backed answers, or the fleet-scale mode silently lies.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.telemetry import Ledger, SegmentRecord, percentile
+
+
+# ----------------------------------------------------------------------
+# percentile() edge cases
+# ----------------------------------------------------------------------
+def test_percentile_empty_and_single():
+    assert percentile([], 50) == 0.0
+    assert percentile([], 99) == 0.0
+    assert percentile([7.0], 0) == 7.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 100) == 7.0
+
+
+def test_percentile_extremes_and_interpolation():
+    xs = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(xs, 0) == 10.0
+    assert percentile(xs, 100) == 40.0
+    assert percentile(xs, 50) == 25.0          # midway between ranks 1, 2
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0   # unsorted input
+    # numpy-default linear interpolation: rank = (n-1) * q / 100
+    assert percentile(xs, 25) == pytest.approx(17.5)
+    assert percentile(xs, 90) == pytest.approx(37.0)
+
+
+# ----------------------------------------------------------------------
+# record helpers
+# ----------------------------------------------------------------------
+def _rec(i: int, device: str = "d0", turnaround: float = 100.0,
+         ttft: float = 0.0, total: int = 10, processed: int = 10,
+         energy: float = 1.0) -> SegmentRecord:
+    return SegmentRecord(
+        video_id=f"v{i}", stream="outer", device=device,
+        processing_ms=turnaround / 2, turnaround_ms=turnaround,
+        video_len_ms=1000.0, frames_total=total,
+        frames_processed=processed, ttft_ms=ttft, energy_j=energy)
+
+
+# ----------------------------------------------------------------------
+# sketch <-> exact parity
+# ----------------------------------------------------------------------
+@settings(max_examples=20)
+@given(st.lists(st.floats(min_value=0.1, max_value=1e5),
+                min_size=1, max_size=120))
+def test_ledger_sketch_percentiles_match_exact(turnarounds):
+    led = Ledger()
+    for i, t in enumerate(turnarounds):
+        led.add(_rec(i, turnaround=t, ttft=t / 10,
+                     processed=i % 11, total=10 if i % 11 <= 10 else 11))
+    exact = led.percentiles()
+    sketch = led.sketch_percentiles()
+    assert set(exact) == set(sketch)
+    for key, want in exact.items():
+        got = sketch[key]
+        assert abs(got - want) <= 0.0101 * abs(want) + 1e-9, \
+            f"{key}: sketch {got} vs exact {want}"
+
+
+def test_aggregate_mode_matches_default_mode():
+    """Same stream of records into both modes: identical totals and
+    summaries, percentiles within rel_err, empty record list."""
+    exact_led, agg_led = Ledger(), Ledger(aggregate=True)
+    for i in range(200):
+        r = _rec(i, device=f"d{i % 3}", turnaround=10.0 * (i + 1),
+                 ttft=float(i % 7), processed=10 - i % 4)
+        exact_led.add(r)
+        agg_led.add(_rec(i, device=f"d{i % 3}", turnaround=10.0 * (i + 1),
+                         ttft=float(i % 7), processed=10 - i % 4))
+    assert not agg_led.records and len(agg_led) == 200
+    assert agg_led.totals == exact_led.totals
+    assert agg_led.mean_turnaround_ms() == exact_led.mean_turnaround_ms()
+    assert agg_led.real_time_fraction() == exact_led.real_time_fraction()
+    rows_a = [s.row() for s in agg_led.summarise()]
+    rows_e = [s.row() for s in exact_led.summarise()]
+    assert rows_a == rows_e
+    pa, pe = agg_led.percentiles(), exact_led.percentiles()
+    for key, want in pe.items():
+        assert abs(pa[key] - want) <= 0.0101 * abs(want) + 1e-9, \
+            f"{key}: aggregate {pa[key]} vs exact {want}"
+
+
+def test_aggregate_mode_checks_conservation_at_add_time():
+    led = Ledger(aggregate=True)
+    bad = _rec(0, processed=5, total=10)
+    bad.frames_gated, bad.frames_dropped = 1, 1      # 5+1+1 != 10
+    with pytest.raises(AssertionError):
+        led.add(bad)
+    # default mode defers the same violation to check()
+    led2 = Ledger()
+    bad2 = _rec(0, processed=5, total=10)
+    bad2.frames_gated, bad2.frames_dropped = 1, 1
+    led2.add(bad2)
+    with pytest.raises(AssertionError):
+        led2.check()
+
+
+def test_merge_from_rolls_up_replica_ledgers():
+    """N per-replica aggregate ledgers merge into one fleet view whose
+    answers match a single global ledger."""
+    global_led = Ledger()
+    replicas = [Ledger(aggregate=True) for _ in range(3)]
+    for i in range(150):
+        t = 5.0 * (i + 1)
+        global_led.add(_rec(i, device=f"d{i % 2}", turnaround=t))
+        replicas[i % 3].add(_rec(i, device=f"d{i % 2}", turnaround=t))
+    fleet = Ledger(aggregate=True)
+    for rl in replicas:
+        fleet.merge_from(rl)
+    assert fleet.totals == global_led.totals
+    assert ([s.row() for s in fleet.summarise()]
+            == [s.row() for s in global_led.summarise()])
+    pf, pg = fleet.percentiles(), global_led.percentiles()
+    for key, want in pg.items():
+        assert abs(pf[key] - want) <= 0.0101 * abs(want) + 1e-9
+
+
+# ----------------------------------------------------------------------
+# summarise(wall_s) and the table columns
+# ----------------------------------------------------------------------
+def test_wall_s_changes_power_accounting():
+    led = Ledger()
+    led.add(_rec(0, energy=2.0))
+    led.add(_rec(1, energy=4.0))
+    per_video = led.summarise()[0]
+    # paper metric: energy per video over the video's nominal length
+    assert per_video.avg_power_mw == pytest.approx(1000.0 * 3.0 / 1.0)
+    walled = led.summarise(wall_s=60.0)[0]
+    # measured-wall metric: total device energy over the run's wall time
+    assert walled.avg_power_mw == pytest.approx(1000.0 * 6.0 / 60.0)
+    assert led.summarise(wall_s=0.0)[0].avg_power_mw \
+        == per_video.avg_power_mw                   # degenerate wall ignored
+    # and table() threads wall_s through
+    assert "avg_power_mw" in led.table(wall_s=60.0)
+
+
+def test_summary_row_surfaces_energy_and_ttft():
+    led = Ledger()
+    led.add(_rec(0, ttft=80.0, energy=1.5))
+    led.add(_rec(1, ttft=0.0, energy=2.5))      # unmeasured TTFT excluded
+    row = led.summarise()[0].row()
+    assert row["energy_j"] == 4.0
+    assert row["ttft_ms"] == 80                 # mean over measured only
+    for col in ("turnaround_ms", "skip_rate", "avg_power_mw"):
+        assert col in row
