@@ -55,6 +55,10 @@ GATE_RULES = [
     ("fleet_batching_speedup", "higher", 0.35, 0.0),
     ("fleet_gate_speedup", "higher", 0.35, 0.0),
     ("serve_batching_speedup", "higher", 0.35, 0.0),
+    ("serve_paged_batching_speedup", "higher", 0.35, 0.0),
+    # paged-vs-dense greedy token streams must stay identical (within the
+    # sliding window, where the contiguous ring is exact)
+    ("serve_paged_token_parity", "equal", 0.0, 0.02),
     ("fleet_gate_skip_rate", "equal", 0.15, 0.0),
     ("ingest_bytes_reduction_", "equal", 0.02, 0.0),
     ("ingest_parity_max_abs_err", "lower", 1.0, 1e-5),
@@ -73,6 +77,7 @@ GATE_RULES = [
     # other absolute metrics; the esd skip rates stay informational (they
     # depend on measured per-token cost, which is machine-class noise)
     ("serve_decode_us_per_token", "lower", 3.0, 0.0),
+    ("serve_paged_decode_us_per_token", "lower", 3.0, 0.0),
     ("serve_ttft_", "lower", 3.0, 0.0),
     ("serve_turnaround_", "lower", 3.0, 0.0),
 ]

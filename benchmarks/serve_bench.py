@@ -7,10 +7,24 @@ tokens/s is this host's.  Ledger percentile summaries (p50/p95/p99
 turnaround, TTFT, skip rate) are surfaced as rows so they land in the
 ``BENCH_*.json`` snapshot.
 
+Timing methodology: every timed engine's geometry is warmed first on a
+throwaway engine — the serving jits are module-level and shared by
+``(cfg, opts, sample)`` (``serving.engine.get_jits``), so the warm-up
+compiles every prefill-chunk width and the decode graph once and the
+timed run measures steady-state serving, not XLA compilation.
+
+``decode_throughput`` pins ``paged=False`` so the ``serve_decode_*`` /
+``serve_batching_speedup`` series keeps measuring the contiguous layout
+it always has; ``paged_steady`` measures the paged block-pool layout
+beside it (``serve_paged_*``) plus a paged-vs-dense greedy-token parity
+bit.
+
 Gated metrics (see ``GATE_RULES`` in ``benchmarks/run.py``):
-``serve_batching_speedup`` is self-normalising and tightly toleranced;
-``serve_decode_us_per_token`` / ``serve_ttft_*`` are absolute wall-clock
-and only catch catastrophic slowdowns.
+``serve_batching_speedup`` / ``serve_paged_batching_speedup`` are
+self-normalising and tightly toleranced; ``serve_paged_token_parity`` is
+exact; ``serve_decode_us_per_token`` / ``serve_paged_decode_us_per_token``
+/ ``serve_ttft_*`` are absolute wall-clock and only catch catastrophic
+slowdowns.
 """
 from __future__ import annotations
 
@@ -20,6 +34,7 @@ import numpy as np
 import jax
 
 from repro.config import EDAConfig, get_arch
+from repro.core.clock import PREFILL, TICK, TOKEN, VirtualClock
 from repro.core.telemetry import Ledger
 from repro.models import transformer as T
 from repro.serving import Request, ServeEngine
@@ -33,13 +48,41 @@ def _setup(arch="starcoder2-3b"):
     return cfg, params
 
 
-def _requests(cfg, n, max_new=8, n_prompt=12):
+def _requests(cfg, n, max_new=8, n_prompt=12, rng=None):
+    rng = rng if rng is not None else RNG
     return [Request(rid=f"{'outer' if i % 2 == 0 else 'inner'}-{i:02d}",
-                    tokens=RNG.integers(0, cfg.vocab_size, n_prompt),
+                    tokens=rng.integers(0, cfg.vocab_size, n_prompt),
                     max_new_tokens=max_new,
                     priority=0 if i % 2 == 0 else 1,
                     deadline_ms=0.0)
             for i in range(n)]
+
+
+def _warm(cfg, params, *, slots, cache_capacity, prefill_chunk, paged):
+    """Compile this geometry's serving jits on a throwaway engine: a
+    ``2 * prefill_chunk - 1`` prompt traces every power-of-two chunk
+    width, the run traces the decode graph."""
+    eng = ServeEngine(cfg, params, slots=slots, cache_capacity=cache_capacity,
+                      prefill_chunk=prefill_chunk, paged=paged)
+    n_prompt = min(2 * prefill_chunk - 1, cache_capacity - 1)
+    rng = np.random.default_rng(1)
+    for i in range(2):
+        eng.submit(Request(rid=f"warm-{i}",
+                           tokens=rng.integers(0, cfg.vocab_size, n_prompt),
+                           max_new_tokens=2))
+    eng.run()
+
+
+def _timed_run(cfg, params, *, slots, paged, n_req=8):
+    eng = ServeEngine(cfg, params, slots=slots, cache_capacity=64,
+                      prefill_chunk=16, paged=paged)
+    for r in _requests(cfg, n_req):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    return done, toks, dt
 
 
 def decode_throughput(rows):
@@ -47,14 +90,9 @@ def decode_throughput(rows):
     cfg, params = _setup()
     us_per_tok = {}
     for slots in (1, 2, 4):
-        eng = ServeEngine(cfg, params, slots=slots, cache_capacity=64,
-                          prefill_chunk=16)
-        for r in _requests(cfg, 8):
-            eng.submit(r)
-        t0 = time.perf_counter()
-        done = eng.run()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.generated) for r in done)
+        _warm(cfg, params, slots=slots, cache_capacity=64, prefill_chunk=16,
+              paged=False)
+        done, toks, dt = _timed_run(cfg, params, slots=slots, paged=False)
         us_per_tok[slots] = 1e6 * dt / max(toks, 1)
         print(f"slots={slots}: {toks / dt:7.1f} tok/s "
               f"mean_turn={np.mean([r.turnaround_ms for r in done]):7.1f} ms")
@@ -65,14 +103,55 @@ def decode_throughput(rows):
     rows.append(("serve_batching_speedup", speedup, "x_vs_slots1"))
 
 
+def paged_steady(rows):
+    """Paged block-pool layout beside the contiguous series: steady-state
+    decode cost, batching speedup, and a paged-vs-dense greedy-token
+    parity bit (prompts within the sliding window, where the contiguous
+    ring is exact — see ``tests/test_paged_attention.py`` for why longer
+    prompts use the full-model golden instead)."""
+    print("\n== paged KV (block pool): steady-state decode + parity ==")
+    cfg, params = _setup()
+    us_per_tok = {}
+    for slots in (1, 4):
+        _warm(cfg, params, slots=slots, cache_capacity=64, prefill_chunk=16,
+              paged=True)
+        done, toks, dt = _timed_run(cfg, params, slots=slots, paged=True)
+        us_per_tok[slots] = 1e6 * dt / max(toks, 1)
+        print(f"slots={slots}: {toks / dt:7.1f} tok/s (paged)")
+        rows.append((f"serve_paged_decode_us_per_token_slots{slots}",
+                     us_per_tok[slots], "us_per_token"))
+    speedup = us_per_tok[1] / us_per_tok[4]
+    print(f"paged batching speedup (slots 1 -> 4): {speedup:.2f}x")
+    rows.append(("serve_paged_batching_speedup", speedup, "x_vs_slots1"))
+
+    window = cfg.window if cfg.attention == "sliding" else 0
+    n_prompt = window if window else 12
+    streams = {}
+    for paged in (False, True):
+        eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
+                          prefill_chunk=16, paged=paged)
+        for r in _requests(cfg, 8, max_new=6, n_prompt=n_prompt,
+                           rng=np.random.default_rng(2)):
+            eng.submit(r)
+        streams[paged] = {r.rid: tuple(r.generated) for r in eng.run()}
+    same = [streams[True][rid] == streams[False][rid]
+            for rid in streams[True]]
+    parity = float(np.mean(same))
+    print(f"paged-vs-dense greedy token parity: {parity:.3f} "
+          f"({sum(same)}/{len(same)} identical streams)")
+    rows.append(("serve_paged_token_parity", parity, "frac_identical"))
+
+
 def prefill_ttft(rows):
     print("\n== chunked-prefill TTFT (long prompts through the ring) ==")
     cfg, params = _setup()
     ledger = Ledger()
     # chunk must stay inside the reduced arch's sliding window (8): the
     # 48-token prompts prefill as 6 ring-wrapping chunks per request
+    _warm(cfg, params, slots=2, cache_capacity=128, prefill_chunk=8,
+          paged=False)
     eng = ServeEngine(cfg, params, slots=2, cache_capacity=128,
-                      prefill_chunk=8, ledger=ledger)
+                      prefill_chunk=8, ledger=ledger, paged=False)
     for r in _requests(cfg, 8, max_new=4, n_prompt=48):
         eng.submit(r)
     done = eng.run()
@@ -88,8 +167,10 @@ def prefill_ttft(rows):
 def priority_latency_split(rows):
     print("\n== outer/inner priority classes ==")
     cfg, params = _setup()
+    _warm(cfg, params, slots=2, cache_capacity=64, prefill_chunk=16,
+          paged=False)
     eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
-                      prefill_chunk=16)
+                      prefill_chunk=16, paged=False)
     for r in _requests(cfg, 10, max_new=4):
         eng.submit(r)
     done = eng.run()
@@ -100,11 +181,18 @@ def priority_latency_split(rows):
 
 
 def deadline_skip(rows):
+    """Virtual-clocked: with the shared jits warm, a real token costs
+    ~0.5 ms and an 800 ms deadline never binds — the virtual clock pins
+    the per-token cost at 40 ms so the ESD knob's skip split is
+    deterministic and machine-independent."""
     print("\n== deadline token budgets (early stopping for serving) ==")
     cfg, params = _setup()
     for esd in (0.0, 2.0, 4.0):
+        clock = VirtualClock(rates={TOKEN: 0.040, PREFILL: 0.001,
+                                    TICK: 0.0002})
         eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
-                          prefill_chunk=16, eda=EDAConfig(esd=esd))
+                          prefill_chunk=16, eda=EDAConfig(esd=esd),
+                          clock=clock, paged=False)
         eng.token_cost_ms.update(40.0)
         for r in _requests(cfg, 6, max_new=10):
             r.deadline_ms = 800.0
@@ -119,6 +207,7 @@ def deadline_skip(rows):
 def main(rows=None):
     rows = rows if rows is not None else []
     decode_throughput(rows)
+    paged_steady(rows)
     prefill_ttft(rows)
     priority_latency_split(rows)
     deadline_skip(rows)

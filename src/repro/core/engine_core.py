@@ -86,6 +86,88 @@ def insert_row(pool, row, slot: int):
 
 
 # ---------------------------------------------------------------------------
+# paged-KV block pool
+# ---------------------------------------------------------------------------
+class BlockPoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list.
+
+    Loud by design: silently admitting a request without cache blocks is
+    the overflow bug class (a write lands in another request's blocks).
+    Callers that want backpressure catch this and leave the request
+    queued; callers that cannot ever satisfy the request must reject at
+    submit time."""
+
+
+class BlockPool:
+    """Host-side allocator for fixed-size KV cache blocks.
+
+    The paged-KV analogue of the slot pool: device memory holds one
+    shared pool of ``num_blocks`` blocks of ``block_size`` cache entries
+    (``models.attention.init_paged_cache``); this class owns *which
+    request holds which block ids*.  Allocation is all-or-nothing (a
+    partially allocated request would decode against missing blocks) and
+    ownership-checked on free, so a double-free or a free of another
+    request's block raises instead of silently corrupting the pool.
+    Block ids are handed out deterministically (ascending free list), so
+    simulator traces stay seed-deterministic.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int) -> None:
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"BlockPool needs num_blocks >= 1 and "
+                             f"block_size >= 1, got {num_blocks}, "
+                             f"{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # stack popped from the tail: ids come out ascending-first
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owner: dict = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._owner)
+
+    def alloc(self, n: int, owner) -> List[int]:
+        """Take ``n`` blocks for ``owner``; all-or-nothing.  Raises
+        :class:`BlockPoolExhausted` when fewer than ``n`` are free."""
+        if n < 1:
+            raise ValueError(f"alloc needs n >= 1, got {n}")
+        if n > len(self._free):
+            raise BlockPoolExhausted(
+                f"need {n} blocks for {owner!r} but only "
+                f"{len(self._free)}/{self.num_blocks} free "
+                f"({len(self._owner)} held)")
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._owner[b] = owner
+        return blocks
+
+    def free(self, blocks: List[int], owner) -> None:
+        """Return ``blocks`` held by ``owner``.  A block that is not
+        currently allocated (double free) or is held by someone else
+        raises before any state changes."""
+        for b in blocks:
+            if b not in self._owner:
+                raise ValueError(
+                    f"free of block {b} by {owner!r}: not allocated "
+                    f"(double free?)")
+            if self._owner[b] != owner:
+                raise ValueError(
+                    f"free of block {b} by {owner!r}: held by "
+                    f"{self._owner[b]!r}")
+        for b in blocks:
+            del self._owner[b]
+            self._free.append(b)
+
+    def owner_of(self, block: int):
+        return self._owner.get(block)
+
+
+# ---------------------------------------------------------------------------
 # two-class priority queue
 # ---------------------------------------------------------------------------
 class PriorityQueue:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as dec_k
 from repro.kernels import flash_attention as fa_k
 from repro.kernels import mlstm as mlstm_k
+from repro.kernels import paged_attention as pa_k
 from repro.kernels import rglru as rglru_k
 
 
@@ -101,6 +102,56 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                       window=window, block_k=bk, scale=scale,
                                       interpret=interpret)
     return out[..., :D].reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (block-pool KV read through a scalar-prefetched table)
+# ---------------------------------------------------------------------------
+
+
+def _pool_to_kernel(kp, vp, ppos):
+    """Pool (nb, bs, Hkv, D) -> kernel layout (nb, Hkv, bs', D') with the
+    block dim padded to the fp32 sublane multiple (padded entries carry
+    ppos = -1, so they mask as empty) and D padded to the lane width."""
+    kT = _pad_to(_pad_to(kp.transpose(0, 2, 1, 3), 8, 2), 128, 3)
+    vT = _pad_to(_pad_to(vp.transpose(0, 2, 1, 3), 8, 2), 128, 3)
+    pp = _pad_to(ppos.astype(jnp.int32), 8, 1, value=-1)
+    return kT, vT, pp
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                   "block_q"))
+def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                    ppos: jax.Array, tbl: jax.Array, q_pos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool = False,
+                    block_q: int = fa_k.DEFAULT_BQ) -> jax.Array:
+    """q: (B,S,Hq,D) model layout; kp/vp: (nb,bs,Hkv,D) block pool;
+    ppos: (nb,bs); tbl: (B,M) int32 (-1 = unused).  -> (B,S,Hq,D).
+
+    Gather-free: the kernels DMA KV blocks straight out of the pool via
+    the scalar-prefetched table.  S == 1 routes to the paged decode
+    kernel (GQA group as the MXU row dim), larger S to paged flash.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = kp.shape[2]
+    scale = 1.0 / (D ** 0.5)
+    kT, vT, pp = _pool_to_kernel(kp, vp, ppos)
+    tbl = tbl.astype(jnp.int32)
+    if S == 1 and causal:
+        G = Hq // Hkv
+        qG = _pad_to(q.reshape(B, Hkv, G, D), 128, 3)
+        out = pa_k.paged_decode_attention_bhgd(
+            qG, kT, vT, pp, tbl, q_pos.astype(jnp.int32), window=window,
+            scale=scale, interpret=interpret)
+        return out[..., :D].reshape(B, 1, Hq, D)
+    bq = _block(S, block_q)
+    qT = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), bq, 2), 128, 3)
+    qp = _pad_to(q_pos.astype(jnp.int32), bq, 1, value=-(2 ** 30))
+    out = pa_k.paged_flash_attention_bhsd(
+        qT, kT, vT, pp, tbl, qp, causal=causal, window=window, block_q=bq,
+        scale=scale, interpret=interpret)
+    return out[:, :, :S, :D].transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,236 @@
+"""Paged attention for TPU (Pallas): block-table reads via scalar prefetch.
+
+The paged KV cache (``models.attention.init_paged_cache``) keeps K/V in a
+shared pool of fixed-size blocks — ``kp/vp (nblocks, bs, Hkv, D)`` with
+per-entry absolute positions ``ppos (nblocks, bs)`` — and each request
+owns a row of a block table ``tbl (B, M)`` (-1 = unused column).  These
+kernels read the pool *gather-free*: the block table rides in as a
+scalar-prefetch operand (``PrefetchScalarGridSpec``), so the BlockSpec
+index_map dereferences ``tbl[b, j]`` and the DMA engine fetches each KV
+block straight from the pool — no (B, M*bs, ...) gathered copy of the
+cache is ever materialised, which is the whole point of paging on an
+edge-memory budget.
+
+Grids mirror the dense kernels (``flash_attention.py`` /
+``decode_attention.py``): block-table column innermost, online-softmax
+(m, l, acc) running state in VMEM scratch, one KV block streamed per
+step.  Masking is position-based exactly as the dense kernels: a pool
+entry with ``ppos = -1`` is empty, a table column with ``tbl = -1`` is
+masked wholesale inside the kernel body (the index_map clamps it to
+block 0 so the DMA stays in bounds), and the causal/window tests use
+absolute positions, so ring-reused blocks carrying stale out-of-window
+positions mask themselves.
+
+``interpret=True`` executes the bodies in Python on CPU — the validation
+mode this container uses (``tests/test_paged_attention.py``); on TPU the
+same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _clamp_blk(tbl, b, j):
+    return jnp.maximum(tbl[b, j], 0)
+
+
+# ---------------------------------------------------------------------------
+# decode: one query token per request, GQA group as the MXU row dim
+# ---------------------------------------------------------------------------
+
+
+def _paged_dec_kernel(tbl_ref, qpos_ref, q_ref, kpos_ref, k_ref, v_ref,
+                      o_ref, m_sc, l_sc, acc_sc, *, window: int, nj: int,
+                      scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bs, D)
+    qp = qpos_ref[0]                              # (1,) int32
+    kp = kpos_ref[0]                              # (bs,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kp >= 0) & (kp <= qp[0]) & (tbl_ref[b, j] >= 0)
+    if window:
+        valid &= (qp[0] - kp) < window
+    valid = valid[None, :]                        # (1, bs) broadcast over G
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    m_sc[...] = m_new
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _write():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention_bhgd(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                                ppos: jax.Array, tbl: jax.Array,
+                                q_pos: jax.Array, *, window: int = 0,
+                                scale: float = None,
+                                interpret: bool = False) -> jax.Array:
+    """q: (B,Hkv,G,D); kp/vp: (nb,Hkv,bs,D); ppos: (nb,bs); tbl: (B,M)
+    int32 (-1 = unused column); q_pos: (B,1).  Returns (B,Hkv,G,D).
+
+    One grid step streams one table column's block through VMEM; the
+    table itself is scalar-prefetched so the index_map dereferences it.
+    ``scale`` defaults to 1/sqrt(D); callers that padded D pass the
+    unpadded value.
+    """
+    B, Hkv, G, D = q.shape
+    bs = kp.shape[2]
+    M = tbl.shape[1]
+    grid = (B, Hkv, M)
+
+    kernel = functools.partial(_paged_dec_kernel, window=window, nj=M,
+                               scale=scale or 1.0 / (D ** 0.5))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j, tbl: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, j, tbl: (_clamp_blk(tbl, b, j), 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, tbl: (_clamp_blk(tbl, b, j), h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, tbl: (_clamp_blk(tbl, b, j), h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tbl, q_pos, q, ppos, kp, vp)
+
+
+# ---------------------------------------------------------------------------
+# prefill: flash over query chunks, KV streamed through the block table
+# ---------------------------------------------------------------------------
+
+
+def _paged_fa_kernel(tbl_ref, qpos_ref, q_ref, kpos_ref, k_ref, v_ref,
+                     o_ref, m_sc, l_sc, acc_sc, *, causal: bool,
+                     window: int, nj: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bs, D)
+    qp = qpos_ref[0]                               # (bq,) int32
+    kp = kpos_ref[0]                               # (bs,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kp[None, :] >= 0) & (tbl_ref[b, j] >= 0)
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window:
+        valid &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    m_sc[...] = m_new
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _write():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def paged_flash_attention_bhsd(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                               ppos: jax.Array, tbl: jax.Array,
+                               q_pos: jax.Array, *, causal: bool = True,
+                               window: int = 0, block_q: int = 256,
+                               scale: float = None,
+                               interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,S,D) with S % block_q == 0; kp/vp: (nb,Hkv,bs,D);
+    ppos: (nb,bs); tbl: (B,M); q_pos: (B,S).  Returns (B,Hq,S,D).
+
+    GQA: the KV head index is ``h // G`` exactly as the dense flash
+    kernel; the KV *block* index comes from the scalar-prefetched table.
+    """
+    B, Hq, S, D = q.shape
+    Hkv, bs = kp.shape[1], kp.shape[2]
+    G = Hq // Hkv
+    M = tbl.shape[1]
+    bq = min(block_q, S)
+    nq = S // bq
+    grid = (B, Hq, nq, M)
+
+    kernel = functools.partial(_paged_fa_kernel, causal=causal,
+                               window=window, nj=M,
+                               scale=scale or 1.0 / (D ** 0.5))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, iq, j, tbl: (b, iq)),
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda b, h, iq, j, tbl: (b, h, iq, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda b, h, iq, j, tbl: (_clamp_blk(tbl, b, j), 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, iq, j, tbl:
+                         (_clamp_blk(tbl, b, j), h // G, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, iq, j, tbl:
+                         (_clamp_blk(tbl, b, j), h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, j, tbl: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        interpret=interpret,
+    )(tbl, q_pos, q, ppos, kp, vp)

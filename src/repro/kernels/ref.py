@@ -62,6 +62,58 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (block-pool KV cache read through a block table)
+# ---------------------------------------------------------------------------
+
+
+def paged_gather_ref(kp: jax.Array, vp: jax.Array, ppos: jax.Array,
+                     tbl: jax.Array):
+    """Materialise each request's logical KV from the block pool.
+
+    kp/vp: (nb, bs, Hkv, D) pool; ppos: (nb, bs) absolute positions
+    (-1 = empty entry); tbl: (B, M) int32 block table (-1 = unused
+    column).  Returns (k (B, M*bs, Hkv, D), v, kv_pos (B, M*bs)) — unused
+    columns gather block 0's content but carry kv_pos = -1, so they mask
+    exactly like empty cache slots.
+    """
+    nb, bs = kp.shape[0], kp.shape[1]
+    B, M = tbl.shape
+    idx = jnp.clip(tbl, 0, nb - 1)
+    kg = kp[idx].reshape(B, M * bs, *kp.shape[2:])
+    vg = vp[idx].reshape(B, M * bs, *vp.shape[2:])
+    pg = jnp.where(tbl[:, :, None] >= 0, ppos[idx], -1).reshape(B, M * bs)
+    return kg, vg, pg
+
+
+def paged_prefill_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                      ppos: jax.Array, tbl: jax.Array, q_pos: jax.Array, *,
+                      causal: bool = True, window: int = 0) -> jax.Array:
+    """Golden for the paged flash-prefill kernel: gather the logical KV
+    through the table, then dense masked attention.  q: (B,S,Hq,D)."""
+    k, v, kv_pos = paged_gather_ref(kp, vp, ppos, tbl)
+    return flash_attention_ref(q, k, v, q_pos, kv_pos, causal=causal,
+                               window=window)
+
+
+def paged_decode_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                     ppos: jax.Array, tbl: jax.Array, q_pos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """Single-query-token paged case: q (B,1,Hq,D); q_pos (B,1)."""
+    return paged_prefill_ref(q, kp, vp, ppos, tbl, q_pos, causal=True,
+                             window=window)
+
+
+def paged_attention_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                        ppos: jax.Array, tbl: jax.Array, q_pos: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """Signature-matched golden for ``kernels.ops.paged_attention``."""
+    if q.shape[1] == 1 and causal:
+        return paged_decode_ref(q, kp, vp, ppos, tbl, q_pos, window=window)
+    return paged_prefill_ref(q, kp, vp, ppos, tbl, q_pos, causal=causal,
+                             window=window)
+
+
+# ---------------------------------------------------------------------------
 # RG-LRU linear recurrence
 # ---------------------------------------------------------------------------
 

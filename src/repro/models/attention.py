@@ -93,6 +93,88 @@ def cache_shapes(cfg: ModelConfig, batch: int, capacity: int,
     }
 
 
+def paged_cache_shapes(cfg: ModelConfig, num_blocks: int, block_size: int,
+                       dtype: Optional[str] = None) -> dict:
+    """Shared-pool paged KV cache for one attention layer.
+
+    Unlike the contiguous ring (``init_cache``), the pool has NO batch
+    dim: ``num_blocks`` fixed-size blocks shared by every slot, with the
+    per-request mapping living in an engine-owned block table.  ``ppos``
+    stores each entry's absolute position (-1 = empty), so ring-reused
+    blocks mask exactly like ring-reused contiguous slots.
+    """
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    kv = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "kp": jax.ShapeDtypeStruct(kv, dt),
+        "vp": jax.ShapeDtypeStruct(kv, dt),
+        "ppos": jax.ShapeDtypeStruct((num_blocks, block_size), jnp.int32),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype: Optional[str] = None) -> dict:
+    shapes = paged_cache_shapes(cfg, num_blocks, block_size, dtype)
+    return {k: (jnp.full(s.shape, -1, s.dtype) if s.dtype == jnp.int32
+                else jnp.zeros(s.shape, s.dtype))
+            for k, s in shapes.items()}
+
+
+def paged_write(cache: dict, k: jax.Array, v: jax.Array,
+                positions: jax.Array, pages: dict) -> dict:
+    """Scatter S new entries into the block pool through the block table.
+
+    ``pages``: ``tbl (B, M)`` int32 block table (-1 = unused column),
+    ``len (B,)`` per-row ring length in columns (position p lands in
+    column ``(p // bs) % len`` — the block-granular ring), ``reset (B,)``
+    int32 flags — a row with ``reset > 0`` first invalidates every entry
+    of its own blocks (recycled blocks carry the previous owner's
+    positions, which could alias the new request's).  Positions < 0 and
+    rows whose table column is -1 are dropped (out-of-range scatter), so
+    inactive slots never corrupt the pool.
+    """
+    kp, vp, pp = cache["kp"], cache["vp"], cache["ppos"]
+    nb, bs = kp.shape[0], kp.shape[1]
+    tbl = pages["tbl"]
+    B, M = tbl.shape
+    # first-chunk reset: blow away stale positions in this row's blocks
+    own = jnp.where((tbl >= 0) & (pages["reset"][:, None] > 0), tbl, nb)
+    pp = pp.at[own.reshape(-1)].set(-1, mode="drop")
+    # ring-at-block-granularity write
+    pos = positions.astype(jnp.int32)
+    col = (pos // bs) % jnp.maximum(pages["len"][:, None], 1)      # (B,S)
+    blk = jnp.take_along_axis(tbl, col, axis=1)                    # (B,S)
+    flat = blk * bs + pos % bs
+    ok = (pos >= 0) & (blk >= 0)
+    flat = jnp.where(ok, flat, nb * bs).reshape(-1)
+    feat = kp.shape[2:]
+    kp = kp.reshape((nb * bs,) + feat).at[flat].set(
+        k.reshape((-1,) + feat).astype(kp.dtype),
+        mode="drop").reshape(kp.shape)
+    vp = vp.reshape((nb * bs,) + feat).at[flat].set(
+        v.reshape((-1,) + feat).astype(vp.dtype),
+        mode="drop").reshape(vp.shape)
+    pp = pp.reshape(nb * bs).at[flat].set(pos.reshape(-1),
+                                          mode="drop").reshape(nb, bs)
+    return {"kp": kp, "vp": vp, "ppos": pp}
+
+
+def paged_gather(cache: dict, pages: dict):
+    """jnp fallback read: materialise (B, M*bs) logical KV + positions
+    from the pool (the CPU hot path; the Pallas kernels read the pool
+    gather-free through the scalar-prefetched table on TPU)."""
+    tbl = pages["tbl"]
+    kp = cache["kp"]
+    nb, bs = kp.shape[0], kp.shape[1]
+    B, M = tbl.shape
+    idx = jnp.clip(tbl, 0, nb - 1)
+    kg = kp[idx].reshape((B, M * bs) + kp.shape[2:])
+    vg = cache["vp"][idx].reshape((B, M * bs) + kp.shape[2:])
+    pg = jnp.where(tbl[:, :, None] >= 0, cache["ppos"][idx],
+                   -1).reshape(B, M * bs)
+    return kg, vg, pg
+
+
 def _write_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array,
                  positions: jax.Array, cache_index: jax.Array) -> dict:
     """Write S new entries at (ring) cache_index.
@@ -264,12 +346,16 @@ def attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
                causal: bool = True,
                fill_cache: bool = False,
                cache_capacity: Optional[int] = None,
+               pages: Optional[dict] = None,
                opts: RunOpts = DEFAULT_OPTS):
     """Self-attention.  Returns (y, new_cache).
 
     - train:   cache=None, fill_cache=False
     - prefill: cache=None, fill_cache=True  (cache built from k/v)
     - decode:  cache given, cache_index = current write offset
+    - paged:   cache is a block pool ({"kp","vp","ppos"}), ``pages``
+      carries the block table ({"tbl","len","reset"}); cache_index is
+      ignored — write columns derive from absolute positions
     """
     B, S, d = x.shape
     q = dense(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
@@ -286,7 +372,22 @@ def attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
 
     window = cfg.window if cfg.attention == "sliding" else 0
     new_cache = None
-    if cache is not None:
+    if cache is not None and "kp" in cache:
+        if pages is None:
+            raise ValueError("paged cache given without a block table "
+                             "(pages=None)")
+        new_cache = paged_write(cache, k, v, positions, pages)
+        if opts.use_kernels:
+            from repro.kernels import ops as kops
+            out = kops.paged_attention(
+                q, new_cache["kp"], new_cache["vp"], new_cache["ppos"],
+                pages["tbl"], positions, causal=causal, window=window,
+                interpret=opts.interpret)
+        else:
+            kg, vg, pg = paged_gather(new_cache, pages)
+            out = dot_attention(q, kg, vg, positions, pg, causal=causal,
+                                window=window, opts=opts)
+    elif cache is not None:
         new_cache = _write_cache(cfg, cache, k, v, positions, cache_index)
         out = dot_attention(q, new_cache["k"], new_cache["v"],
                             positions, new_cache["pos"],

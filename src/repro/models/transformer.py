@@ -197,10 +197,10 @@ def cache_shapes(cfg: ModelConfig, batch: int, capacity: int):
     return segs
 
 
-def init_caches(cfg: ModelConfig, batch: int, capacity: int):
-    """Materialised empty caches.  Sentinel values by leaf name:
-    ``pos`` -> -1 (empty slot), mlstm ``m`` -> -1e30 (log-sum-exp identity),
-    slstm ``n`` -> 1 (normalizer floor)."""
+def _materialize_caches(shapes):
+    """Sentinel values by leaf name: ``pos``/``ppos`` -> -1 (empty slot),
+    mlstm ``m`` -> -1e30 (log-sum-exp identity), slstm ``n`` -> 1
+    (normalizer floor)."""
     def init_leaf(path, s):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         if s.dtype == jnp.int32:
@@ -210,8 +210,50 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int):
         if name == "n" and len(s.shape) == 2:
             return jnp.ones(s.shape, s.dtype)
         return jnp.zeros(s.shape, s.dtype)
-    return jax.tree_util.tree_map_with_path(init_leaf,
-                                            cache_shapes(cfg, batch, capacity))
+    return jax.tree_util.tree_map_with_path(init_leaf, shapes)
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int):
+    """Materialised empty contiguous (per-slot ring) caches."""
+    return _materialize_caches(cache_shapes(cfg, batch, capacity))
+
+
+def paged_eligible(cfg: ModelConfig) -> bool:
+    """Paged KV needs every layer to be plain attention with a standard
+    K/V cache: no MLA (latent cache layout), no recurrent state (block
+    tables don't apply), no encoder-decoder cross-K/V riding in the same
+    cache dict."""
+    return (all(kind == ATTN for kind in cfg.layer_kinds())
+            and cfg.attention in ("full", "sliding")
+            and cfg.family != "encdec")
+
+
+def paged_cache_shapes(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """ShapeDtypeStruct pytree for the paged (shared block pool) caches —
+    same segment nesting as ``cache_shapes`` so ``apply_stack`` scans
+    stacked pools per repeated segment."""
+    if not paged_eligible(cfg):
+        raise ValueError(f"paged KV cache unsupported for arch "
+                         f"{cfg.name!r} (layers {cfg.layer_kinds()}, "
+                         f"attention {cfg.attention!r}, family "
+                         f"{cfg.family!r})")
+    segs = []
+    for sig, repeats in plan_layers(cfg):
+        period = {f"b{j}": attn_mod.paged_cache_shapes(cfg, num_blocks,
+                                                       block_size)
+                  for j in range(len(sig))}
+        if repeats > 1:
+            period = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+                period)
+        segs.append(period)
+    return segs
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Materialised empty paged caches (all blocks free, ``ppos`` -1)."""
+    return _materialize_caches(paged_cache_shapes(cfg, num_blocks,
+                                                  block_size))
 
 
 # ---------------------------------------------------------------------------
@@ -221,7 +263,8 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int):
 
 def _apply_block(cfg: ModelConfig, kind: str, moe_flag: bool, p: dict,
                  x: jax.Array, *, positions, cache, cache_index, causal,
-                 fill_cache, cache_capacity, enc_out, opts: RunOpts):
+                 fill_cache, cache_capacity, enc_out, pages=None,
+                 opts: RunOpts):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == ATTN:
@@ -239,7 +282,8 @@ def _apply_block(cfg: ModelConfig, kind: str, moe_flag: bool, p: dict,
                 cache={k: v for k, v in cache.items()
                        if not k.startswith("cross_")} if cache is not None else None,
                 cache_index=cache_index, causal=causal,
-                fill_cache=fill_cache, cache_capacity=cache_capacity, opts=opts)
+                fill_cache=fill_cache, cache_capacity=cache_capacity,
+                pages=pages, opts=opts)
         if "cross" in p:
             if cache is not None and "cross_k" in cache:
                 enc_kv = {"k": cache["cross_k"], "v": cache["cross_v"]}
@@ -294,7 +338,8 @@ def _apply_block(cfg: ModelConfig, kind: str, moe_flag: bool, p: dict,
 
 
 def _apply_period(cfg: ModelConfig, sig, p: dict, x, *, positions, caches,
-                  cache_index, causal, fill_cache, cache_capacity, enc_out, opts):
+                  cache_index, causal, fill_cache, cache_capacity, enc_out,
+                  pages=None, opts):
     new_caches = {}
     aux = jnp.zeros((), jnp.float32)
     for j, (kind, moe_flag) in enumerate(sig):
@@ -304,7 +349,7 @@ def _apply_period(cfg: ModelConfig, sig, p: dict, x, *, positions, caches,
                                 cache_index=cache_index, causal=causal,
                                 fill_cache=fill_cache,
                                 cache_capacity=cache_capacity, enc_out=enc_out,
-                                opts=opts)
+                                pages=pages, opts=opts)
         aux = aux + a
         new_caches[f"b{j}"] = nc
     return x, new_caches, aux
@@ -317,7 +362,8 @@ def _has_caches(caches) -> bool:
 def apply_stack(cfg: ModelConfig, segments_params: list, x: jax.Array, *,
                 positions, caches: Optional[list], cache_index, causal: bool,
                 fill_cache: bool, cache_capacity: Optional[int] = None,
-                enc_out=None, opts: RunOpts = DEFAULT_OPTS, plan=None):
+                enc_out=None, pages: Optional[dict] = None,
+                opts: RunOpts = DEFAULT_OPTS, plan=None):
     """Run all segments.  Returns (x, new_caches: list|None, aux)."""
     plan = plan if plan is not None else plan_layers(cfg)
     new_caches: Optional[list] = [] if (caches is not None or fill_cache) else None
@@ -332,7 +378,7 @@ def apply_stack(cfg: ModelConfig, segments_params: list, x: jax.Array, *,
                          positions=positions, caches=seg_c,
                          cache_index=cache_index, causal=causal,
                          fill_cache=fill_cache, cache_capacity=cache_capacity,
-                         enc_out=enc_out, opts=opts)
+                         enc_out=enc_out, pages=pages, opts=opts)
             if opts.remat != "none":
                 fn = _remat(fn, opts.remat)
             x, nc, aux = fn(x)
@@ -347,7 +393,7 @@ def apply_stack(cfg: ModelConfig, segments_params: list, x: jax.Array, *,
                     cfg, sig, p_slice, xc, positions=positions,
                     caches=c_slice, cache_index=cache_index, causal=causal,
                     fill_cache=fill_cache, cache_capacity=cache_capacity,
-                    enc_out=enc_out, opts=opts)
+                    enc_out=enc_out, pages=pages, opts=opts)
                 # nc may contain None leaves (no-cache modes); None is an
                 # empty pytree node, which scan stacks away harmlessly.
                 return out, (nc, aux)
@@ -414,8 +460,13 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             cache_capacity: Optional[int] = None,
             extras: Optional[dict] = None,
             last_only: bool = False,
+            pages: Optional[dict] = None,
             opts: RunOpts = DEFAULT_OPTS):
-    """Returns (logits, new_caches, aux)."""
+    """Returns (logits, new_caches, aux).
+
+    ``pages`` (paged KV only): ``{"tbl": (B, M) int32 block table,
+    "len": (B,) int32 live table columns, "reset": (B,) int32}`` — required
+    iff ``caches`` came from ``init_paged_caches``."""
     extras = extras or {}
     B, S = tokens.shape
     if positions is None:
@@ -430,7 +481,7 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
                                      cache_index=cache_index, causal=True,
                                      fill_cache=fill_cache,
                                      cache_capacity=cache_capacity,
-                                     enc_out=enc_out, opts=opts)
+                                     enc_out=enc_out, pages=pages, opts=opts)
     x = apply_norm(cfg, params["final_norm"], x)
     if last_only:
         x = x[:, -1:]

@@ -30,6 +30,7 @@ def jit_cache_entries() -> int:
     warmup, whatever the churn (the simulator's recompile invariant)."""
     from repro.kernels import vision_ops as vk
     from repro.models import vision as V
+    from repro.serving import engine as se
     from repro.streams import filter as sf
     from repro.streams import vision_engine as ve
     return (V.analyse_outer._cache_size()
@@ -39,7 +40,8 @@ def jit_cache_entries() -> int:
             + sf._gate_update._cache_size()
             + vk._ingest_frame_jit._cache_size()
             + vk._scatter_admit_jit._cache_size()
-            + vk._downscale_jit._cache_size())
+            + vk._downscale_jit._cache_size()
+            + se.jit_cache_entries())
 
 
 def register_runtime_gauges(metrics: MetricsRegistry,

@@ -32,11 +32,41 @@ distraction class.  All timing flows through the ``core.clock`` seam —
 decode ticks charge ``TOKEN`` work and prefill chunks charge ``PREFILL``
 work onto the clock, so under a ``VirtualClock`` turnaround and TTFT are
 deterministic functions of the scenario seed.
+
+KV layout — contiguous vs paged
+-------------------------------
+Two cache layouts share this one engine loop:
+
+* **contiguous** (``paged=False``): per-slot ring rows
+  ``(slots, capacity, Hkv, D)`` from ``transformer.init_caches``;
+  admission copies a freshly prefilled 1-row cache into the slot row
+  with ``insert_row``.
+* **paged** (``paged=True``, the default wherever the architecture is
+  eligible): one shared pool of fixed-size KV blocks
+  (``transformer.init_paged_caches``), a host-side
+  :class:`~repro.core.engine_core.BlockPool` owning block ids, and a
+  per-slot block table the model reads through
+  (``kernels.ops.paged_attention`` — gather-free on TPU via scalar
+  prefetch).  Admission allocates ``ceil(T / block_size)`` blocks
+  (all-or-nothing; pool exhaustion backpressures the queue), prefill
+  writes straight into the shared pool through the slot's table row, and
+  retire frees the blocks.  A sliding-window arch rings at *block*
+  granularity: ``ceil((window-1)/bs) + 1`` table columns provably cover
+  the window, so a slot pins ``O(window)`` cache instead of
+  ``O(capacity)`` — the memory headroom is the point of paging on an
+  edge device.
+
+Both layouts dispatch through module-level jits shared by every engine
+with the same ``(cfg, opts, sample)`` — ten engines on one host compile
+once, not ten times — and sampling is fused into the decode/prefill
+graphs (one dispatch + one scalar fetch per tick, no eager argmax).
+``jit_cache_entries`` exposes the serving jit cache size to the
+simulator's zero-post-warmup-recompile invariant.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +74,8 @@ import numpy as np
 
 from repro.config import EDAConfig, ModelConfig
 from repro.core.clock import PREFILL, TOKEN, Clock
-from repro.core.engine_core import (INNER, OUTER, EngineCore, LanePool,
+from repro.core.engine_core import (INNER, OUTER, BlockPool,
+                                    BlockPoolExhausted, EngineCore, LanePool,
                                     PriorityQueue, insert_row)
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import transformer as T
@@ -88,8 +119,110 @@ class Request:
         return 1.0 - len(self.generated) / self.max_new_tokens
 
 
+# ---------------------------------------------------------------------------
+# shared jit cache: one compile per (cfg, opts, sample), however many engines
+# ---------------------------------------------------------------------------
+
+
+def _argmax_sample(logits):
+    return jnp.argmax(logits, axis=-1)
+
+
+_JIT_CACHE: Dict[Tuple, Dict[str, Any]] = {}
+
+
+def _build_jits(cfg: ModelConfig, opts: RunOpts,
+                sample: Callable) -> Dict[str, Any]:
+    """Four serving dispatch functions closing over (cfg, opts, sample).
+
+    Sampling runs IN-GRAPH (the jit returns token ids, not logits): the
+    serving loop does one dispatch and fetches ``slots`` int32s per tick
+    instead of running an eager argmax against a device logits buffer —
+    on an edge CPU the eager tail was costing more than the decode math.
+    """
+    def prefill_chunk(params, caches, tokens, positions, start):
+        # contiguous: one fixed-size chunk of a single-row prompt; chunk
+        # K/V land at ring slots [start, start+chunk)
+        logits, caches, _ = T.forward(
+            cfg, params, tokens, positions=positions,
+            caches=caches, cache_index=start, opts=opts)
+        first = sample(logits[0, -1]).astype(jnp.int32)
+        return first, caches
+
+    def decode(params, caches, tokens, positions):
+        # contiguous: one decode tick for all slots; per-slot ring indices
+        logits, caches, _ = T.forward(
+            cfg, params, tokens, positions=positions[:, None],
+            caches=caches, cache_index=positions, opts=opts)
+        nxt = sample(logits[:, -1]).astype(jnp.int32)
+        return nxt, caches
+
+    def paged_prefill_chunk(params, caches, tokens, positions, tbl, tlen,
+                            reset):
+        # paged: the chunk writes straight into the SHARED pool through
+        # this slot's table row (B = 1); reset > 0 on the first chunk
+        # invalidates recycled blocks' stale positions
+        pages = {"tbl": tbl, "len": tlen, "reset": reset}
+        logits, caches, _ = T.forward(
+            cfg, params, tokens, positions=positions,
+            caches=caches, pages=pages, opts=opts)
+        first = sample(logits[0, -1]).astype(jnp.int32)
+        return first, caches
+
+    def paged_decode(params, caches, tokens, positions, tbl, tlen):
+        # paged: all slots read/write the shared pool through the full
+        # block table; retired rows are all -1 (writes dropped, attention
+        # fully masked)
+        pages = {"tbl": tbl, "len": tlen,
+                 "reset": jnp.zeros_like(tlen)}
+        logits, caches, _ = T.forward(
+            cfg, params, tokens, positions=positions[:, None],
+            caches=caches, pages=pages, opts=opts)
+        nxt = sample(logits[:, -1]).astype(jnp.int32)
+        return nxt, caches
+
+    return {"prefill": jax.jit(prefill_chunk),
+            "decode": jax.jit(decode),
+            "paged_prefill": jax.jit(paged_prefill_chunk),
+            "paged_decode": jax.jit(paged_decode)}
+
+
+def get_jits(cfg: ModelConfig, opts: RunOpts = DEFAULT_OPTS,
+             sample: Optional[Callable] = None) -> Dict[str, Any]:
+    """Shared serving jits for (cfg, opts, sample).
+
+    Keyed on reprs (both are frozen dataclasses) plus the sample callable
+    itself — two engines serving the same reduced arch share every trace,
+    which is what keeps a many-replica simulator tick from compiling the
+    same decode graph per replica."""
+    key = (repr(cfg), repr(opts), sample or _argmax_sample)
+    jits = _JIT_CACHE.get(key)
+    if jits is None:
+        jits = _build_jits(cfg, opts, sample or _argmax_sample)
+        _JIT_CACHE[key] = jits
+    return jits
+
+
+def jit_cache_entries() -> int:
+    """Live serving-jit cache entries (all engines, all archs) — counted
+    by the simulator's zero-post-warmup-recompile invariant alongside the
+    vision-path jits (``obs.probes.jit_cache_entries``)."""
+    return sum(f._cache_size() for jits in _JIT_CACHE.values()
+               for f in jits.values())
+
+
 class ServeEngine(EngineCore):
     """Continuous-batching token server (chunked-prefill-and-decode shell).
+
+    ``paged`` selects the KV layout (see module docstring): ``None``
+    (default) auto-enables the paged block pool wherever the architecture
+    is eligible (``transformer.paged_eligible``: every layer plain
+    attention) and falls back to contiguous rings otherwise;
+    ``True`` requires eligibility (raises if not); ``False`` forces
+    contiguous.  ``block_size`` is the KV entries per block and
+    ``num_blocks`` the pool size (default: enough for every slot's worst
+    case, so admission never backpressures — size it down to exercise
+    pool-pressure backpressure).
 
     ``overflow`` controls what happens when a prompt cannot fit the cache
     ring (``len(prompt) > cache_capacity - 1``): ``"reject"`` (default)
@@ -108,7 +241,10 @@ class ServeEngine(EngineCore):
                  ledger: Optional[Ledger] = None,
                  clock: Optional[Clock] = None,
                  overflow: str = "reject",
-                 starvation_limit: Optional[int] = 8) -> None:
+                 starvation_limit: Optional[int] = 8,
+                 paged: Optional[bool] = None,
+                 block_size: int = 16,
+                 num_blocks: Optional[int] = None) -> None:
         super().__init__(name, slots=slots, eda=eda, ledger=ledger,
                          clock=clock)
         if overflow not in ("reject", "truncate"):
@@ -119,56 +255,72 @@ class ServeEngine(EngineCore):
         self.capacity = cache_capacity
         self.prefill_chunk = prefill_chunk
         self.opts = opts
-        self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self.sample = sample or _argmax_sample
         self.overflow = overflow
 
-        self.caches = T.init_caches(cfg, slots, cache_capacity)
+        if paged is None:
+            paged = T.paged_eligible(cfg)
+        elif paged and not T.paged_eligible(cfg):
+            raise ValueError(
+                f"paged=True but arch {cfg.name!r} is not paged-eligible "
+                f"(layers {cfg.layer_kinds()}, attention {cfg.attention!r})")
+        self.paged = bool(paged)
+        self.block_size = block_size
+        if self.paged:
+            window = cfg.window if cfg.attention == "sliding" else 0
+            if window:
+                # ring at block granularity: R columns with
+                # (R-1)*bs + 1 >= window guarantee every in-window entry
+                # survives the wrap (stale entries window-mask themselves)
+                ring_cols = -(-(window - 1) // block_size) + 1
+            else:
+                ring_cols = -(-cache_capacity // block_size)
+            self.table_cols = ring_cols
+            self.num_blocks = num_blocks or slots * ring_cols
+            self.block_pool = BlockPool(self.num_blocks, block_size)
+            self.caches = T.init_paged_caches(cfg, self.num_blocks,
+                                              block_size)
+            # host-side block table: -1 = unused column; tbl_len is each
+            # slot's live ring length in columns
+            self._tbl = np.full((slots, self.table_cols), -1, np.int32)
+            self._tbl_len = np.ones((slots,), np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(slots)]
+        else:
+            self.num_blocks = 0
+            self.block_pool = None
+            self.caches = T.init_caches(cfg, slots, cache_capacity)
+            # a sliding-window arch's contiguous cache is clipped to the
+            # window (attention.cache_shapes): chunks wider than that
+            # ring cannot land in one dynamic_update_slice
+            window = cfg.window if cfg.attention == "sliding" else 0
+            self._dense_ring = (min(cache_capacity, window) if window
+                                else cache_capacity)
         # decode lanes via the core pool: no preemption — an admitted
         # request's cache row is never evicted mid-decode (its prefill
         # would be wasted); hazards win at ADMISSION through the queue
         self.pool = LanePool(slots, preempt=False)
-        self.slot_pos = jnp.zeros((slots,), jnp.int32)
-        self.slot_last = jnp.zeros((slots,), jnp.int32)
+        self.slot_pos = np.zeros((slots,), np.int32)
+        self.slot_last = np.zeros((slots,), np.int32)
         self.queue = PriorityQueue(starvation_limit=starvation_limit)
         self.finished: List[Request] = []
         self.token_cost_ms = self.unit_cost_ms
         self.tokens_generated = 0
 
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill_one = jax.jit(self._prefill_impl)
+        self._jits = get_jits(cfg, opts, sample)
 
     @property
     def active(self) -> List[Optional[Request]]:
         return self.pool.lanes
 
     # ------------------------------------------------------------------
-    # jit bodies
-    # ------------------------------------------------------------------
-    def _prefill_impl(self, params, caches, tokens, positions, start):
-        """Prefill one fixed-size chunk of a single-row prompt.
-
-        ``positions`` carries -1 on padded tail tokens, so their cache
-        entries are born invalid (never attended); chunk K/V land at ring
-        slots [start, start+chunk).  Returns (logits (1,chunk,V), caches).
-        """
-        logits, caches, _ = T.forward(
-            self.cfg, params, tokens, positions=positions,
-            caches=caches, cache_index=start, opts=self.opts)
-        return logits, caches
-
-    def _decode_impl(self, params, caches, tokens, positions):
-        """One decode tick for all slots.  tokens (slots,1), positions (slots,)
-        — per-slot ring indices (continuous batching)."""
-        logits, new_caches, _ = T.forward(
-            self.cfg, params, tokens,
-            positions=positions[:, None],
-            caches=caches, cache_index=positions,
-            opts=self.opts)
-        return logits, new_caches
-
-    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def _blocks_needed(self, n_prompt: int, max_new: int) -> int:
+        """Table columns a request needs: its logical KV extent, clipped
+        to the ring (a windowed arch never holds more than the ring)."""
+        extent = min(n_prompt + max_new, self.capacity)
+        return max(1, min(self.table_cols, -(-extent // self.block_size)))
+
     def submit(self, req: Request) -> None:
         """Queue a request (hazard class jumps the non-priority queue —
         paper: outer first) and stamp its arrival off the engine clock."""
@@ -185,6 +337,16 @@ class ServeEngine(EngineCore):
             # actually conditions on
             req.tokens = jnp.asarray(req.tokens)[-(self.capacity - 1):]
             req.prompt_truncated = True
+            n_prompt = self.capacity - 1
+        if self.paged:
+            need = self._blocks_needed(n_prompt, req.max_new_tokens)
+            if need > self.num_blocks:
+                # backpressure can never satisfy this one: reject loudly
+                # rather than spin it in the queue forever
+                raise ValueError(
+                    f"request {req.rid!r}: needs {need} KV blocks but the "
+                    f"pool only has {self.num_blocks} total (block_size="
+                    f"{self.block_size}) — grow num_blocks")
         req.arrival_s = self.clock.now_s()
         self.queue.push(req)
 
@@ -192,43 +354,81 @@ class ServeEngine(EngineCore):
         return self.budget(req.deadline_ms, req.max_new_tokens,
                            self.token_cost_ms.get(50.0))
 
-    def _admit(self, slot: int, req: Request) -> None:
-        """Chunked prefill (the paper's segmentation) + cache insert.
+    def _prefill_loop(self, slot: int, req: Request) -> int:
+        """Chunked prefill (the paper's segmentation).
 
         The prompt is decomposed into DESCENDING POWER-OF-TWO chunks capped
         at ``prefill_chunk`` (e.g. 23 -> 8+8+4+2+1): never any padding — a
         padded tail would silently corrupt *recurrent* state (attention can
         mask pad positions; an mLSTM/RG-LRU scan cannot skip steps) — while
         the compile count stays bounded by log2(prefill_chunk).
+
+        Contiguous prefills a fresh 1-row cache then ``insert_row``s it;
+        paged writes each chunk straight into the shared pool through the
+        slot's table row (no copy).  Returns the sampled first token.
         """
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
         S = int(toks.shape[1])
         pos = jnp.arange(S, dtype=jnp.int32)[None, :]
-        row = T.init_caches(self.cfg, 1, self.capacity)
-        logits = None
-        c0 = 0
         max_chunk = min(self.prefill_chunk, self.capacity)
-        t0 = self.clock.now_s()
-        with self.tspan("prefill", rid=req.rid, tokens=S, slot=slot):
-            while c0 < S:
-                chunk = max_chunk
-                while chunk > S - c0:
-                    chunk //= 2
-                logits, row = self._prefill_one(
+        if self.paged:
+            # a chunk must not exceed the slot's ring (two positions in
+            # one scatter mapping to the same pool entry would race)
+            max_chunk = min(max_chunk,
+                            int(self._tbl_len[slot]) * self.block_size)
+            tbl = jnp.asarray(self._tbl[slot: slot + 1])
+            tlen = jnp.asarray(self._tbl_len[slot: slot + 1])
+        else:
+            max_chunk = min(max_chunk, self._dense_ring)
+            row = T.init_caches(self.cfg, 1, self.capacity)
+        # power-of-two floor: chunk sizes must come from the one warmable
+        # set {2^k <= prefill_chunk} whatever ring clipped ``max_chunk``,
+        # or a mid-run admission could compile a fresh chunk width
+        max_chunk = 1 << (max_chunk.bit_length() - 1)
+        first = None
+        c0 = 0
+        while c0 < S:
+            chunk = max_chunk
+            while chunk > S - c0:
+                chunk //= 2
+            if self.paged:
+                reset = jnp.asarray([1 if c0 == 0 else 0], jnp.int32)
+                first, self.caches = self._jits["paged_prefill"](
+                    self.params, self.caches, toks[:, c0: c0 + chunk],
+                    pos[:, c0: c0 + chunk], tbl, tlen, reset)
+            else:
+                first, row = self._jits["prefill"](
                     self.params, row, toks[:, c0: c0 + chunk],
                     pos[:, c0: c0 + chunk], jnp.int32(c0))
-                c0 += chunk
-            first = int(jax.device_get(self.sample(logits[0, -1])))
+            c0 += chunk
+        if not self.paged:
+            self.caches = insert_row(self.caches, row, slot)
+        return int(jax.device_get(first))
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Allocate KV (paged: block-pool alloc, may raise
+        :class:`BlockPoolExhausted` BEFORE any compute — the caller
+        backpressures), chunk-prefill, bind the lane."""
+        S = int(np.shape(req.tokens)[0])
+        if self.paged:
+            ncols = self._blocks_needed(S, req.max_new_tokens)
+            blocks = self.block_pool.alloc(ncols, req.rid)
+            self._slot_blocks[slot] = blocks
+            self._tbl[slot, :] = -1
+            self._tbl[slot, :ncols] = blocks
+            self._tbl_len[slot] = ncols
+        t0 = self.clock.now_s()
+        with self.tspan("prefill", rid=req.rid, tokens=S, slot=slot):
+            first = self._prefill_loop(slot, req)
             self.clock.charge(PREFILL, S)        # no-op on a WallClock
         req.processing_ms += (self.clock.now_s() - t0) * 1000.0
 
-        self.caches = insert_row(self.caches, row, slot)
         req.generated.append(first)
         req.prefill_done_s = self.clock.now_s()
         self.tinstant("ttft", rid=req.rid, ttft_ms=req.ttft_ms)
         self.pool.bind(req, slot)
-        self.slot_pos = self.slot_pos.at[slot].set(S)
-        self.slot_last = self.slot_last.at[slot].set(first)
+        self.slot_pos[slot] = S
+        self.slot_last[slot] = first
 
     # ------------------------------------------------------------------
     # engine loop
@@ -236,14 +436,28 @@ class ServeEngine(EngineCore):
     def rebalance(self) -> None:
         """Admission at tick start (the core's ``begin_tick`` hook): free
         slots soak up queued requests, hazard class first (with the
-        queue's bounded anti-starvation bypass)."""
+        queue's bounded anti-starvation bypass).  Paged: pool exhaustion
+        re-queues the request at the front of its class and stops
+        admitting this tick — backpressure, not failure."""
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                self._admit(slot, self.queue.pop())
+                req = self.queue.pop()
+                try:
+                    self._admit(slot, req)
+                except BlockPoolExhausted:
+                    self.queue.push(req, front=True)
+                    break
 
     def _retire(self, req: Request) -> None:
         """Close a finished request into the ledger (turnaround/TTFT/skip
-        accounted like a vision stream's SegmentRecord)."""
+        accounted like a vision stream's SegmentRecord); paged: return
+        its blocks to the pool and blank its table row."""
+        if self.paged:
+            slot = req.lane
+            self.block_pool.free(self._slot_blocks[slot], req.rid)
+            self._slot_blocks[slot] = []
+            self._tbl[slot, :] = -1
+            self._tbl_len[slot] = 1
         req.truncated = len(req.generated) < req.max_new_tokens
         req.finish_s = self.clock.now_s()
         self.finished.append(req)
@@ -282,15 +496,20 @@ class ServeEngine(EngineCore):
         t_d = self.clock.now_s()
         n_active = sum(r is not None for r in self.active)
         with self.tspan("decode", n=n_active):
-            tokens = self.slot_last[:, None]
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               tokens, self.slot_pos)
-            nxt = self.sample(logits[:, -1])
-            nxt_host = jax.device_get(nxt)
+            tokens = jnp.asarray(self.slot_last[:, None])
+            positions = jnp.asarray(self.slot_pos)
+            if self.paged:
+                nxt, self.caches = self._jits["paged_decode"](
+                    self.params, self.caches, tokens, positions,
+                    jnp.asarray(self._tbl), jnp.asarray(self._tbl_len))
+            else:
+                nxt, self.caches = self._jits["decode"](
+                    self.params, self.caches, tokens, positions)
+            nxt_host = np.asarray(jax.device_get(nxt))
             dt = self.finish_dispatch(n_active, t_d, TOKEN)
 
         self.slot_pos = self.slot_pos + 1
-        self.slot_last = jnp.asarray(nxt_host, jnp.int32)
+        self.slot_last = nxt_host.astype(np.int32)
         for slot, req in enumerate(list(self.active)):
             if req is None:
                 continue
@@ -309,13 +528,18 @@ class ServeEngine(EngineCore):
 
     def stats(self) -> dict:
         """Serving-loop telemetry (mirrors the vision engine's)."""
-        return {
+        out = {
             "ticks": self.ticks,
             "tokens_generated": self.tokens_generated,
             "busy_s": self.busy_s,
             "token_cost_ms": self.token_cost_ms.get(0.0),
             "tick_cost_ms": self.tick_cost_ms.get(0.0),
+            "paged": self.paged,
         }
+        if self.paged:
+            out["kv_blocks_used"] = self.block_pool.used_blocks
+            out["kv_blocks_free"] = self.block_pool.free_blocks
+        return out
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0

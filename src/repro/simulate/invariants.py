@@ -20,8 +20,10 @@ the paper's transient-fleet claim rests on:
                  start);
   gate travel    a rebound stream's adaptive gate threshold is identical
                  before and after the rebind (state follows the stream);
-  no recompile   after the warmup tick, the model jits and kernel jits
-                 acquire zero new cache entries — churn must not compile.
+  no recompile   after the warmup tick, the model jits, kernel jits, and
+                 the shared serving jits (dense AND paged token engines —
+                 block-table shapes included) acquire zero new cache
+                 entries — churn must not compile.
 """
 from __future__ import annotations
 

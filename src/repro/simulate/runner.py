@@ -146,6 +146,40 @@ def warm_jits(scenario: Scenario) -> None:
             eng.push("w/outer", frame)
             eng.push("w/inner", frame)
             eng.step()
+    _warm_token_jits(scenario)
+
+
+def _warm_token_jits(scenario: Scenario) -> None:
+    """Token-engine half of :func:`warm_jits`: one throwaway ``ServeEngine``
+    per distinct replica geometry, fed a prompt of ``2 * prefill_chunk - 1``
+    tokens — its descending power-of-two decomposition traces EVERY chunk
+    width a later admission can dispatch — plus a short decode, so the
+    serving jits (``serving.engine.jit_cache_entries``) are all compiled
+    before the scenario's warmup tick."""
+    if not scenario.token_replicas:
+        return
+    import jax
+
+    from repro.config import get_arch
+    from repro.models import transformer as T
+    from repro.serving.engine import Request, ServeEngine
+
+    arch = (scenario.token_workload.arch if scenario.token_workload
+            else "starcoder2-3b")
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    geoms = {(spec.slots, spec.cache_capacity, spec.prefill_chunk,
+              spec.paged) for spec in scenario.token_replicas}
+    for slots, capacity, chunk, paged in sorted(
+            geoms, key=lambda g: (g[0], g[1], g[2], repr(g[3]))):
+        eng = ServeEngine(cfg, params, name="warmup-tok", slots=slots,
+                          cache_capacity=capacity, prefill_chunk=chunk,
+                          paged=paged, clock=VirtualClock())
+        n_prompt = min(2 * chunk - 1, capacity - 1)
+        for i in range(2):
+            eng.submit(Request(rid=f"w{i}", tokens=np.full(
+                (n_prompt,), 1, np.int32), max_new_tokens=2))
+        eng.run(max_ticks=8)
 
 
 def build_token_replicas(scenario: Scenario) -> list:
@@ -176,7 +210,7 @@ def build_token_replicas(scenario: Scenario) -> list:
         engines.append(ServeEngine(
             cfg, params, name=spec.name, slots=spec.slots,
             cache_capacity=spec.cache_capacity,
-            prefill_chunk=spec.prefill_chunk,
+            prefill_chunk=spec.prefill_chunk, paged=spec.paged,
             eda=EDAConfig(esd=scenario.esd), clock=clock))
     return engines
 

@@ -90,6 +90,10 @@ class TokenReplicaSpec:
     prefill_chunk: int = 8
     hw: HardwareInfo = field(default_factory=HardwareInfo)
     token_cost_ms: Optional[float] = None    # explicit override
+    # KV layout: None = auto (paged wherever the arch is eligible),
+    # True/False force.  Charges (and so trace digests) are layout-
+    # invariant — this knob exists so scenarios can pin/compare layouts.
+    paged: Optional[bool] = None
 
     def virtual_token_cost_ms(self) -> float:
         if self.token_cost_ms is not None:

@@ -395,8 +395,12 @@ class FleetStep:
             done += n
         if gw.token_replicas:
             # mixed fleets: the fused dispatch covers the vision replicas;
-            # token decode runs its own jits, stepped with the identical
-            # host phases (and order) the serial tick uses — so mixed
-            # scenarios stay bit-identical across serial/parallel modes
+            # token decode runs its own shared jits, stepped with the
+            # identical host phases (and order) the serial tick uses — so
+            # mixed scenarios stay bit-identical across serial/parallel
+            # modes.  A paged replica's block table / ring lengths are
+            # host-side numpy owned by its ServeEngine and only converted
+            # to device arrays at dispatch, so stepping order can never
+            # reorder pool allocation between serial and parallel ticks.
             done += gw._tick_tokens()
         return done

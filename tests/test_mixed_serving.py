@@ -218,6 +218,30 @@ def test_mixed_scenario_deterministic_and_parallel_parity():
     assert p.digest == a.digest                # serial/parallel parity
 
 
+def test_mixed_scenario_digest_invariant_to_kv_layout():
+    """Paged vs contiguous KV is a layout choice, not a scheduling one:
+    the same scenario pinned to ``paged=True`` and ``paged=False`` on
+    every token replica produces bit-identical trace digests (virtual
+    charges derive from request/token counts, never from cache layout),
+    serially AND mesh-parallel — and neither layout recompiles after
+    warmup (the invariant counts the shared serving jits, block-table
+    shapes included)."""
+    import dataclasses
+    s = get_scenario("mixed_serving")
+    digests = {}
+    for paged in (False, True):
+        sp = dataclasses.replace(s, token_replicas=tuple(
+            dataclasses.replace(t, paged=paged)
+            for t in s.token_replicas))
+        a = run_scenario(sp)
+        assert a.violations == [], f"paged={paged}: {a.violations}"
+        assert a.summary["tok_done"] == a.summary["tok_submitted"] > 0
+        p = run_scenario(sp, parallel=True)
+        assert p.digest == a.digest
+        digests[paged] = a.digest
+    assert digests[True] == digests[False]
+
+
 def test_percentile_helper_matches_numpy():
     xs = list(RNG.random(37) * 100.0)
     for q in (50, 95, 99):

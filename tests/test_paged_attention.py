@@ -1,0 +1,285 @@
+"""Paged-attention certification: kernel parity + paged-vs-dense + fuzz.
+
+Three layers of evidence that the paged KV read path is exact:
+
+  1. **Kernel parity** (the :mod:`kernel_harness` sweep): the Pallas paged
+     kernels (``kernels.ops.paged_attention``, interpret mode on CPU)
+     against the pure-jnp goldens ``kernels.ref.paged_attention_ref`` —
+     dtype (fp32/bf16) x head layout (MHA/GQA) x block size x ragged
+     sequence lengths (shorter than a block, exactly block-aligned,
+     single token) x windowing x trailing ``-1`` table columns.
+  2. **Paged-vs-dense equivalence**: the same logical KV laid out as a
+     *shuffled* block pool (garbage in unreferenced blocks, garbage in
+     tail entries past each row's length) must attend identically to the
+     contiguous dense layout (``ref.flash_attention_ref``) — the layout
+     is an implementation detail, never visible in the math.
+  3. **Engine fidelity**: a paged ``ServeEngine`` reproduces the teacher-
+     forced full-model greedy rollout token-for-token, and matches the
+     contiguous engine wherever the contiguous path is exact (prompts
+     within the sliding window — the clipped dense ring drops in-window
+     context at chunk boundaries for longer prompts; the paged ring is
+     sized to never do that).
+
+Plus a seeded fuzz sweep over random pool geometries and a ring-wrap
+test driving ``models.attention.paged_write`` the way the engine does.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from kernel_harness import LOOSE, ParityCase, TIGHT, assert_parity, ids
+from repro.kernels import ref
+from repro.kernels.ops import paged_attention
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.config import get_arch
+from repro.serving.engine import Request, ServeEngine
+
+INTERP = dict(interpret=True)
+
+
+def _paged_case(rng, lens, Hq, Hkv, D, bs, M, *, dtype=jnp.float32,
+                window=0, decode=True, tail_cols=0):
+    """Build a shuffled block pool holding each row's positions 0..L-1.
+
+    Returns (q, kp, vp, ppos, tbl, q_pos, dense_k, dense_v, dense_pos):
+    the pool view and the equivalent contiguous dense view of the SAME
+    logical KV.  Unreferenced pool blocks and entries past each row's
+    length are filled with garbage (values AND positions) — the table and
+    ``ppos`` sentinels alone must keep them out of the math.  ``tail_cols``
+    forces that many trailing ``-1`` table columns.
+    """
+    B = len(lens)
+    ncols = [max(1, -(-L // bs)) for L in lens]
+    assert max(ncols) + tail_cols <= M
+    nb = sum(ncols) + 3                       # 3 never-referenced blocks
+    perm = rng.permutation(nb)
+
+    def t(*shape):
+        return jnp.asarray(rng.normal(size=shape), dtype)
+
+    kp = t(nb, bs, Hkv, D)                    # garbage everywhere...
+    vp = t(nb, bs, Hkv, D)
+    ppos = jnp.asarray(rng.integers(0, max(lens) + 4, (nb, bs)), jnp.int32)
+    tbl = np.full((B, M), -1, np.int32)
+    dense_k = np.zeros((B, max(lens), Hkv, D), np.float32)
+    dense_v = np.zeros((B, max(lens), Hkv, D), np.float32)
+    dense_pos = np.full((B, max(lens)), -1, np.int32)
+    take = 0
+    for b, L in enumerate(lens):
+        blocks = perm[take: take + ncols[b]]
+        take += ncols[b]
+        tbl[b, :ncols[b]] = blocks
+        k_row = np.asarray(rng.normal(size=(L, Hkv, D)), np.float32)
+        v_row = np.asarray(rng.normal(size=(L, Hkv, D)), np.float32)
+        dense_k[b, :L], dense_v[b, :L] = k_row, v_row
+        dense_pos[b, :L] = np.arange(L)
+        for p in range(L):                    # ...overwritten where live
+            blk, off = blocks[p // bs], p % bs
+            kp = kp.at[blk, off].set(jnp.asarray(k_row[p], dtype))
+            vp = vp.at[blk, off].set(jnp.asarray(v_row[p], dtype))
+            ppos = ppos.at[blk, off].set(p)
+        for p in range(L, ncols[b] * bs):     # tail entries stay garbage
+            ppos = ppos.at[blocks[p // bs], p % bs].set(-1)
+    if decode:
+        q = t(B, 1, Hq, D)
+        q_pos = jnp.asarray([[L - 1] for L in lens], jnp.int32)
+    else:
+        S = max(lens)
+        q = t(B, S, Hq, D)
+        # rows shorter than S pad their query tail with out-of-range
+        # positions (never attended; outputs there are ignored)
+        q_pos = jnp.asarray(
+            [[p if p < L else -(2 ** 30) for p in range(S)] for L in lens],
+            jnp.int32)
+    return (q, kp, vp, ppos, jnp.asarray(tbl), q_pos,
+            jnp.asarray(dense_k, dtype), jnp.asarray(dense_v, dtype),
+            jnp.asarray(dense_pos))
+
+
+def _sweep_cases():
+    rng = np.random.default_rng(42)
+    dims = [
+        # name suffix, lens, Hq, Hkv, bs, M, window, decode, tail_cols
+        ("dec_gqa_ragged", [5, 8, 1, 17], 4, 2, 8, 4, 0, True, 0),
+        ("dec_mha_aligned", [16, 8], 4, 4, 8, 2, 0, True, 0),
+        ("dec_gqa8_window", [23, 9, 30], 8, 1, 16, 2, 8, True, 0),
+        ("dec_single_token", [1], 4, 2, 8, 3, 0, True, 2),
+        ("dec_tail_cols", [4, 11], 4, 2, 8, 4, 0, True, 2),
+        ("pre_gqa_ragged", [5, 12], 4, 2, 8, 2, 0, False, 0),
+        ("pre_mha_window", [16, 7], 4, 4, 8, 2, 4, False, 0),
+        ("pre_bs16", [20, 3], 4, 2, 16, 2, 0, False, 0),
+    ]
+    cases = []
+    for dtype in (jnp.float32, jnp.bfloat16):
+        tag = "f32" if dtype == jnp.float32 else "bf16"
+        for (nm, lens, Hq, Hkv, bs, M, w, dec, tc) in dims:
+            q, kp, vp, ppos, tbl, q_pos, *_ = _paged_case(
+                rng, lens, Hq, Hkv, 16, bs, M, dtype=dtype, window=w,
+                decode=dec, tail_cols=tc)
+            cases.append(ParityCase(
+                f"{nm}_{tag}", paged_attention, ref.paged_attention_ref,
+                (q, kp, vp, ppos, tbl, q_pos),
+                kwargs=dict(causal=True, window=w),
+                kernel_kwargs=INTERP))
+    return cases
+
+
+CASES = _sweep_cases()
+
+
+@pytest.mark.parametrize("case", CASES, ids=ids(CASES))
+def test_kernel_matches_paged_ref(case):
+    assert_parity(case)
+
+
+@pytest.mark.parametrize("decode", [True, False], ids=["decode", "prefill"])
+@pytest.mark.parametrize("window", [0, 4], ids=["full", "window4"])
+def test_paged_equals_dense_layout(decode, window):
+    """The shuffled pool and the contiguous layout hold the same logical
+    KV: the paged kernel must agree with the DENSE golden, not just the
+    paged one — garbage blocks/tails must be invisible."""
+    rng = np.random.default_rng(7)
+    q, kp, vp, ppos, tbl, q_pos, dk, dv, dpos = _paged_case(
+        rng, [5, 16, 1, 11], 4, 2, 16, 8, 3, window=window, decode=decode)
+    got = paged_attention(q, kp, vp, ppos, tbl, q_pos, causal=True,
+                          window=window, **INTERP)
+    want = ref.flash_attention_ref(q, dk, dv, q_pos, dpos, causal=True,
+                                   window=window)
+    # rows shorter than the longest only produce defined outputs at their
+    # own (valid) query positions
+    mask = np.asarray(q_pos >= 0)[..., None, None]
+    np.testing.assert_allclose(np.where(mask, np.asarray(got), 0.0),
+                               np.where(mask, np.asarray(want), 0.0),
+                               **TIGHT)
+
+
+def test_fuzz_random_pool_geometries():
+    """Seeded fuzz: random batch sizes, ragged lengths, head layouts and
+    block sizes — paged kernel vs paged golden every draw."""
+    rng = np.random.default_rng(1234)
+    for trial in range(10):
+        bs = int(rng.choice([8, 16]))
+        Hkv = int(rng.choice([1, 2]))
+        Hq = Hkv * int(rng.choice([1, 2, 4]))
+        B = int(rng.integers(1, 4))
+        M = int(rng.integers(1, 4))
+        lens = [int(rng.integers(1, M * bs + 1)) for _ in range(B)]
+        window = int(rng.choice([0, 5]))
+        decode = bool(rng.integers(0, 2))
+        q, kp, vp, ppos, tbl, q_pos, *_ = _paged_case(
+            rng, lens, Hq, Hkv, 16, bs, M, window=window, decode=decode)
+        got = paged_attention(q, kp, vp, ppos, tbl, q_pos, causal=True,
+                              window=window, **INTERP)
+        want = ref.paged_attention_ref(q, kp, vp, ppos, tbl, q_pos,
+                                       causal=True, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"trial {trial}: lens={lens} Hq={Hq} Hkv={Hkv} "
+                    f"bs={bs} M={M} w={window} decode={decode}", **TIGHT)
+
+
+def test_ring_wrap_through_paged_write():
+    """Drive the engine's actual write path past the ring boundary: with
+    R table columns sized for the window, positions wrap at block
+    granularity and stale overwritten entries must window-mask — the
+    incremental paged decode equals full attention over the entire
+    history at every step."""
+    rng = np.random.default_rng(3)
+    Hq, Hkv, D, bs, window = 4, 2, 16, 8, 6
+    R = -(-(window - 1) // bs) + 1            # 2 columns -> 16-entry ring
+    TOT = 3 * R * bs                          # wraps the ring twice
+    cache = A.init_paged_cache(
+        type("C", (), dict(num_kv_heads=Hkv, head_dim=D,
+                           compute_dtype="float32"))(), 5, bs)
+    tbl = jnp.asarray([[3, 1]], jnp.int32)
+    pages = {"tbl": tbl, "len": jnp.asarray([R], jnp.int32),
+             "reset": jnp.asarray([0], jnp.int32)}
+    ks = jnp.asarray(rng.normal(size=(1, TOT, Hkv, D)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(1, TOT, Hkv, D)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=(1, TOT, Hq, D)), jnp.float32)
+    all_pos = jnp.arange(TOT, dtype=jnp.int32)[None]
+    for t in range(TOT):
+        cache = A.paged_write(cache, ks[:, t:t + 1], vs[:, t:t + 1],
+                              all_pos[:, t:t + 1], pages)
+        got = paged_attention(qs[:, t:t + 1], cache["kp"], cache["vp"],
+                              cache["ppos"], tbl, all_pos[:, t:t + 1],
+                              causal=True, window=window, **INTERP)
+        want = ref.flash_attention_ref(
+            qs[:, t:t + 1], ks[:, :t + 1], vs[:, :t + 1],
+            all_pos[:, t:t + 1], all_pos[:, :t + 1], causal=True,
+            window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   err_msg=f"t={t}", **TIGHT)
+
+
+# ---------------------------------------------------------------------------
+# engine-level certification
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def reduced_lm():
+    cfg = get_arch("starcoder2-3b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _run_engine(cfg, params, prompts, paged, max_new=4):
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
+                      prefill_chunk=16, paged=paged)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=f"r{i}", tokens=jnp.asarray(p, jnp.int32),
+                           max_new_tokens=max_new))
+    return {r.rid: list(r.generated) for r in eng.run()}
+
+
+def test_engine_paged_matches_full_model_golden(reduced_lm):
+    """The paged engine's greedy streams equal teacher-forced full-model
+    argmax rollouts — including prompts longer than the sliding window,
+    where the ring must retain every in-window entry across wraps."""
+    cfg, params = reduced_lm
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,))
+               for L in (3, 8, 12, 17)]
+    got = _run_engine(cfg, params, prompts, paged=True)
+    for i, p in enumerate(prompts):
+        toks, want = list(map(int, p)), []
+        for _ in range(4):
+            lg, _, _ = T.forward(cfg, params,
+                                 jnp.asarray([toks], jnp.int32))
+            nxt = int(jnp.argmax(lg[0, -1]))
+            want.append(nxt)
+            toks.append(nxt)
+        assert got[f"r{i}"] == want, (i, got[f"r{i}"], want)
+
+
+def test_engine_paged_matches_dense_within_window(reduced_lm):
+    """Where the contiguous ring is exact (prompts <= window) the two
+    layouts must emit identical greedy token streams."""
+    cfg, params = reduced_lm
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,))
+               for L in (1, 4, cfg.window)]
+    assert (_run_engine(cfg, params, prompts, paged=True)
+            == _run_engine(cfg, params, prompts, paged=False))
+
+
+def test_engine_rejects_paged_on_ineligible_arch():
+    cfg = get_arch("recurrentgemma-9b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="not paged-eligible"):
+        ServeEngine(cfg, params, paged=True)
+    eng = ServeEngine(cfg, params)            # auto falls back to dense
+    assert not eng.paged
+
+
+def test_bf16_sweep_uses_loose_tolerance():
+    """Guard the harness contract the sweep relies on: bf16 inputs pick
+    the loose per-dtype tolerance automatically."""
+    bf16_cases = [c for c in CASES if c.name.endswith("bf16")]
+    assert bf16_cases and all(c.tolerance() == LOOSE for c in bf16_cases)
+    f32_cases = [c for c in CASES if c.name.endswith("f32")]
+    assert f32_cases and all(c.tolerance() == TIGHT for c in f32_cases)

@@ -29,7 +29,8 @@ try:
 except ImportError:                                # pragma: no cover
     from _hypothesis_stub import given, settings, strategies as st
 
-from repro.core.engine_core import PriorityQueue
+from repro.core.engine_core import (BlockPool, BlockPoolExhausted,
+                                    PriorityQueue)
 from repro.core.scheduler import (CapacityScheduler, HardwareInfo,
                                   Segment, WorkerState)
 from repro.streams import FleetGateway, VisionServeEngine
@@ -269,3 +270,133 @@ def test_fleet_scheduler_down_filter_excludes_dead_replicas():
         assert gw.join(f"veh{v}") is not None
     assert all(s.engine != "r1"
                for pair in gw.sessions.values() for s in pair)
+
+
+# ---------------------------------------------------------------------------
+# paged-KV block pool (repro.core.engine_core.BlockPool)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15)
+@given(num_blocks=st.integers(1, 24), seed=st.integers(0, 10_000))
+def test_block_pool_alloc_free_round_trip_conserves_blocks(num_blocks, seed):
+    """Random admit/retire churn: blocks are never leaked, never handed
+    to two owners at once, and free+used always equals the pool size."""
+    pool = BlockPool(num_blocks, block_size=8)
+    rng = np.random.default_rng(seed)
+    held = {}
+    rid = 0
+    for _ in range(60):
+        if held and rng.random() < 0.45:
+            owner = list(held)[int(rng.integers(len(held)))]
+            pool.free(held.pop(owner), owner)
+        else:
+            n = int(rng.integers(1, num_blocks + 1))
+            try:
+                blocks = pool.alloc(n, f"r{rid}")
+            except BlockPoolExhausted:
+                assert n > pool.free_blocks
+                continue
+            assert len(blocks) == len(set(blocks)) == n
+            assert all(pool.owner_of(b) == f"r{rid}" for b in blocks)
+            held[f"r{rid}"] = blocks
+            rid += 1
+        all_held = [b for bs_ in held.values() for b in bs_]
+        assert len(all_held) == len(set(all_held)) == pool.used_blocks
+        assert pool.free_blocks + pool.used_blocks == pool.num_blocks
+    for owner, blocks in held.items():
+        pool.free(blocks, owner)
+    assert pool.free_blocks == pool.num_blocks and pool.used_blocks == 0
+
+
+def test_block_pool_double_free_and_foreign_free_raise():
+    pool = BlockPool(4, 8)
+    a = pool.alloc(2, "a")
+    b = pool.alloc(1, "b")
+    pool.free(a, "a")
+    with np.testing.assert_raises_regex(ValueError, "double free"):
+        pool.free(a, "a")
+    with np.testing.assert_raises_regex(ValueError, "held by"):
+        pool.free(b, "a")
+    # a failed free must not have changed anything
+    assert pool.used_blocks == 1 and pool.owner_of(b[0]) == "b"
+
+
+def test_block_pool_exhaustion_is_loud_and_all_or_nothing():
+    pool = BlockPool(3, 8)
+    pool.alloc(2, "a")
+    with np.testing.assert_raises_regex(BlockPoolExhausted, "only 1/3"):
+        pool.alloc(2, "b")
+    # the failed alloc took nothing
+    assert pool.free_blocks == 1
+    pool.alloc(1, "c")
+
+
+@settings(max_examples=10)
+@given(num_blocks=st.integers(2, 16), seed=st.integers(0, 10_000))
+def test_block_pool_no_fragmentation(num_blocks, seed):
+    """The pool is an id allocator, not an address-contiguous arena:
+    after ANY churn, an allocation succeeds iff enough blocks are free —
+    freed blocks never become unusable (zero fragmentation by
+    construction)."""
+    pool = BlockPool(num_blocks, 8)
+    rng = np.random.default_rng(seed)
+    held = {}
+    for step in range(40):
+        if held and rng.random() < 0.5:
+            owner = list(held)[int(rng.integers(len(held)))]
+            pool.free(held.pop(owner), owner)
+        n = int(rng.integers(1, num_blocks + 1))
+        if n <= pool.free_blocks:
+            held[f"s{step}"] = pool.alloc(n, f"s{step}")  # must not raise
+
+
+def test_serve_engine_pool_exhaustion_backpressures_queue():
+    """An undersized pool: admission raises BlockPoolExhausted inside
+    rebalance, the engine re-queues the request at the front of its
+    class and serves it once blocks free up — nothing is lost, nothing
+    is silently admitted without cache blocks."""
+    import jax
+
+    from repro.config import get_arch
+    from repro.models import transformer as T
+    from repro.serving import Request, ServeEngine
+
+    cfg = get_arch("starcoder2-3b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    # 2 slots but blocks for only one 2-column request at a time
+    eng = ServeEngine(cfg, params, slots=2, cache_capacity=64,
+                      prefill_chunk=8, paged=True, num_blocks=2)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(rid=f"r{i}",
+                           tokens=rng.integers(0, cfg.vocab_size, 12),
+                           max_new_tokens=3))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == ["r0", "r1", "r2"]
+    assert all(len(r.generated) == 3 for r in done)
+    assert eng.block_pool.used_blocks == 0
+    # serialized by pool pressure: at most one was ever decoding at once,
+    # so each later request finished strictly after the previous one
+    fins = sorted(r.finish_s for r in done)
+    assert fins[0] < fins[1] < fins[2]
+
+
+def test_serve_engine_rejects_request_larger_than_pool():
+    """A request that could NEVER be satisfied (needs more blocks than
+    the pool has) must be rejected loudly at submit, not left to spin in
+    the queue forever."""
+    import jax
+
+    from repro.config import get_arch
+    from repro.models import transformer as T
+    from repro.serving import Request, ServeEngine
+
+    cfg = get_arch("starcoder2-3b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, cache_capacity=64,
+                      prefill_chunk=8, paged=True, num_blocks=1)
+    with np.testing.assert_raises_regex(ValueError, "grow num_blocks"):
+        eng.submit(Request(rid="big",
+                           tokens=np.arange(30, dtype=np.int32) % 7,
+                           max_new_tokens=8))
