@@ -167,14 +167,14 @@ def ingest_path(rows):
 
 def _fleet_drain(n_replicas: int, n_vehicles: int, frames: int,
                  parallel: bool, input_res: int = INPUT_RES,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, events=None):
     """Drive a whole gateway (outer+inner pairs) and drain it once."""
     replicas = [VisionServeEngine(f"r{i}", slots=4, frame_res=RES,
                                   input_res=input_res, fps=FPS,
                                   use_gate=True, rng=jax.random.key(i))
                 for i in range(n_replicas)]
     gw = FleetGateway(replicas, parallel=parallel,
-                      metrics=metrics, tracer=tracer)
+                      metrics=metrics, tracer=tracer, events=events)
     src = DashCamSource(granularity_s=frames / FPS, fps=FPS, res=RES, seed=7)
     clips = [src.pair(v) for v in range(n_vehicles)]
     for v in range(n_vehicles):
@@ -298,6 +298,79 @@ def obs_overhead(rows, repeats: int = 3):
         f"obs-on outcomes diverged: {stats[False]} {stats[True]}")
 
 
+def event_plane(rows, repeats: int = 3):
+    """Event/alert plane: drain overhead, outcome parity, spool drain.
+
+    Three columns.  The wall-clock ratio of a gateway drain with the
+    event plane attached (typed envelopes, cooldown bookkeeping,
+    evidence-ring pushes, the per-tick pump) vs without — the plane
+    rides the host phases and must never multiply tick cost, so the
+    gate is the same generous-ratio shape as fleet_obs_overhead.  A
+    hard parity bit — per-stream processed/gated outcomes must be
+    IDENTICAL with the plane on, because emission hooks only observe.
+    And a spool-drain rate: buffer a burst behind a partitioned uplink,
+    reconnect, and flush through the idempotent sink — the
+    at-least-once recovery path whose throughput bounds how fast a
+    returning vehicle catches the receiver up.
+    """
+    from repro.events import DedupSink, EventConfig, EventPlane, HAZARD
+    n_rep, n_veh, frames = 2, 4, 24
+    print("\n== event plane: overhead / parity / spool drain ==")
+    offered = n_veh * 2 * frames
+    stats = {}
+    last_plane = None
+    for ev_on in (False, True):
+        _fleet_drain(n_rep, n_veh, frames, False)       # warm compile
+        best = None
+        for _ in range(repeats):
+            plane = EventPlane(EventConfig(), DedupSink()) if ev_on \
+                else None
+            done, wall, outcome = _fleet_drain(n_rep, n_veh, frames,
+                                               False, events=plane)
+            if best is None or wall < best[1]:
+                best = (done, wall, outcome)
+                if ev_on:
+                    last_plane = plane
+        stats[ev_on] = best
+        label = "events on " if ev_on else "events off"
+        print(f"{label}: {offered / best[1]:8.1f} offered-frames/s   "
+              f"inferred {best[0]}/{offered}   {best[1] * 1000:.0f} ms")
+    ratio = stats[True][1] / stats[False][1]
+    parity = (stats[False][0] == stats[True][0]
+              and stats[False][2] == stats[True][2])
+    print(f"event overhead: {ratio:.2f}x wall   outcome parity: "
+          f"{'OK' if parity else 'MISMATCH'}   "
+          f"emitted {last_plane.emitted}   "
+          f"accepted {last_plane.sink.accepted_count}")
+    rows.append(("fleet_event_overhead", ratio, "x_vs_events_off"))
+    rows.append(("fleet_event_parity", float(parity), "1=identical"))
+    assert parity, (
+        f"event-plane-on outcomes diverged: {stats[False]} {stats[True]}")
+
+    # spool drain: a partitioned vehicle accumulates a burst, then the
+    # uplink returns and the whole backlog flushes through the dedup sink
+    n_events = 512
+    plane = EventPlane(EventConfig(cooldown_frames=0, evidence_frames=0,
+                                   spool_cap=n_events + 8), DedupSink())
+    em = plane.new_emitter("bench")
+    plane.partition("v00")
+    for i in range(n_events):
+        em.emit("v00/outer", HAZARD, i, emit_s=float(i), score=0.9)
+    assert plane.depth() == n_events
+    t0 = time.perf_counter()
+    plane.reconnect("v00")
+    left = plane.flush()
+    wall = time.perf_counter() - t0
+    eps = n_events / wall
+    print(f"spool drain: {n_events} events in {wall * 1000:.1f} ms "
+          f"({eps:10.0f} events/s)   accepted "
+          f"{plane.sink.accepted_count}   left {left}")
+    rows.append(("fleet_event_drain_eps", eps, "events_per_s"))
+    assert left == 0 and plane.sink.accepted_count == n_events, (
+        f"spool drain lost events: {left} left, "
+        f"{plane.sink.accepted_count}/{n_events} accepted")
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     batching_scaling(rows)
@@ -306,6 +379,7 @@ def main(rows=None):
     ingest_path(rows)
     parallel_fleet(rows)
     obs_overhead(rows)
+    event_plane(rows)
     return rows
 
 

@@ -44,12 +44,21 @@ GATE_RULES = [
     ("fleet_parallel_parity", "equal", 0.0, 0.0),
     ("fleet_ingest_parity", "equal", 0.0, 0.0),
     ("fleet_obs_parity", "equal", 0.0, 0.0),
+    ("fleet_event_parity", "equal", 0.0, 0.0),
     ("scenario_soak_deterministic", "equal", 0.0, 0.0),
     ("scenario_soak_violations", "equal", 0.0, 0.0),
     # obs-overhead wall ratio: generous tolerance (tiny CPU workload,
     # registry updates are a visible tick fraction) — catches the obs
     # plane ever turning into a per-tick multiplier
     ("fleet_obs_overhead", "lower", 0.50, 0.0),
+    # event-plane wall ratio: same shape as the obs gate — envelope
+    # construction + cooldown checks + the per-tick pump are host-side
+    # dict work; the gate catches the plane becoming a tick multiplier
+    ("fleet_event_overhead", "lower", 0.50, 0.0),
+    # spool-drain throughput (partition -> reconnect -> flush): pure
+    # host-side dict/deque work, machine-class dependent — catastrophic
+    # slowdowns only
+    ("fleet_event_drain_eps", "higher", 0.75, 0.0),
     # self-normalising ratios: the core perf-trajectory signals
     ("fleet_parallel_speedup", "higher", 0.30, 0.0),
     ("fleet_batching_speedup", "higher", 0.35, 0.0),

@@ -390,6 +390,10 @@ class EngineCore:
         self._m_dispatches = self._m_units = self._m_unit_ms = None
         if metrics is not None or tracer is not None:
             self.attach_obs(metrics=metrics, tracer=tracer)
+        # event-plane seam (``repro.events``): the gateway installs an
+        # EventEmitter when an EventPlane is attached; None costs one
+        # attribute read per hook site, exactly like the obs seams
+        self.emitter = None
 
     # ------------------------------------------------------------------
     # observability seams

@@ -1,0 +1,20 @@
+"""Event/alert plane: engine outputs as a reliable, duplicate-free stream.
+
+See ``plane.py`` for the wiring overview; README "Event plane" for the
+envelope schema, spool lifecycle, and idempotency contract.
+"""
+from repro.events.envelope import (DEADLINE_MISS, DISTRACTION, EVENT_TYPES,
+                                   HAZARD, TOKEN_DONE, Event, event_id)
+from repro.events.evidence import EvidenceRing, clip_digest
+from repro.events.plane import EventConfig, EventEmitter, EventPlane
+from repro.events.sink import DedupSink, FlakySink, SinkUnavailable
+from repro.events.spool import EventSpool
+
+__all__ = [
+    "Event", "event_id", "EVENT_TYPES",
+    "HAZARD", "DISTRACTION", "DEADLINE_MISS", "TOKEN_DONE",
+    "EvidenceRing", "clip_digest",
+    "EventConfig", "EventEmitter", "EventPlane",
+    "DedupSink", "FlakySink", "SinkUnavailable",
+    "EventSpool",
+]

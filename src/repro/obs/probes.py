@@ -78,3 +78,24 @@ def register_runtime_gauges(metrics: MetricsRegistry,
             "fleet_token_backlog",
             "token requests queued or decoding across the token fleet",
         ).set_function(gw.token_backlog)
+        metrics.gauge(
+            "fleet_token_replicas_live",
+            "token replicas currently in service (not failed)",
+        ).set_function(lambda: len(gw.live_token_replicas()))
+    if gw.events is not None:
+        ev = gw.events
+        metrics.gauge(
+            "fleet_event_spool_depth",
+            "undelivered events buffered across every spool (partition "
+            "backlog + unacked inflight)",
+        ).set_function(ev.depth)
+        metrics.gauge(
+            "fleet_event_duplicates",
+            "replayed deliveries the idempotent sink rejected "
+            "(at-least-once redundancy, never double-processing)",
+        ).set_function(lambda: ev.sink.duplicates)
+        metrics.gauge(
+            "fleet_event_overflow_dropped",
+            "events dropped by bounded spools at capacity (each drop "
+            "also warns loudly)",
+        ).set_function(ev.overflow_dropped)

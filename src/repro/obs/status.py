@@ -40,6 +40,7 @@ class ReplicaStatus:
     tick_cost_ms: float
     lane_binds: List[Optional[str]] = field(default_factory=list)
     gate_thresh: Optional[Tuple[float, float, float]] = None  # min/mean/max
+    spool_depth: int = 0             # undelivered events (event plane)
 
     @property
     def occupancy(self) -> float:
@@ -58,6 +59,13 @@ class FleetStatus:
     token_done: int = 0
     ledger_records: int = 0
     ledger_energy_j: float = 0.0
+    # event/alert plane counters (all zero when no plane is attached)
+    events_emitted: int = 0
+    events_accepted: int = 0
+    events_duplicates: int = 0       # replays the idempotent sink rejected
+    events_suppressed: int = 0       # cooldown-window suppressions
+    events_spool_depth: int = 0      # fleet-wide undelivered backlog
+    events_overflow: int = 0         # loud bounded-spool drops
     vehicle_energy: Dict[str, Tuple[float, float]] = field(
         default_factory=dict)    # name -> (energy_j, battery_j)
 
@@ -70,6 +78,14 @@ class FleetStatus:
         (plus its token replicas, if any).  ``vehicle_energy`` maps
         vehicle name -> (energy_spent_j, battery_budget_j)."""
         replicas = []
+        ev = getattr(gw, "events", None)
+
+        def _spool_depth(name: str) -> int:
+            if ev is None:
+                return 0
+            return sum(em.depth() for em in ev.emitters
+                       if em.owner == name)
+
         for r in gw.replicas:
             gates = [g for g in r.gates.values() if g is not None]
             thresh = None
@@ -87,11 +103,12 @@ class FleetStatus:
                 tick_cost_ms=r.tick_cost_ms.get(0.0),
                 lane_binds=[st.key if st is not None else None
                             for st in r.lanes],
-                gate_thresh=thresh))
+                gate_thresh=thresh,
+                spool_depth=_spool_depth(r.name)))
         for e in gw.token_replicas:
             in_flight = sum(req is not None for req in e.active)
             replicas.append(ReplicaStatus(
-                name=e.name, kind="token", dead=False,
+                name=e.name, kind="token", dead=e.name in gw.dead,
                 slots=e.slots, bound=in_flight,
                 sessions=in_flight + len(e.queue),
                 waiting=len(e.queue),
@@ -100,7 +117,19 @@ class FleetStatus:
                 unit_cost_ms=e.unit_cost_ms.get(0.0),
                 tick_cost_ms=e.tick_cost_ms.get(0.0),
                 lane_binds=[req.rid if req is not None else None
-                            for req in e.active]))
+                            for req in e.active],
+                spool_depth=_spool_depth(e.name)))
+        evt_counts = dict(events_emitted=0, events_accepted=0,
+                          events_duplicates=0, events_suppressed=0,
+                          events_spool_depth=0, events_overflow=0)
+        if ev is not None:
+            evt_counts = dict(
+                events_emitted=ev.emitted,
+                events_accepted=ev.sink.accepted_count,
+                events_duplicates=ev.sink.duplicates,
+                events_suppressed=ev.suppressed,
+                events_spool_depth=ev.depth(),
+                events_overflow=ev.overflow_dropped())
         return cls(
             replicas=replicas,
             sessions=len(gw.sessions),
@@ -111,7 +140,8 @@ class FleetStatus:
             token_done=len(gw.token_done),
             ledger_records=len(gw.ledger),
             ledger_energy_j=gw.ledger.totals["energy_j"],
-            vehicle_energy=dict(vehicle_energy or {}))
+            vehicle_energy=dict(vehicle_energy or {}),
+            **evt_counts)
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:
@@ -122,6 +152,14 @@ class FleetStatus:
             "jit_cache": self.jit_cache, "token_done": self.token_done,
             "ledger_records": self.ledger_records,
             "ledger_energy_j": self.ledger_energy_j,
+            "events": {
+                "emitted": self.events_emitted,
+                "accepted": self.events_accepted,
+                "duplicates": self.events_duplicates,
+                "suppressed": self.events_suppressed,
+                "spool_depth": self.events_spool_depth,
+                "overflow": self.events_overflow,
+            },
             "replicas": [{
                 "name": r.name, "kind": r.kind, "dead": r.dead,
                 "slots": r.slots, "bound": r.bound,
@@ -132,6 +170,7 @@ class FleetStatus:
                 "tick_cost_ms": r.tick_cost_ms,
                 "lane_binds": r.lane_binds,
                 "gate_thresh": r.gate_thresh,
+                "spool_depth": r.spool_depth,
             } for r in self.replicas],
             "vehicle_energy": {k: list(v)
                                for k, v in self.vehicle_energy.items()},
@@ -161,6 +200,14 @@ class FleetStatus:
             f"ledger={self.ledger_records} recs "
             f"({self.ledger_energy_j:.1f} J)"
             + (f"  token_done={self.token_done}" if self.token_done else ""))
+        if self.events_emitted or self.events_spool_depth:
+            lines.append(
+                f"events: {self.events_emitted} emitted  "
+                f"{self.events_accepted} accepted  "
+                f"{self.events_duplicates} dup-rejected  "
+                f"{self.events_suppressed} suppressed  "
+                f"spool={self.events_spool_depth}  "
+                f"overflow={self.events_overflow}")
         if self.vehicle_energy:
             worst = sorted(self.vehicle_energy.items(),
                            key=lambda kv: kv[1][1] - kv[1][0])[:4]

@@ -462,6 +462,17 @@ class ServeEngine(EngineCore):
         req.finish_s = self.clock.now_s()
         self.finished.append(req)
         self.pool.free(req)
+        if self.emitter is not None:
+            # token-side completion event; a deadline-truncated request
+            # additionally raises a deadline-miss alert (the ESD budget
+            # cut it short, same taxonomy as a trimmed vision backlog)
+            from repro.events.envelope import DEADLINE_MISS, TOKEN_DONE
+            self.emitter.emit(req.rid, TOKEN_DONE, len(req.generated),
+                              emit_s=req.finish_s, trunc=req.truncated)
+            if req.truncated:
+                self.emitter.emit(req.rid, DEADLINE_MISS,
+                                  len(req.generated), emit_s=req.finish_s,
+                                  n=req.max_new_tokens - len(req.generated))
         rec = SegmentRecord(
             video_id=req.rid,
             stream=OUTER if req.priority == 0 else INNER,
@@ -484,6 +495,49 @@ class ServeEngine(EngineCore):
             self.metrics.counter(
                 "serve_retired_total", "requests retired", eng,
             ).labels(engine=self.name).inc()
+
+    # ------------------------------------------------------------------
+    # failover (gateway-driven)
+    # ------------------------------------------------------------------
+    def evacuate(self) -> List[tuple]:
+        """Strip every in-flight and queued request off this replica for
+        re-placement elsewhere (the replica is being declared dead).
+
+        Active requests lose their prefill — the KV lives in this
+        replica's pool and cannot travel — so they are rewound to
+        pristine submit state (generated cleared, lane unbound) and their
+        paged blocks returned so the pool ledger closes at zero.  Returns
+        ``[(request, age_s)]`` with ``age_s`` the time already spent
+        waiting, actives in slot order then queued in pop order, so the
+        adopter can preserve accumulated queue seniority.
+        """
+        now = self.clock.now_s()
+        orphans: List[tuple] = []
+        for slot, req in enumerate(list(self.active)):
+            if req is None:
+                continue
+            if self.paged:
+                self.block_pool.free(self._slot_blocks[slot], req.rid)
+                self._slot_blocks[slot] = []
+                self._tbl[slot, :] = -1
+                self._tbl_len[slot] = 1
+            self.pool.free(req)
+            req.generated = []
+            req.prefill_done_s = 0.0
+            req.lane = -1
+            req.bound_seq = -1
+            orphans.append((req, now - req.arrival_s))
+        while self.queue:
+            req = self.queue.pop()
+            orphans.append((req, now - req.arrival_s))
+        return orphans
+
+    def adopt_request(self, req: Request, age_s: float = 0.0) -> None:
+        """Accept an evacuated request from a failed sibling: a normal
+        ``submit`` with the arrival stamp rebased so the wait already
+        served on the dead replica still counts against TTFT/turnaround."""
+        self.submit(req)
+        req.arrival_s = self.clock.now_s() - age_s
 
     def step(self) -> int:
         """One engine tick: admit into free slots, then decode one token

@@ -23,7 +23,16 @@ the paper's transient-fleet claim rests on:
   no recompile   after the warmup tick, the model jits, kernel jits, and
                  the shared serving jits (dense AND paged token engines —
                  block-table shapes included) acquire zero new cache
-                 entries — churn must not compile.
+                 entries — churn must not compile;
+  kv blocks      (token replicas) every replica's BlockPool usage equals
+                 the blocks its slot tables hold — a failed replica's
+                 evacuated requests must return every block, and the run
+                 must end with zero blocks in use;
+  event idempot. (event plane) the at-least-once spool + idempotent sink
+                 contract: the sink never accepts the same event id
+                 twice, accepts ⊆ emits, spool depth respects its cap,
+                 and after the final flush the accepted count equals
+                 emitted minus overflow drops with zero residual depth.
 """
 from __future__ import annotations
 
@@ -68,6 +77,49 @@ class InvariantSuite:
         self._check_capacity(tick)
         self._check_placement(tick)
         self._check_outer_priority(tick)
+        if self.gw.token_replicas:
+            self._check_kv_blocks(tick)
+        if self.gw.events is not None:
+            self._check_events(tick)
+
+    def _check_kv_blocks(self, tick: int) -> None:
+        """BlockPool conservation per token replica: the pool's used
+        count must equal the blocks referenced by live slot tables.  A
+        mid-request failure that evacuated without freeing would leak
+        here immediately."""
+        for e in self.gw.token_replicas:
+            if not getattr(e, "paged", False):
+                continue
+            held = sum(len(b) for b in e._slot_blocks)
+            used = e.block_pool.used_blocks
+            if held != used:
+                self._flag(tick, "kv-blocks",
+                           f"{e.name}: slot tables hold {held} blocks "
+                           f"but the pool counts {used} in use")
+            if e.name in self.gw.dead and used:
+                self._flag(tick, "kv-blocks",
+                           f"dead token replica {e.name} still holds "
+                           f"{used} blocks — evacuation leaked")
+
+    def _check_events(self, tick: int) -> None:
+        """Cheap per-tick event-plane checks: structural dedup at the
+        sink, accepts bounded by emits, spool caps respected."""
+        p = self.gw.events
+        acc = p.sink.accepted_count
+        if len(p.sink.order) != len(p.sink.accepted):
+            self._flag(tick, "event-idempotency",
+                       "sink accepted the same event id twice")
+        if acc > p.emitted:
+            self._flag(tick, "event-idempotency",
+                       f"sink accepted {acc} events but only "
+                       f"{p.emitted} were emitted")
+        cap = p.cfg.spool_cap
+        for em in p.emitters:
+            for key, st in em.streams.items():
+                if st.spool.depth > cap:
+                    self._flag(tick, "event-spool",
+                               f"{em.owner}:{key} spool depth "
+                               f"{st.spool.depth} exceeds cap {cap}")
 
     def _check_capacity(self, tick: int) -> None:
         for r in self.gw.replicas:
@@ -164,11 +216,43 @@ class InvariantSuite:
                        f"ledger offered {offered} != frames pushed "
                        f"{pushes} — a push vanished unaccounted")
         self._check_metrics(tick, ledger)
+        if self.gw.token_replicas:
+            for e in self.gw.token_replicas:
+                if getattr(e, "paged", False) and e.block_pool.used_blocks:
+                    self._flag(tick, "kv-blocks",
+                               f"{e.name} ends the run with "
+                               f"{e.block_pool.used_blocks} KV blocks "
+                               f"still allocated")
+        if self.gw.events is not None:
+            self._finalize_events(tick)
         cache_now = jit_cache_sizes()
         if cache_now != cache_after_warmup:
             self._flag(tick, "recompile",
                        f"jit caches grew after warmup: "
                        f"{cache_after_warmup} -> {cache_now}")
+
+    def _finalize_events(self, tick: int) -> None:
+        """At-least-once conservation after the end-of-run flush: every
+        emitted event was accepted exactly once (minus loud overflow
+        drops), nothing the plane never emitted was accepted, and no
+        spool still holds events."""
+        p = self.gw.events
+        depth = p.depth()
+        if depth:
+            self._flag(tick, "event-conservation",
+                       f"{depth} events still spooled after final flush")
+        acc = p.sink.accepted_count
+        want = p.emitted - p.overflow_dropped()
+        if acc != want:
+            self._flag(tick, "event-conservation",
+                       f"sink accepted {acc} events, expected "
+                       f"{want} (= {p.emitted} emitted - "
+                       f"{p.overflow_dropped()} overflow-dropped)")
+        ghost = set(p.sink.accepted) - p.emitted_ids
+        if ghost:
+            self._flag(tick, "event-conservation",
+                       f"sink accepted {len(ghost)} event id(s) the "
+                       f"plane never emitted: {sorted(ghost)[:4]}")
 
     def _check_metrics(self, tick: int, ledger: Ledger) -> None:
         """Metrics conservation: the ledger's streaming sketches must

@@ -236,11 +236,24 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
             use_gate=scenario.use_gate, use_pallas=scenario.use_pallas,
             quantum=scenario.quantum, max_pending=scenario.max_pending,
             clock=clock, rng=jax.random.key(i)))
+    # event/alert plane: constructed only when the scenario declares one
+    # — an absent plane leaves every hook dormant and the trace digest
+    # byte-identical to pre-event-plane builds
+    events = None
+    if scenario.events is not None:
+        from repro.events import DedupSink, EventConfig, EventPlane
+        es = scenario.events
+        events = EventPlane(
+            EventConfig(cooldown_frames=es.cooldown_frames,
+                        spool_cap=es.spool_cap,
+                        evidence_frames=es.evidence_frames,
+                        backoff_cap=es.backoff_cap),
+            DedupSink(), metrics=metrics)
     gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
                       overcommit=scenario.overcommit,
                       parallel=parallel, fleet_mode=fleet_mode,
                       token_replicas=build_token_replicas(scenario),
-                      metrics=metrics, tracer=tracer)
+                      metrics=metrics, tracer=tracer, events=events)
     # install the heterogeneous HW priors (the gateway defaults to a
     # cores-only prior; scenarios speak full HardwareInfo — the paper's
     # HW_INFO handshake, refined by measurement as the run progresses)
@@ -279,6 +292,9 @@ class ScenarioRunner:
         self.energy = EnergyModel()
         self.rng = np.random.default_rng(scenario.seed)
         self.vehicles: Dict[str, _Vehicle] = {}
+        # vehicles whose uplink is scripted down: no frames, no churn
+        # draws, and the event plane buffers their alerts until reconnect
+        self._partitioned: set = set()
         self._counter = 0
         self._pushes = 0
         self._joined = 0
@@ -355,6 +371,17 @@ class ScenarioRunner:
             if ev.tick != tick:
                 continue
             if ev.action == "fail_replica":
+                if ev.arg in self.gw._token_by_name:
+                    # token replica: in-flight requests evacuate (KV
+                    # blocks freed) and requeue onto the survivors
+                    moved = self.gw.fail_replica(ev.arg,
+                                                 now_ms=float(tick))
+                    self.trace.emit(tick, "fail", replica=ev.arg,
+                                    moved=len(moved))
+                    for rid, src, dst in moved:
+                        self.trace.emit(tick, "req_rebind", rid=rid,
+                                        src=src, dst=dst)
+                    continue
                 eng = self.gw._by_name[ev.arg]
                 before = {k: _stream_thresh(eng, k)
                           for k in list(eng.streams)}
@@ -370,11 +397,25 @@ class ScenarioRunner:
             elif ev.action == "restore_replica":
                 self.gw.restore_replica(ev.arg, now_ms=float(tick))
                 self.trace.emit(tick, "restore", replica=ev.arg)
+            elif ev.action == "partition_vehicle":
+                if self.gw.events is None:
+                    raise ValueError(
+                        "partition_vehicle needs Scenario.events")
+                rewound = self.gw.events.partition(ev.arg)
+                self._partitioned.add(ev.arg)
+                self.trace.emit(tick, "partition", veh=ev.arg,
+                                rewound=rewound)
+            elif ev.action == "reconnect_vehicle":
+                self.gw.events.reconnect(ev.arg)
+                self._partitioned.discard(ev.arg)
+                self.trace.emit(tick, "reconnect", veh=ev.arg)
             else:
                 raise ValueError(f"unknown scripted action {ev.action!r}")
 
     def _push_all(self, tick: int) -> None:
         for name in list(self.vehicles):
+            if name in self._partitioned:
+                continue              # uplink down: frames never arrive
             veh = self.vehicles[name]
             flops = bytes_moved = 0.0
             for outer, inner in veh.next_frames():
@@ -388,6 +429,8 @@ class ScenarioRunner:
 
     def _churn(self, tick: int) -> None:
         for name in list(self.vehicles):
+            if name in self._partitioned:
+                continue    # an offline vehicle cannot signal departure
             veh = self.vehicles[name]
             life = veh.profile.lifetime_ticks
             if life and tick - veh.joined_tick >= life:
@@ -475,6 +518,15 @@ class ScenarioRunner:
                 self.trace.emit(tick, "tok", sub=self._token_submitted,
                                 done=len(self.gw.token_done),
                                 backlog=self.gw.token_backlog())
+            if self.gw.events is not None:
+                # emitted only when the scenario declares a plane, so
+                # every pre-existing scenario digest is untouched
+                p = self.gw.events
+                self.trace.emit(
+                    tick, "evt", emitted=p.emitted,
+                    acc=p.sink.accepted_count, dup=p.sink.duplicates,
+                    sup=p.suppressed, depth=p.depth(),
+                    ovf=p.overflow_dropped())
             if tick == s.warmup_ticks:
                 self._cache_after_warmup = jit_cache_sizes()
             if on_tick is not None:
@@ -483,6 +535,16 @@ class ScenarioRunner:
         self.gw.drain(max_ticks=4 * s.ticks + 64)
         if self.gw.token_replicas:
             self._harvest_requests(s.ticks)
+        if self.gw.events is not None:
+            # end of run: every still-partitioned vehicle reconnects and
+            # the plane drains to empty — the finalize invariants then
+            # check full at-least-once conservation (zero residual depth,
+            # zero duplicate accepts)
+            for name in sorted(self._partitioned):
+                self.gw.events.reconnect(name)
+                self.trace.emit(s.ticks, "reconnect", veh=name)
+            self._partitioned.clear()
+            self.gw.events.flush()
         for name in list(self.vehicles):
             self._leave(s.ticks, name, "end")
         for spec in s.replicas:
@@ -519,6 +581,14 @@ class ScenarioRunner:
                 tok_done=len(done),
                 tok_generated=sum(len(r.generated) for r in done),
                 tok_truncated=sum(r.truncated for r in done))
+        if self.gw.events is not None:
+            p = self.gw.events
+            summary.update(
+                evt_emitted=p.emitted, evt_suppressed=p.suppressed,
+                evt_accepted=p.sink.accepted_count,
+                evt_duplicates=p.sink.duplicates,
+                evt_overflow=p.overflow_dropped(),
+                evt_spool_depth=p.depth())
         return ScenarioResult(scenario=s, trace=self.trace,
                               ledger=self.gw.ledger,
                               violations=self.inv.violations,

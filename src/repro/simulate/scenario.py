@@ -121,9 +121,24 @@ class TokenWorkload:
 
 
 @dataclass(frozen=True)
+class EventPlaneSpec:
+    """Declarative event/alert plane config: turning this on attaches a
+    :class:`repro.events.EventPlane` (+ idempotent DedupSink receiver) to
+    the gateway and adds ``evt`` trace events + event invariants.  Off
+    (``Scenario.events = None``) the plane does not exist and scenario
+    digests are byte-identical to pre-event-plane builds."""
+    cooldown_frames: int = 8
+    spool_cap: int = 64
+    evidence_frames: int = 4
+    backoff_cap: int = 16
+
+
+@dataclass(frozen=True)
 class ScriptedEvent:
+    # action: fail_replica | restore_replica (vision OR token replica)
+    #         | partition_vehicle | reconnect_vehicle (uplink, needs events)
     tick: int
-    action: str                         # fail_replica | restore_replica
+    action: str
     arg: str = ""
 
 
@@ -155,6 +170,9 @@ class Scenario:
     # Poisson request arrivals through FleetGateway.submit_request
     token_replicas: Tuple[TokenReplicaSpec, ...] = ()
     token_workload: Optional[TokenWorkload] = None
+    # event/alert plane: None leaves the plane off (digests untouched);
+    # a spec attaches EventPlane+DedupSink and enables partition scripting
+    events: Optional[EventPlaneSpec] = None
     description: str = ""
 
 
@@ -366,6 +384,74 @@ def mixed_serving() -> Scenario:
                     "gateway, ledger, and deadline policy — token "
                     "turnaround/TTFT are seed-deterministic on virtual "
                     "clocks.")
+
+
+@_scenario
+def partitioned_reconnect() -> Scenario:
+    return Scenario(
+        name="partitioned_reconnect", seed=2626, ticks=180,
+        # slow replicas + 2x ingest keep the ESD trim path hot: steady
+        # deadline-miss emission guarantees unacked sends exist at the
+        # partition tick, so the at-least-once rewind/replay is exercised
+        # (the sink must then reject the replays — zero duplicate accepts)
+        replicas=(
+            ReplicaSpec("r0", hw=HardwareInfo(cpu_ghz=0.5, cores=4)),
+            ReplicaSpec("r1", hw=HardwareInfo(cpu_ghz=0.5, cores=4)),
+        ),
+        profiles=(VehicleProfile(frames_per_tick=2, duplicate_prob=0.1,
+                                 lifetime_ticks=10 ** 9),),
+        initial_vehicles=4, join_rate=0.0, leave_rate=0.0,
+        max_vehicles=4, deadline_ms=400.0, esd=2.0,
+        events=EventPlaneSpec(cooldown_frames=4, spool_cap=48,
+                              evidence_frames=4),
+        scripted=(
+            # two vehicles lose their uplink: spools buffer offline and
+            # anything sent-but-unacked rewinds for re-delivery
+            ScriptedEvent(40, "partition_vehicle", "v000"),
+            ScriptedEvent(44, "partition_vehicle", "v001"),
+            # a replica dies INSIDE the partition window: buffered spools
+            # must travel with the stream rebinds (detach/adopt)
+            ScriptedEvent(70, "fail_replica", "r1"),
+            ScriptedEvent(100, "restore_replica", "r1"),
+            # reconnect: drain at-least-once; the DedupSink receiver
+            # absorbs the replayed unacked sends with zero duplicates
+            ScriptedEvent(120, "reconnect_vehicle", "v000"),
+            ScriptedEvent(124, "reconnect_vehicle", "v001"),
+        ),
+        description="Event-plane partition drill: vehicles buffer alerts "
+                    "offline through a replica failure, then reconnect "
+                    "and drain — at-least-once delivery, idempotent "
+                    "receiver, zero duplicate accepts (invariant).")
+
+
+@_scenario
+def token_failover() -> Scenario:
+    return Scenario(
+        name="token_failover", seed=2828, ticks=100,
+        replicas=_uniform_replicas(2),
+        profiles=(VehicleProfile(duplicate_prob=0.4),),
+        initial_vehicles=2, join_rate=0.1, leave_rate=0.02,
+        max_vehicles=6, deadline_ms=400.0, esd=2.0,
+        token_replicas=(
+            TokenReplicaSpec("lm0", slots=2),
+            TokenReplicaSpec("lm1", slots=2,
+                             hw=HardwareInfo(cpu_ghz=1.0, cores=4)),
+        ),
+        token_workload=TokenWorkload(request_rate=0.4, deadline_ms=24.0,
+                                     max_requests=28),
+        events=EventPlaneSpec(cooldown_frames=4),
+        scripted=(
+            # lm0 — the strong replica carrying the traffic — dies with
+            # requests in flight: they evacuate (KV blocks freed on the
+            # corpse) and requeue onto lm1; new submissions must route
+            # around the dead replica
+            ScriptedEvent(30, "fail_replica", "lm0"),
+            ScriptedEvent(65, "restore_replica", "lm0"),
+        ),
+        description="Token-replica failover: mid-request failure "
+                    "evacuates + requeues decodes onto the survivor "
+                    "(blocks conserved), restore re-derives worker state "
+                    "— placement resumes on both replicas.")
 
 
 @_scenario

@@ -38,6 +38,7 @@ from repro.core.telemetry import Ledger, SegmentRecord
 from repro.streams.vision_engine import INNER, OUTER, VisionServeEngine
 
 if TYPE_CHECKING:                                     # pragma: no cover
+    from repro.events.plane import EventPlane
     from repro.serving.engine import Request, ServeEngine
 
 
@@ -123,7 +124,8 @@ class FleetGateway:
                  ledger: Optional[Ledger] = None, parallel: bool = False,
                  fleet_mode: Optional[str] = None,
                  token_replicas: Sequence["ServeEngine"] = (),
-                 metrics=None, tracer=None) -> None:
+                 metrics=None, tracer=None,
+                 events: Optional["EventPlane"] = None) -> None:
         if not replicas:
             raise ValueError("need at least one engine replica")
         if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
@@ -196,6 +198,19 @@ class FleetGateway:
                        for i, e in enumerate(self.token_replicas)]
             self.token_sched = _FleetScheduler(tstates[0], tstates[1:],
                                                outer_priority=True)
+        # requests orphaned by a token-replica failure with no survivors
+        # to adopt them: rejected loudly, parked here for the caller
+        self.token_stranded: List["Request"] = []
+
+        # event/alert plane (``repro.events``): every replica — vision
+        # AND token — gets an emitter; the gateway pumps delivery once
+        # per tick (identical in serial and mesh-parallel modes)
+        self.events = events
+        if events is not None:
+            for r in self.replicas:
+                r.emitter = events.new_emitter(r.name)
+            for e in self.token_replicas:
+                e.emitter = events.new_emitter(e.name)
 
         if metrics is not None:
             from repro.obs.probes import register_runtime_gauges
@@ -299,7 +314,15 @@ class FleetGateway:
         mid-segment).  Streams are *detached*, not closed: counters, the
         pending backlog, and the saved gate state (including the adapted
         threshold) travel to the adopting replica.  Returns the rebind
-        list ``[(stream_key, from_replica, to_replica), ...]``."""
+        list ``[(stream_key, from_replica, to_replica), ...]``.
+
+        A *token* replica name takes the token path instead: its worker
+        is marked down in the token scheduler, every in-flight and queued
+        request is evacuated (KV blocks freed on the dead replica) and
+        re-placed onto surviving token replicas — or parked in
+        ``token_stranded`` with a loud warning when none survive."""
+        if name in self._token_by_name:
+            return self._fail_token_replica(name, now_ms)
         if name not in self._by_name:
             raise KeyError(name)
         if name in self.dead:
@@ -329,14 +352,70 @@ class FleetGateway:
         w = self.sched.by_name(name)
         w.busy_until_ms = float("inf")
         w.queue_len = 10 ** 9
+        if self.events is not None and dead_engine.emitter is not None:
+            # live streams' spools travelled with detach/adopt above;
+            # re-home whatever is left (closed streams still draining)
+            self.events.stranded(dead_engine.emitter)
+        self.rebinds.extend(moved)
+        return moved
+
+    def _fail_token_replica(self, name: str, now_ms: float
+                            ) -> List[Tuple[str, str, str]]:
+        """Token-side failure: mark the worker down, evacuate its
+        in-flight + queued requests (their KV blocks return to the dead
+        replica's pool so the block ledger closes at zero), and re-place
+        them on the survivors.  Unlike the vision fleet there is no
+        last-replica guard — with no survivors the orphans are parked in
+        ``token_stranded`` and a warning is raised (reject loudly)."""
+        if name in self.dead:
+            raise ValueError(f"replica {name!r} is already down")
+        self.dead.add(name)
+        self.token_sched.down.add(name)
+        w = self.token_sched.by_name(name)
+        w.busy_until_ms = float("inf")
+        w.queue_len = 10 ** 9
+        dead_engine = self._token_by_name[name]
+        orphans = dead_engine.evacuate()
+        if self.events is not None and dead_engine.emitter is not None:
+            # spooled-but-undelivered completion events must survive the
+            # replica: re-home them so the pump keeps draining them
+            self.events.stranded(dead_engine.emitter)
+        moved: List[Tuple[str, str, str]] = []
+        live = self.live_token_replicas()
+        if not live:
+            if orphans:
+                warnings.warn(
+                    f"token replica {name!r} failed with no surviving "
+                    f"token replicas: {len(orphans)} request(s) stranded "
+                    f"(see FleetGateway.token_stranded)", stacklevel=3)
+            for req, _age in orphans:
+                self._token_assign.pop(req.rid, None)
+                self.token_stranded.append(req)
+            return moved
+        for req, age_s in orphans:
+            old = self._token_assign.pop(req.rid)
+            self._sync_token_load(now_ms)
+            target = self.token_sched._pick_worker(now_ms).name
+            self._token_by_name[target].adopt_request(req, age_s)
+            assignment = Assignment(old.segment, target)
+            self._token_assign[req.rid] = assignment
+            self.token_sched.commit(assignment, busy_until_ms=now_ms)
+            moved.append((req.rid, name, target))
         self.rebinds.extend(moved)
         return moved
 
     def restore_replica(self, name: str, now_ms: float = 0.0) -> None:
         """Bring a failed replica back into service (empty lanes; it fills
-        again through new joins and scheduler placement)."""
+        again through new joins and scheduler placement).  Works for both
+        fleets: a token replica's worker state is re-derived from its
+        (now empty) occupancy instead of keeping the poisoned reading."""
         if name not in self.dead:
             raise ValueError(f"replica {name!r} is not down")
+        if name in self._token_by_name:
+            self.dead.discard(name)
+            self.token_sched.down.discard(name)
+            self._sync_token_load(now_ms)   # re-derive busy/queue state
+            return
         self.dead.discard(name)
         self.sched.down.discard(name)
         self._sync_load(now_ms)       # re-derives the worker's free state
@@ -349,13 +428,23 @@ class FleetGateway:
     # ------------------------------------------------------------------
     # token workloads (requests onto ServeEngine replicas)
     # ------------------------------------------------------------------
+    def live_token_replicas(self) -> List["ServeEngine"]:
+        return [e for e in self.token_replicas if e.name not in self.dead]
+
     def _sync_token_load(self, now_ms: float) -> None:
         """Refresh the token scheduler's busy-ness from engine occupancy
         (the token analogue of :meth:`_sync_load`): a replica with a free
         decode slot reads as free; a full one keeps its in-flight count
-        as queue_len for the shortest-queue tie-break."""
+        as queue_len for the shortest-queue tie-break.  Dead replicas are
+        never derived from occupancy (their lanes read empty after
+        evacuation, which would make them look attractive) — they keep a
+        poisoned reading as defence in depth behind the ``down`` filter."""
         for e in self.token_replicas:
             w = self.token_sched.by_name(e.name)
+            if e.name in self.dead:
+                w.busy_until_ms = float("inf")
+                w.queue_len = 10 ** 9
+                continue
             in_flight = (sum(r is not None for r in e.active)
                          + len(e.queue))
             has_free = in_flight < e.slots
@@ -372,8 +461,16 @@ class FleetGateway:
                                "FleetGateway(..., token_replicas=[...])")
         if req.rid in self._token_assign:
             raise KeyError(f"request {req.rid!r} already submitted")
-        if len(self.token_replicas) == 1:
-            target = self.token_replicas[0].name
+        # the single-replica fast path must count LIVE replicas: with one
+        # token replica down, the old ``len(self.token_replicas) == 1``
+        # check happily routed new requests onto the corpse
+        live = self.live_token_replicas()
+        if not live:
+            raise RuntimeError(
+                "all token replicas are down — cannot place request "
+                f"{req.rid!r} (restore a replica and resubmit)")
+        if len(live) == 1:
+            target = live[0].name
         else:
             self._sync_token_load(now_ms)
             target = self.token_sched._pick_worker(now_ms).name
@@ -393,7 +490,7 @@ class FleetGateway:
         mesh-parallel modes — the vision fused dispatch does not cover
         token decode, so token engines step on their own jits."""
         done = 0
-        for e in self.token_replicas:
+        for e in self.live_token_replicas():
             t0 = e.clock.now_s()
             n = e.step()
             dt_ms = (e.clock.now_s() - t0) * 1000.0
@@ -431,17 +528,23 @@ class FleetGateway:
         under virtual clocks.  Token replicas (if any) are stepped in both
         modes; the return value counts frames + tokens served."""
         if self._fleet is not None:
-            return self._fleet.tick(self)
-        done = 0
-        for r in self.live_replicas():
-            t0 = r.clock.now_s()
-            n = r.step()
-            dt_ms = (r.clock.now_s() - t0) * 1000.0
-            if n:
-                self.sched.by_name(r.name).observe(n, dt_ms)
-            done += n
-        if self.token_replicas:
-            done += self._tick_tokens()
+            done = self._fleet.tick(self)
+        else:
+            done = 0
+            for r in self.live_replicas():
+                t0 = r.clock.now_s()
+                n = r.step()
+                dt_ms = (r.clock.now_s() - t0) * 1000.0
+                if n:
+                    self.sched.by_name(r.name).observe(n, dt_ms)
+                done += n
+            if self.token_replicas:
+                done += self._tick_tokens()
+        if self.events is not None:
+            # one delivery round per gateway tick, after all engine work
+            # — shared by both modes so attaching the plane cannot fork
+            # serial vs mesh-parallel traces
+            self.events.pump()
         return done
 
     def drain(self, max_ticks: int = 100_000) -> int:

@@ -54,6 +54,7 @@ import numpy as np
 from repro.config import EDAConfig
 from repro.configs.eda_vision import detector_config, pose_config
 from repro.core.clock import FRAME, Clock
+from repro.events.envelope import DEADLINE_MISS, DISTRACTION, HAZARD
 from repro.core.engine_core import INNER, OUTER, EngineCore, LanePool
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import vision as V
@@ -102,10 +103,19 @@ class StreamState:
     last_s: float = 0.0
     processing_ms: float = 0.0
     gate_state: Optional[dict] = None  # travels with the stream, not the lane
+    event_state: Optional[dict] = None  # spool/cooldown/evidence, same travel
 
     @property
     def bound(self) -> bool:
         return self.lane >= 0
+
+    @property
+    def consumed(self) -> int:
+        """Monotone per-stream frame cursor (the next consumed frame's
+        ordinal).  Counters travel intact across rebinds, so ordinals —
+        and therefore idempotent event ids — are stable whichever replica
+        serves the frame."""
+        return self.processed + self.gated + self.dropped
 
 
 class VisionServeEngine(EngineCore):
@@ -247,6 +257,10 @@ class VisionServeEngine(EngineCore):
     def close_stream(self, key: str) -> SegmentRecord:
         """Unbind, account leftovers as skipped, flush a SegmentRecord."""
         st = self.streams.pop(key)
+        if self.emitter is not None:
+            # departure keeps the spool draining; only evidence/cooldown
+            # tracking stops (no more frames will be consumed)
+            self.emitter.close(key)
         self.results.pop(key, None)          # churn must not leak flag lists
         st.dropped += len(st.pending)
         st.pending.clear()
@@ -289,6 +303,10 @@ class VisionServeEngine(EngineCore):
             self.pool.free(st)             # saves gate state via the hook
         elif st in self.waiting:
             self.waiting.remove(st)
+        if self.emitter is not None:
+            # undelivered events travel too (spool + cooldowns + evidence
+            # ring) — the event-plane analogue of the gate threshold
+            st.event_state = self.emitter.detach(key)
         # convert clock-domain timestamps to *ages* (now - t): each replica
         # has its own clock, so adopt_stream must rebase them — subtracting
         # an origin-clock stamp from the adopter's clock would make the
@@ -316,6 +334,9 @@ class VisionServeEngine(EngineCore):
         st.lane = -1
         self.streams[st.key] = st
         self.results[st.key] = deque(maxlen=self.max_pending)
+        if self.emitter is not None and st.event_state is not None:
+            self.emitter.adopt(st.key, st.event_state)
+            st.event_state = None
         if not self.pool.try_bind(st):
             self.waiting.push(st)
         return st
@@ -387,10 +408,19 @@ class VisionServeEngine(EngineCore):
         # is the tick cost, not the batch-amortised throughput cost
         budget = self.budget(st.deadline_ms, len(st.pending),
                              self.tick_cost_ms.get(1000.0 / self.fps))
+        first_ord = st.consumed                  # first trimmed frame's id
+        trimmed = 0
         while len(st.pending) > max(budget, 1):
             st.pending.popleft()                 # oldest frame is stalest
             st.dropped += 1
             st.deadline_dropped += 1
+            trimmed += 1
+        if trimmed and self.emitter is not None:
+            # one deadline-miss event per trim batch (cooldown suppresses
+            # sustained-pressure spam); the ordinal names the first frame
+            # sacrificed, so the id is stable under replay
+            self.emitter.emit(st.key, DEADLINE_MISS, first_ord,
+                              emit_s=self.clock.now_s(), n=trimmed)
 
     def rebalance(self) -> None:
         """Tick-start lane rebalancing (the core's ``begin_tick`` hook —
@@ -462,6 +492,12 @@ class VisionServeEngine(EngineCore):
                 if st is None or st.kind != kind or not st.pending:
                     continue
                 self._trim_to_deadline(st)
+                if self.emitter is not None:
+                    # evidence ring feeds from the staging phase — shared
+                    # verbatim by serial and fleet-parallel ticks, so
+                    # clips are bit-identical across paths
+                    self.emitter.record_frame(st.key, st.consumed,
+                                              st.pending[0])
                 frame = st.pending.popleft()
                 st.served_since_bind += 1  # gated frames consume quantum too
                 if self.use_pallas or self._host_staging:
@@ -535,6 +571,13 @@ class VisionServeEngine(EngineCore):
                 flag = bool(per_frame[lane])
                 st.flagged += flag
                 self.results[st.key].append(flag)
+                if flag and self.emitter is not None:
+                    # detection -> alert: the just-processed frame's
+                    # ordinal is consumed-1 (processed was incremented)
+                    self.emitter.emit(
+                        st.key,
+                        HAZARD if st.kind == OUTER else DISTRACTION,
+                        st.consumed - 1, emit_s=now, lane=int(lane))
             self.frames_processed += n_admit
         return n_admit
 

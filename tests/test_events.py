@@ -1,0 +1,289 @@
+"""Event/alert plane: idempotent envelopes, offline spooling, evidence.
+
+Unit coverage for ``repro.events`` (ids, cooldowns, bounded spools,
+at-least-once rewind + receiver dedup, backoff, evidence clips, rebind
+state travel) plus the ``partitioned_reconnect`` scenario end to end:
+vehicles buffer alerts offline through a replica failure, reconnect, and
+drain with ZERO duplicate accepts — bit-identically serial vs
+mesh-parallel and across reruns.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.events import (DEADLINE_MISS, DISTRACTION, HAZARD, DedupSink,
+                          Event, EventConfig, EventPlane, EventSpool,
+                          EvidenceRing, FlakySink, clip_digest, event_id)
+from repro.simulate import get_scenario, run_scenario
+from repro.streams import FleetGateway, VisionServeEngine
+
+RNG = np.random.default_rng(29)
+
+
+# ---------------------------------------------------------------------------
+# envelopes
+# ---------------------------------------------------------------------------
+def test_event_id_deterministic_and_distinct():
+    a = event_id("v1/outer", 0, 7, HAZARD)
+    assert a == event_id("v1/outer", 0, 7, HAZARD)      # idempotent
+    assert len(a) == 16 and int(a, 16) >= 0             # hex, fixed width
+    # every field participates in the identity
+    assert a != event_id("v1/inner", 0, 7, HAZARD)
+    assert a != event_id("v1/outer", 1, 7, HAZARD)
+    assert a != event_id("v1/outer", 0, 8, HAZARD)
+    assert a != event_id("v1/outer", 0, 7, DISTRACTION)
+
+
+def test_event_make_validates_type_and_derives_vehicle():
+    ev = Event.make("v003/outer", HAZARD, 12, emit_s=1.5, lane=2)
+    assert ev.eid == event_id("v003/outer", 0, 12, HAZARD)
+    assert ev.vehicle == "v003"
+    assert ev.payload == {"lane": 2}
+    with pytest.raises(ValueError):
+        Event.make("v003/outer", "earthquake", 12)
+
+
+def test_evidence_excluded_from_identity():
+    a = Event.make("v0/outer", HAZARD, 3)
+    b = Event.make("v0/outer", HAZARD, 3)
+    b.clip_len, b.clip_digest = 2, "abc"
+    b.evidence = np.zeros((2, 4, 4, 3), np.float32)
+    assert a.eid == b.eid            # same logical event, clip or not
+
+
+# ---------------------------------------------------------------------------
+# spool
+# ---------------------------------------------------------------------------
+def _evts(n, key="v0/outer"):
+    return [Event.make(key, HAZARD, i) for i in range(n)]
+
+
+def test_spool_overflow_drops_oldest_loudly():
+    sp = EventSpool(cap=3)
+    evs = _evts(5)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for ev in evs:
+            sp.append(ev)
+    assert sp.overflow_dropped == 2
+    assert len(w) == 2 and "overflowed" in str(w[0].message)
+    # the NEWEST events survive; the stalest were evicted
+    assert [e.frame_index for e in sp.pending] == [2, 3, 4]
+
+
+def test_spool_full_inflight_window_drops_new_event():
+    sp = EventSpool(cap=2)
+    for ev in _evts(2):
+        sp.append(ev)
+        sp.mark_sent(sp.pending.popleft())
+    assert len(sp.inflight) == 2 and not sp.pending
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sp.append(Event.make("v0/outer", HAZARD, 9))
+    # dropping an inflight event would break at-least-once
+    assert len(sp.inflight) == 2 and not sp.pending
+    assert sp.overflow_dropped == 1 and len(w) == 1
+
+
+def test_spool_partition_rewinds_inflight_in_order():
+    sp = EventSpool(cap=8)
+    evs = _evts(4)
+    for ev in evs[:3]:
+        sp.append(ev)
+        sp.mark_sent(sp.pending.popleft())
+    sp.append(evs[3])
+    assert sp.on_partition() == 3
+    assert not sp.inflight
+    assert [e.frame_index for e in sp.pending] == [0, 1, 2, 3]
+
+
+def test_spool_backoff_is_exponential_and_capped():
+    sp = EventSpool(cap=4, backoff_cap=8)
+    gaps = []
+    for rnd in (10, 20, 30, 40, 50):
+        sp.on_send_failure(rnd)
+        gaps.append(sp.next_attempt - rnd)
+    assert gaps == [2, 4, 8, 8, 8]              # 2^k, clipped at cap
+    assert not sp.ready(sp.next_attempt - 1)
+    assert sp.ready(sp.next_attempt)
+    sp.on_send_success()
+    assert sp.fails == 0 and sp.ready(0)
+
+
+# ---------------------------------------------------------------------------
+# sink
+# ---------------------------------------------------------------------------
+def test_dedup_sink_accepts_once_rejects_replays():
+    sink = DedupSink()
+    ev = Event.make("v0/outer", HAZARD, 1)
+    assert sink.deliver(ev) is True
+    assert sink.deliver(ev) is False            # replay rejected
+    assert sink.accepted_count == 1 and sink.duplicates == 1
+    assert sink.attempts == 2
+    assert sink.of_type(HAZARD)[0].eid == ev.eid
+
+
+# ---------------------------------------------------------------------------
+# plane: cooldown, pump, partition, backoff, evidence
+# ---------------------------------------------------------------------------
+def _plane(**cfg):
+    return EventPlane(EventConfig(**cfg), DedupSink())
+
+
+def test_cooldown_suppresses_within_window():
+    p = _plane(cooldown_frames=4, evidence_frames=0)
+    em = p.new_emitter("r0")
+    assert em.emit("v0/outer", HAZARD, 0) is not None
+    assert em.emit("v0/outer", HAZARD, 3) is None        # 3 - 0 < 4
+    assert em.emit("v0/outer", HAZARD, 4) is not None    # window elapsed
+    # cooldown is per (stream, type): other types/streams unaffected
+    assert em.emit("v0/outer", DEADLINE_MISS, 5) is not None
+    assert em.emit("v0/inner", HAZARD, 5) is not None
+    assert p.emitted == 4 and p.suppressed == 1
+
+
+def test_pump_delivers_and_partition_replay_is_deduped():
+    p = _plane(cooldown_frames=1, evidence_frames=0)
+    em = p.new_emitter("r0")
+    em.emit("v0/outer", HAZARD, 0)
+    em.emit("v0/outer", HAZARD, 1)
+    out = p.pump()
+    assert out["sent"] == 2 and out["accepted"] == 2
+    # partition BEFORE the ack round: both sends rewind ...
+    assert p.partition("v0") == 2
+    em.emit("v0/outer", HAZARD, 2)               # emitted while offline
+    assert p.pump()["sent"] == 0                 # buffering, not delivering
+    assert p.depth() == 3
+    p.reconnect("v0")
+    out = p.pump()
+    # ... and replay on reconnect: the sink counts them as duplicates
+    assert out["sent"] == 3 and out["accepted"] == 1 and out["dups"] == 2
+    p.pump()                                     # ack round
+    assert p.depth() == 0
+    assert p.sink.accepted_count == 3 and p.sink.duplicates == 2
+
+
+def test_flaky_sink_backs_off_then_drains():
+    p = EventPlane(EventConfig(cooldown_frames=1, evidence_frames=0,
+                               backoff_cap=4), FlakySink(fail_first=2))
+    em = p.new_emitter("r0")
+    for i in range(3):
+        em.emit("v0/outer", HAZARD, i)
+    rounds_with_sends = []
+    for _ in range(12):
+        if p.pump()["sent"]:
+            rounds_with_sends.append(p.rounds)
+    assert p.sink.accepted_count == 3
+    assert p.sink.failures == 2                  # both outages consumed
+    assert p.depth() == 0
+    # the two failures forced at least one skipped (backoff) round
+    assert rounds_with_sends[0] > 2
+
+
+def test_evidence_ring_clip_contents_and_digest():
+    ring = EvidenceRing(cap=3)
+    frames = [RNG.random((4, 4, 3)).astype(np.float32) for _ in range(5)]
+    for i, f in enumerate(frames):
+        ring.push(i, f)
+    idxs, clip = ring.clip(4)
+    assert idxs == [2, 3, 4]                     # ring holds the newest 3
+    assert np.array_equal(clip, np.stack(frames[2:5]))
+    assert clip_digest(clip) == clip_digest(np.stack(frames[2:5]))
+    assert clip_digest(None) == ""
+    idxs2, clip2 = ring.clip(2)                  # future frames excluded
+    assert idxs2 == [2] and clip2.shape[0] == 1
+
+
+def test_emitter_attaches_evidence_clip_to_events():
+    p = _plane(cooldown_frames=1, evidence_frames=2)
+    em = p.new_emitter("r0")
+    f0, f1 = (RNG.random((4, 4, 3)).astype(np.float32) for _ in range(2))
+    em.record_frame("v0/outer", 0, f0)
+    em.record_frame("v0/outer", 1, f1)
+    ev = em.emit("v0/outer", HAZARD, 1)
+    assert ev.clip_len == 2
+    assert ev.clip_digest == clip_digest(np.stack([f0, f1]))
+    assert np.array_equal(ev.evidence[1], f1)
+
+
+def test_emitter_detach_adopt_moves_spool_and_cooldowns():
+    p = _plane(cooldown_frames=4, evidence_frames=2)
+    src, dst = p.new_emitter("r0"), p.new_emitter("r1")
+    src.record_frame("v0/outer", 0, np.zeros((2, 2, 3), np.float32))
+    src.emit("v0/outer", HAZARD, 0)
+    state = src.detach("v0/outer")
+    assert "v0/outer" not in src.streams and state is not None
+    dst.adopt("v0/outer", state)
+    # cooldown state travelled: re-emitting inside the window suppresses
+    assert dst.emit("v0/outer", HAZARD, 2) is None
+    assert dst.depth() == 1                      # the spooled event too
+    p.pump(), p.pump()
+    assert p.sink.accepted_count == 1 and p.depth() == 0
+
+
+def test_stranded_spools_rehome_and_keep_draining():
+    p = _plane(cooldown_frames=1, evidence_frames=0)
+    em = p.new_emitter("r0")
+    em.emit("v9/outer", HAZARD, 0)
+    em.close("v9/outer")                         # closed but not drained
+    assert p.stranded(em) == 1
+    assert not em.streams                        # corpse emitter is empty
+    p.pump(), p.pump()
+    assert p.sink.accepted_count == 1 and p.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# spool travel across a replica failure (gateway integration)
+# ---------------------------------------------------------------------------
+def test_event_state_travels_with_stream_rebind():
+    plane = _plane(cooldown_frames=2, evidence_frames=2)
+    replicas = [VisionServeEngine(f"r{i}", slots=2, frame_res=16,
+                                  input_res=8, use_gate=False)
+                for i in range(2)]
+    gw = FleetGateway(replicas, events=plane)
+    gw.join("vA")
+    sess = gw.sessions["vA"][0]
+    src = gw._by_name[sess.engine]
+    # an alert emitted on the origin replica, not yet delivered
+    src.emitter.emit(sess.key, HAZARD, 0)
+    assert plane.depth() == 1
+    moved = gw.fail_replica(sess.engine)
+    assert any(k == sess.key for k, _s, _d in moved)
+    dst = gw._by_name[gw.sessions["vA"][0].engine]
+    # the spooled event now lives on the adopter's emitter ...
+    assert dst.emitter.depth() >= 1
+    assert plane.depth() == 1
+    gw.tick(), gw.tick()
+    # ... and still reaches the sink exactly once
+    assert plane.sink.accepted_count == 1
+    assert plane.sink.duplicates == 0 and plane.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# the partition scenario end to end
+# ---------------------------------------------------------------------------
+def test_partitioned_reconnect_scenario_zero_duplicates_and_parity():
+    """The acceptance drill: vehicles buffer alerts offline through a
+    replica failure, reconnect, and drain.  At-least-once delivery means
+    duplicate ATTEMPTS happen (the partition rewound unacked sends);
+    idempotent receipt means ZERO duplicate accepts.  The trace digest is
+    bit-identical across reruns and serial vs mesh-parallel."""
+    s = get_scenario("partitioned_reconnect")
+    a = run_scenario(s)
+    assert a.violations == []
+    assert a.summary["evt_emitted"] > 100
+    # the partition rewound real unacked sends -> replays were attempted
+    assert any(e.get("rewound", 0) > 0 for e in a.trace.of_kind("partition"))
+    assert a.summary["evt_duplicates"] > 0       # replays arrived ...
+    # ... every one rejected: accepted == emitted (nothing overflowed)
+    assert a.summary["evt_accepted"] == a.summary["evt_emitted"]
+    assert a.summary["evt_overflow"] == 0
+    assert a.summary["evt_spool_depth"] == 0     # drained after reconnect
+    # the replica failure inside the partition window rebound sessions
+    assert a.summary["rebinds"] > 0
+
+    b = run_scenario(s)
+    assert b.digest == a.digest                  # same seed ⇒ same trace
+    p = run_scenario(s, parallel=True)
+    assert p.digest == a.digest                  # serial/parallel parity

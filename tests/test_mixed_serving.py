@@ -8,6 +8,7 @@ exactly like the vision engine — and the mixed scenario is bit-identical
 across the serial and mesh-parallel fleet tick."""
 import jax
 import numpy as np
+import pytest
 
 from repro.config import EDAConfig, get_arch
 from repro.core.clock import PREFILL, TICK, TOKEN, VirtualClock
@@ -240,6 +241,102 @@ def test_mixed_scenario_digest_invariant_to_kv_layout():
         assert p.digest == a.digest
         digests[paged] = a.digest
     assert digests[True] == digests[False]
+
+
+# ---------------------------------------------------------------------------
+# token-replica failover (regression: gateway.fail_replica only handled
+# vision replicas — token requests kept routing onto the corpse and their
+# KV blocks never returned to the pool)
+# ---------------------------------------------------------------------------
+def test_token_replica_failure_requeues_and_frees_blocks():
+    """Failing a token replica mid-request must (1) evacuate its queued +
+    in-flight requests onto the survivor, (2) return every KV block to
+    the dead replica's pool, and (3) still finish every request."""
+    cfg, gw, tok = _mixed_gateway()
+    rids = [f"q{i}" for i in range(6)]
+    for i, rid in enumerate(rids):
+        gw.submit_request(_req(cfg, rid), now_ms=float(i))
+    for _ in range(2):                          # admit + start decoding
+        gw.tick()
+    victim = next(e for e in tok
+                  if any(r is not None for r in e.active) or e.queue)
+    in_flight = (sum(r is not None for r in victim.active)
+                 + len(victim.queue))
+    assert in_flight > 0
+    moved = gw.fail_replica(victim.name)
+    assert len(moved) == in_flight
+    assert all(src == victim.name for _rid, src, _dst in moved)
+    # the corpse is empty: no lanes bound, no queue, no blocks leaked
+    assert not any(r is not None for r in victim.active)
+    assert not victim.queue
+    if victim.paged:
+        assert victim.block_pool.used_blocks == 0
+    # the single-token-replica fast path must skip the dead replica
+    survivor = next(e.name for e in tok if e.name != victim.name)
+    assert gw.submit_request(_req(cfg, "after"), now_ms=9.0) == survivor
+    assert [e.name for e in gw.live_token_replicas()] == [survivor]
+    gw.drain(max_ticks=400)
+    done = {r.rid for r in gw.token_done}
+    assert done == set(rids) | {"after"}        # nothing stranded
+    gw.ledger.check()
+
+
+def test_token_failover_fail_submit_restore_submit_regression():
+    """fail → submit → restore → submit: after restore the worker's
+    poisoned busy/queue reading must be re-derived (the old code left
+    busy_until_ms=inf forever) so placement resumes on both replicas."""
+    cfg, gw, tok = _mixed_gateway()
+    gw.fail_replica("lm0")
+    w = gw.token_sched.by_name("lm0")
+    assert w.queue_len >= 10 ** 9               # poisoned while down
+    assert gw.submit_request(_req(cfg, "a"), now_ms=0.0) == "lm1"
+    gw.restore_replica("lm0")
+    assert w.queue_len < 10 ** 9                # reading re-derived
+    assert w.busy_until_ms != float("inf")
+    placed = {gw.submit_request(_req(cfg, f"b{i}"), now_ms=1.0 + i)
+              for i in range(4)}
+    assert "lm0" in placed                      # restored replica serves
+    gw.drain(max_ticks=400)
+    assert len(gw.token_done) == 5
+    for e in tok:
+        if e.paged:
+            assert e.block_pool.used_blocks == 0
+
+
+def test_all_token_replicas_down_rejects_and_strands_loudly():
+    cfg, gw, tok = _mixed_gateway()
+    gw.submit_request(_req(cfg, "doomed"))
+    gw.fail_replica("lm1")                      # survivor: lm0
+    with pytest.warns(UserWarning, match="no surviving"):
+        gw.fail_replica("lm0")                  # nobody left to adopt
+    assert [r.rid for r in gw.token_stranded] == ["doomed"]
+    for e in tok:
+        if e.paged:
+            assert e.block_pool.used_blocks == 0
+    with pytest.raises(RuntimeError, match="all token replicas are down"):
+        gw.submit_request(_req(cfg, "nope"))
+    gw.restore_replica("lm0")                   # service resumes
+    assert gw.submit_request(_req(cfg, "again")) == "lm0"
+    gw.drain(max_ticks=200)
+    assert {r.rid for r in gw.token_done} == {"again"}
+
+
+def test_token_failover_scenario_deterministic_and_parallel_parity():
+    """The scripted token_failover scenario: a mid-run token replica
+    failure evacuates real in-flight requests (traced as ``req_rebind``),
+    every request still completes, KV blocks conserve (invariant), and
+    the digest is bit-identical across reruns and serial vs parallel."""
+    s = get_scenario("token_failover")
+    a = run_scenario(s)
+    assert a.violations == []
+    assert a.summary["tok_done"] == a.summary["tok_submitted"] > 0
+    assert len(a.trace.of_kind("req_rebind")) > 0
+    fail_events = a.trace.of_kind("fail")
+    assert fail_events and fail_events[0].get("moved", 0) > 0
+    b = run_scenario(s)
+    assert b.digest == a.digest
+    p = run_scenario(s, parallel=True)
+    assert p.digest == a.digest
 
 
 def test_percentile_helper_matches_numpy():
