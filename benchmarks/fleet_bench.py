@@ -1,6 +1,6 @@
 """Fleet bench: frames/s vs slots x streams x gating x ingest x parallel.
 
-Five measurements, all on the synthetic dash-cam clips:
+Six measurements, all on the synthetic dash-cam clips:
 
   1. cross-stream batching — the same 8-stream workload through engines
      with 1/2/8 slots (gate off): slot-batched inference amortises dispatch
@@ -20,7 +20,12 @@ Five measurements, all on the synthetic dash-cam clips:
      count=8``; auto mode keeps vmap there (forced CPU devices execute
      sequentially — shard_map is the accelerator-mesh path, certified
      bit-identical by tests/test_fleet_step.py).  Target: >=2x fleet
-     throughput at 4 replicas, with per-stream admit parity.
+     throughput at 4 replicas, with per-stream admit parity;
+  6. mixed-tier fleet — the same serial-vs-fused comparison on a fleet
+     whose replicas advertise heterogeneous model tiers (base f32/32px,
+     low f32/16px, frugal bf16/16px): the fused tick groups replicas by
+     geometry, keeps the 1-dispatch-per-tick contract, and must stay
+     admit/gate-identical to serial stepping.
 
 CPU wall-clock on tiny models: relative numbers are the deliverable.
 """
@@ -240,6 +245,71 @@ def parallel_fleet(rows, repeats: int = 3):
         f"serial/parallel outcomes diverged: {stats[False]} {stats[True]}")
 
 
+def _mixed_tier_drain(n_vehicles: int, frames: int, parallel: bool):
+    """A heterogeneous-tier gateway drain: base/low/frugal replicas in
+    one fleet (three distinct resolution x dtype geometries)."""
+    tiers = ("base", "low", "low", "frugal")
+    replicas = [VisionServeEngine(f"r{i}", slots=4, frame_res=RES, fps=FPS,
+                                  use_gate=True, tier=t,
+                                  rng=jax.random.key(i))
+                for i, t in enumerate(tiers)]
+    gw = FleetGateway(replicas, parallel=parallel)
+    src = DashCamSource(granularity_s=frames / FPS, fps=FPS, res=RES,
+                        seed=11)
+    clips = [src.pair(v) for v in range(n_vehicles)]
+    for v in range(n_vehicles):
+        gw.join(f"v{v:02d}")
+    for v, pair in enumerate(clips):
+        for outer, inner in zip(pair.outer[:frames], pair.inner[:frames]):
+            gw.push(f"v{v:02d}", outer, inner)
+    t0 = time.perf_counter()
+    done = gw.drain()
+    wall = time.perf_counter() - t0
+    outcome = []
+    for v in range(n_vehicles):
+        for rec in gw.leave(f"v{v:02d}"):
+            outcome.append((rec.video_id, rec.stream, rec.frames_processed,
+                            rec.frames_gated))
+    return done, wall, sorted(outcome)
+
+
+def mixed_tier_fleet(rows, repeats: int = 3):
+    """Mixed-tier fleet drain: serial vs the fused tick on a fleet whose
+    replicas advertise three different tiers (base f32/32px, low f32/16px,
+    frugal bf16/16px).  The fused tick groups replicas by geometry and
+    still issues ONE device dispatch per tick; the parity column
+    certifies per-stream admit/gate decisions are identical across the
+    serial and grouped-parallel paths — including across the bf16 tier.
+    """
+    n_veh, frames = 8, 24
+    mode = resolve_mode(4)
+    print(f"\n== mixed-tier fleet (base/low/frugal) serial vs fused "
+          f"({mode}) ==")
+    offered = n_veh * 2 * frames
+    stats = {}
+    for parallel in (False, True):
+        _mixed_tier_drain(n_veh, frames, parallel)      # warm compile
+        best = None
+        for _ in range(repeats):
+            done, wall, outcome = _mixed_tier_drain(n_veh, frames,
+                                                    parallel)
+            if best is None or wall < best[1]:
+                best = (done, wall, outcome)
+        stats[parallel] = best
+        label = "fused (grouped)" if parallel else "serial         "
+        print(f"{label}: {offered / best[1]:8.1f} offered-frames/s   "
+              f"inferred {best[0]}/{offered}   {best[1] * 1000:.0f} ms")
+    parity = (stats[False][0] == stats[True][0]
+              and stats[False][2] == stats[True][2])
+    fps = offered / stats[True][1]
+    print(f"mixed-tier parity: {'OK' if parity else 'MISMATCH'}")
+    rows.append(("fleet_mixed_tier_fps", fps, "offered_frames_per_s"))
+    rows.append(("fleet_mixed_tier_parity", float(parity), "1=identical"))
+    assert parity, (
+        f"mixed-tier serial/fused outcomes diverged: "
+        f"{stats[False]} {stats[True]}")
+
+
 def obs_overhead(rows, repeats: int = 3):
     """Observability overhead: the same gateway drain with the obs plane
     fully on (shared MetricsRegistry + unsampled SpanTracer) vs fully off
@@ -378,6 +448,7 @@ def main(rows=None):
     gating_effect(rows)
     ingest_path(rows)
     parallel_fleet(rows)
+    mixed_tier_fleet(rows)
     obs_overhead(rows)
     event_plane(rows)
     return rows

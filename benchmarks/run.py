@@ -42,6 +42,7 @@ MODULES = ["turnaround", "energy", "esd_sweep", "kernel_micro",
 GATE_RULES = [
     # correctness bits: exact
     ("fleet_parallel_parity", "equal", 0.0, 0.0),
+    ("fleet_mixed_tier_parity", "equal", 0.0, 0.0),
     ("fleet_ingest_parity", "equal", 0.0, 0.0),
     ("fleet_obs_parity", "equal", 0.0, 0.0),
     ("fleet_event_parity", "equal", 0.0, 0.0),
@@ -77,6 +78,7 @@ GATE_RULES = [
     # the real per-PR signal
     ("fleet_serial_fps", "higher", 0.75, 0.0),
     ("fleet_parallel_fps", "higher", 0.75, 0.0),
+    ("fleet_mixed_tier_fps", "higher", 0.75, 0.0),
     ("fleet_slots", "lower", 2.0, 0.0),
     ("fleet_streams", "higher", 0.75, 0.0),
     ("fleet_ingest_", "higher", 0.75, 0.0),

@@ -40,6 +40,7 @@ the gateway/fleet/simulator stack drive any workload class.
 from __future__ import annotations
 
 from collections import deque
+from dataclasses import dataclass
 from typing import Callable, Deque, List, Optional
 
 import jax
@@ -55,6 +56,22 @@ from repro.obs.tracing import NULL_TRACER
 # priority > 0 = inner/distraction.  Exported here so workload shells and
 # the fleet stack share one spelling.
 OUTER, INNER = "outer", "inner"
+
+
+@dataclass(frozen=True)
+class PressureSignal:
+    """One engine's load snapshot for fleet-level control decisions.
+
+    Read by the tier director (``streams.tiers``) at the top of every
+    gateway tick — pure host state, so sampling it never perturbs device
+    work or digests.  ``backlog_per_slot`` is the primary migration /
+    autoscaling signal; ``deadline_ewma`` (smoothed deadline-trimmed
+    units per tick) flags replicas that are shedding work to stay live.
+    """
+    backlog: int                 # queued work units (frames / requests)
+    backlog_per_slot: float      # backlog normalised by engine width
+    deadline_ewma: float         # EWMA of deadline-dropped units per tick
+    tick_cost_ms: float          # current per-tick latency estimate
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +398,11 @@ class EngineCore:
         self.tick_cost_ms = EWMA(alpha=self.eda.ewma_alpha)
         self.ticks = 0
         self.busy_s = 0.0
+        # deadline-pressure signal: workload shells report trimmed units
+        # via note_deadline_drops(); end_tick folds them into an EWMA the
+        # tier director reads through pressure()
+        self.deadline_drop_ewma = EWMA(alpha=0.2)
+        self._deadline_drops_tick = 0
         # observability seams — NULL_TRACER / no registry by default, so
         # an uninstrumented engine pays one attribute read per phase
         self.metrics: Optional[MetricsRegistry] = None
@@ -489,7 +511,31 @@ class EngineCore:
             self._m_ticks.inc()
             if done:
                 self._m_tick_ms.observe(dt_ms)
+        self.deadline_drop_ewma.update(float(self._deadline_drops_tick))
+        self._deadline_drops_tick = 0
         self.ticks += 1
+
+    # ------------------------------------------------------------------
+    # backlog / deadline pressure (read by the tier director)
+    # ------------------------------------------------------------------
+    def note_deadline_drops(self, n: int) -> None:
+        """Workload-shell hook: record ``n`` units trimmed to meet a
+        deadline this tick (folded into the EWMA at ``end_tick``)."""
+        self._deadline_drops_tick += n
+
+    def backlog_units(self) -> int:
+        """Queued work units awaiting service.  Workload shells override
+        (pending frames, queued+active requests); the base has none."""
+        return 0
+
+    def pressure(self) -> PressureSignal:
+        """This engine's load snapshot — pure host reads, digest-safe."""
+        backlog = self.backlog_units()
+        return PressureSignal(
+            backlog=backlog,
+            backlog_per_slot=backlog / max(self.slots, 1),
+            deadline_ewma=self.deadline_drop_ewma.get(0.0),
+            tick_cost_ms=self.tick_cost_ms.get(0.0))
 
     def finish_dispatch(self, n_units: int, t0_s: float, charge_kind: str,
                         dt_override_s: Optional[float] = None) -> float:

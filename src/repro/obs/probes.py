@@ -73,6 +73,37 @@ def register_runtime_gauges(metrics: MetricsRegistry,
         "fused mesh-parallel dispatches issued (1 per tick with work, "
         "by the fleet_step contract)",
     ).set_function(lambda: gw._fleet.dispatches if gw._fleet else 0)
+    if getattr(gw, "tiering", None) is not None:
+        director = gw.tiering
+
+        def _tier_agg(tier_name: str, fn):
+            return lambda: sum(
+                fn(r) for r in gw.live_replicas()
+                if director.tiers.get(r.name) is not None
+                and director.tiers[r.name].name == tier_name)
+
+        for tname in sorted({t.name for t in director.tiers.values()}):
+            metrics.gauge(
+                f"fleet_tier_sessions_{tname}",
+                f"open streams on live {tname}-tier replicas",
+            ).set_function(_tier_agg(tname, lambda r: r.session_count))
+            metrics.gauge(
+                f"fleet_tier_backlog_{tname}",
+                f"pending frames on live {tname}-tier replicas",
+            ).set_function(_tier_agg(tname, lambda r: sum(
+                len(st.pending) for st in r.streams.values())))
+            metrics.gauge(
+                f"fleet_tier_bound_{tname}",
+                f"bound lanes on live {tname}-tier replicas",
+            ).set_function(_tier_agg(tname, lambda r: r.bound_count))
+        metrics.gauge(
+            "fleet_standby_replicas",
+            "replicas currently parked by the autoscaler",
+        ).set_function(lambda: len(director.standby))
+        metrics.gauge(
+            "fleet_pressure",
+            "autoscaler pressure EWMA (mean backlog per live slot)",
+        ).set_function(director.fleet_pressure)
     if gw.token_replicas:
         metrics.gauge(
             "fleet_token_backlog",

@@ -41,6 +41,7 @@ class ReplicaStatus:
     lane_binds: List[Optional[str]] = field(default_factory=list)
     gate_thresh: Optional[Tuple[float, float, float]] = None  # min/mean/max
     spool_depth: int = 0             # undelivered events (event plane)
+    tier: Optional[str] = None       # advertised model tier (tiered fleets)
 
     @property
     def occupancy(self) -> float:
@@ -68,6 +69,11 @@ class FleetStatus:
     events_overflow: int = 0         # loud bounded-spool drops
     vehicle_energy: Dict[str, Tuple[float, float]] = field(
         default_factory=dict)    # name -> (energy_j, battery_j)
+    # per-tier aggregates + the autoscaler's latest decisions (tiered
+    # fleets only; both empty/None when no TierDirector is attached)
+    tiers: Dict[str, dict] = field(default_factory=dict)
+    last_shift: Optional[dict] = None
+    last_scale: Optional[dict] = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -104,7 +110,9 @@ class FleetStatus:
                 lane_binds=[st.key if st is not None else None
                             for st in r.lanes],
                 gate_thresh=thresh,
-                spool_depth=_spool_depth(r.name)))
+                spool_depth=_spool_depth(r.name),
+                tier=(r.tier.name if getattr(r, "tier", None) is not None
+                      else None)))
         for e in gw.token_replicas:
             in_flight = sum(req is not None for req in e.active)
             replicas.append(ReplicaStatus(
@@ -130,6 +138,30 @@ class FleetStatus:
                 events_suppressed=ev.suppressed,
                 events_spool_depth=ev.depth(),
                 events_overflow=ev.overflow_dropped())
+        tiers: Dict[str, dict] = {}
+        last_shift = last_scale = None
+        director = getattr(gw, "tiering", None)
+        if director is not None:
+            standby = set(director.standby)
+            for r in gw.replicas:
+                tier = director.tiers.get(r.name)
+                if tier is None:
+                    continue
+                agg = tiers.setdefault(tier.name, dict(
+                    replicas=0, live=0, standby=0, sessions=0,
+                    backlog=0, bound=0, slots=0))
+                agg["replicas"] += 1
+                if r.name in standby:
+                    agg["standby"] += 1
+                elif r.name not in gw.dead:
+                    agg["live"] += 1
+                    agg["sessions"] += r.session_count
+                    agg["backlog"] += sum(len(st.pending)
+                                          for st in r.streams.values())
+                    agg["bound"] += r.bound_count
+                    agg["slots"] += r.slots
+            last_shift = director.last_shift
+            last_scale = director.last_scale
         return cls(
             replicas=replicas,
             sessions=len(gw.sessions),
@@ -141,6 +173,7 @@ class FleetStatus:
             ledger_records=len(gw.ledger),
             ledger_energy_j=gw.ledger.totals["energy_j"],
             vehicle_energy=dict(vehicle_energy or {}),
+            tiers=tiers, last_shift=last_shift, last_scale=last_scale,
             **evt_counts)
 
     # ------------------------------------------------------------------
@@ -171,14 +204,18 @@ class FleetStatus:
                 "lane_binds": r.lane_binds,
                 "gate_thresh": r.gate_thresh,
                 "spool_depth": r.spool_depth,
+                "tier": r.tier,
             } for r in self.replicas],
             "vehicle_energy": {k: list(v)
                                for k, v in self.vehicle_energy.items()},
+            "tiers": self.tiers,
+            "last_shift": self.last_shift,
+            "last_scale": self.last_scale,
         }
 
     def render(self) -> str:
         """The text dashboard: one row per replica + a fleet footer."""
-        head = (f"{'replica':10s} {'kind':6s} {'state':6s} {'occ':>7s} "
+        head = (f"{'replica':10s} {'kind':11s} {'state':6s} {'occ':>7s} "
                 f"{'wait':>4s} {'backlog':>7s} {'ticks':>6s} "
                 f"{'served':>7s} {'unit_ms':>8s} {'tick_ms':>8s} "
                 f"{'gate_thresh (min/mean/max)':26s}")
@@ -187,8 +224,9 @@ class FleetStatus:
             state = "DEAD" if r.dead else "live"
             gate = ("-" if r.gate_thresh is None else
                     "/".join(f"{v:.3f}" for v in r.gate_thresh))
+            kind = f"{r.kind}/{r.tier}" if r.tier else r.kind
             lines.append(
-                f"{r.name:10s} {r.kind:6s} {state:6s} "
+                f"{r.name:10s} {kind:11s} {state:6s} "
                 f"{r.bound}/{r.slots:<2d}{100 * r.occupancy:3.0f}% "
                 f"{r.waiting:4d} {r.backlog:7d} {r.ticks:6d} "
                 f"{r.served:7d} {r.unit_cost_ms:8.2f} "
@@ -208,6 +246,26 @@ class FleetStatus:
                 f"{self.events_suppressed} suppressed  "
                 f"spool={self.events_spool_depth}  "
                 f"overflow={self.events_overflow}")
+        if self.tiers:
+            lines.append("tiers: " + "  ".join(
+                f"{name}[{agg['live']}l/{agg['standby']}s "
+                f"{agg['sessions']}sess bkl={agg['backlog']} "
+                f"occ={agg['bound']}/{agg['slots']}]"
+                for name, agg in sorted(self.tiers.items())))
+        for label, act in (("last shift", self.last_shift),
+                           ("last scale", self.last_scale)):
+            if act is None:
+                continue
+            if "key" in act:
+                lines.append(
+                    f"{label}: t{act['tick']} {act['kind']} {act['key']} "
+                    f"{act['src']}({act['tier_from']}) -> "
+                    f"{act['dst']}({act['tier_to']})")
+            else:
+                lines.append(
+                    f"{label}: t{act['tick']} {act['kind']} "
+                    f"{act['replica']}({act['tier']}) "
+                    f"pressure={act['pressure']}")
         if self.vehicle_energy:
             worst = sorted(self.vehicle_energy.items(),
                            key=lambda kv: kv[1][1] - kv[1][0])[:4]

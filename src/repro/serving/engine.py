@@ -580,6 +580,10 @@ class ServeEngine(EngineCore):
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.active)
 
+    def backlog_units(self) -> int:
+        """Queued + in-flight requests (the core pressure signal)."""
+        return len(self.queue) + sum(r is not None for r in self.active)
+
     def stats(self) -> dict:
         """Serving-loop telemetry (mirrors the vision engine's)."""
         out = {

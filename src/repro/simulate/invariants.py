@@ -32,7 +32,22 @@ the paper's transient-fleet claim rests on:
                  contract: the sink never accepts the same event id
                  twice, accepts ⊆ emits, spool depth respects its cap,
                  and after the final flush the accepted count equals
-                 emitted minus overflow drops with zero residual depth.
+                 emitted minus overflow drops with zero residual depth;
+  tier conserv.  (tiered scenarios) every live session sits on a live,
+                 tier-registered replica, per-tier session counts sum to
+                 the fleet total, and standby replicas hold zero
+                 sessions while parked;
+  tier migration an up/downshifted stream's gate threshold is identical
+                 across the move and its consumed-frame ordinal never
+                 decreases — migration replays nothing and loses
+                 nothing;
+  tier p95       (tiered scenarios with a bound) the fleet's p95 stream
+                 turnaround stays under the scenario's declared
+                 ``p95_bound_ms`` — the paper's bounded-latency claim
+                 under spike load.
+
+``docs/INVARIANTS.md`` catalogues each invariant with its precise
+property statement and the test/CI job that enforces it.
 """
 from __future__ import annotations
 
@@ -63,8 +78,9 @@ from repro.obs.probes import jit_cache_entries as jit_cache_sizes  # noqa: E402,
 class InvariantSuite:
     """Online + final invariant checks for one scenario run."""
 
-    def __init__(self, gw: FleetGateway) -> None:
+    def __init__(self, gw: FleetGateway, *, tiers=None) -> None:
         self.gw = gw
+        self.tiers = tiers        # the scenario's TierPlanSpec, or None
         self.violations: List[Violation] = []
 
     def _flag(self, tick: int, invariant: str, detail: str) -> None:
@@ -81,6 +97,46 @@ class InvariantSuite:
             self._check_kv_blocks(tick)
         if self.gw.events is not None:
             self._check_events(tick)
+        if self.gw.tiering is not None:
+            self._check_tiers(tick)
+
+    def _check_tiers(self, tick: int) -> None:
+        """Tier conservation: the director's view of the fleet matches
+        the gateway's — every session sits on a live, tier-registered
+        replica, per-tier session counts sum to the fleet total, and a
+        standby replica parked by the autoscaler holds zero sessions."""
+        d = self.gw.tiering
+        live = {r.name for r in self.gw.live_replicas()}
+        per_tier: dict = {}
+        for r in self.gw.live_replicas():
+            tier = d.tiers.get(r.name)
+            if tier is None:
+                self._flag(tick, "tier-conservation",
+                           f"live replica {r.name} is not registered "
+                           f"with the tier director")
+                continue
+            per_tier[tier.name] = (per_tier.get(tier.name, 0)
+                                   + r.session_count)
+        for vehicle, pair in self.gw.sessions.items():
+            for sess in pair:
+                if sess.engine not in live:
+                    continue          # placement check already flags it
+                if sess.engine not in d.tiers:
+                    self._flag(tick, "tier-conservation",
+                               f"{sess.key} placed on {sess.engine} "
+                               f"which has no tier")
+        total = sum(r.session_count for r in self.gw.live_replicas())
+        if sum(per_tier.values()) != total:
+            self._flag(tick, "tier-conservation",
+                       f"per-tier session counts {per_tier} sum to "
+                       f"{sum(per_tier.values())} but the fleet holds "
+                       f"{total}")
+        for name in d.standby:
+            eng = self.gw._by_name.get(name)
+            if eng is not None and eng.session_count:
+                self._flag(tick, "tier-conservation",
+                           f"standby replica {name} holds "
+                           f"{eng.session_count} sessions")
 
     def _check_kv_blocks(self, tick: int) -> None:
         """BlockPool conservation per token replica: the pool's used
@@ -193,6 +249,22 @@ class InvariantSuite:
                        f"{key} threshold changed across rebind: "
                        f"{thresh_before} -> {thresh_after}")
 
+    def on_migrate(self, tick: int, rec: dict) -> None:
+        """Tier up/downshift state-travel: the stream's adaptive gate
+        threshold is bit-identical across the move, and its consumed
+        frame ordinal never goes backwards (migration must not replay or
+        drop already-consumed frames)."""
+        tb, ta = rec["thresh_before"], rec["thresh_after"]
+        if not (tb is None and ta is None) and tb != ta:
+            self._flag(tick, "gate-travel",
+                       f"{rec['key']} threshold changed across "
+                       f"{rec['kind']}: {tb} -> {ta}")
+        ob, oa = rec["ordinal_before"], rec["ordinal_after"]
+        if oa < ob:
+            self._flag(tick, "tier-migration",
+                       f"{rec['key']} consumed ordinal went backwards "
+                       f"across {rec['kind']}: {ob} -> {oa}")
+
     # ------------------------------------------------------------------
     # final checks
     # ------------------------------------------------------------------
@@ -225,6 +297,17 @@ class InvariantSuite:
                                f"still allocated")
         if self.gw.events is not None:
             self._finalize_events(tick)
+        if (self.tiers is not None
+                and getattr(self.tiers, "p95_bound_ms", 0.0) > 0):
+            # turnaround here is the session-level elapsed time (first
+            # frame to stream close), not per-frame latency — the bound
+            # asserts the spike never lets sessions run away unboundedly
+            p95 = ledger.sketches["turnaround_ms"].quantile(95)
+            if p95 > self.tiers.p95_bound_ms:
+                self._flag(tick, "tier-p95",
+                           f"p95 stream turnaround {p95:.1f} ms exceeds "
+                           f"the scenario bound "
+                           f"{self.tiers.p95_bound_ms:.1f} ms")
         cache_now = jit_cache_sizes()
         if cache_now != cache_after_warmup:
             self._flag(tick, "recompile",

@@ -41,6 +41,7 @@ from repro.simulate.scenario import (FLOPS_PER_FRAME, TICK_OVERHEAD_MS,
                                      Scenario, VehicleProfile)
 from repro.simulate.trace import Trace
 from repro.streams.gateway import FleetGateway
+from repro.streams.tiers import TierDirector, resolve_tier, stream_thresh
 from repro.streams.vision_engine import VisionServeEngine
 
 
@@ -131,12 +132,22 @@ def warm_jits(scenario: Scenario) -> None:
     mid-soak and read as a recompile.  Real deployments warm serving jits
     before taking traffic for exactly the same reason."""
     import jax
-    slots = {spec.slots for spec in scenario.replicas}
-    for n in sorted(slots):
+    tiered = scenario.tiers is not None
+    if tiered:
+        # every distinct (slots, tier) geometry compiles its own jits
+        # (resolution and batch dtype both key the cache) — including
+        # standby replicas, whose first dispatch otherwise lands whenever
+        # the autoscaler activates them mid-soak
+        geoms = sorted({(spec.slots, spec.tier)
+                        for spec in scenario.replicas})
+    else:
+        geoms = sorted({(spec.slots, None) for spec in scenario.replicas})
+    for n, tier in geoms:
         eng = VisionServeEngine(
             "warmup", slots=n, frame_res=scenario.frame_res,
             input_res=scenario.input_res, fps=scenario.fps,
             use_gate=scenario.use_gate, use_pallas=scenario.use_pallas,
+            tier=tier,
             clock=VirtualClock(), rng=jax.random.key(0))
         eng.open_stream("w/outer", "outer")
         eng.open_stream("w/inner", "inner")
@@ -223,10 +234,19 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
     ``parallel=True`` builds the gateway in mesh-parallel tick mode
     (``streams.fleet_step``) — bit-identical traces on virtual clocks."""
     import jax
+    tiered = scenario.tiers is not None
     replicas = []
+    standby_names: List[str] = []
     for i, spec in enumerate(scenario.replicas):
+        tier = resolve_tier(spec.tier) if tiered else None
+        # a tier's cost_scale prices its resolution/dtype against the
+        # base tier on the replica's virtual clock — a `low` replica
+        # burns 1/4 the virtual frame time of a `base` one
+        frame_cost_ms = spec.virtual_frame_cost_ms()
+        if tier is not None:
+            frame_cost_ms *= tier.cost_scale
         clock = VirtualClock(rates={
-            FRAME: spec.virtual_frame_cost_ms() / 1000.0,
+            FRAME: frame_cost_ms / 1000.0,
             TICK: TICK_OVERHEAD_MS / 1000.0,
         })
         replicas.append(VisionServeEngine(
@@ -235,7 +255,21 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
             fps=scenario.fps, eda=EDAConfig(esd=scenario.esd),
             use_gate=scenario.use_gate, use_pallas=scenario.use_pallas,
             quantum=scenario.quantum, max_pending=scenario.max_pending,
+            tier=tier,
             clock=clock, rng=jax.random.key(i)))
+        if tiered and spec.standby:
+            standby_names.append(spec.name)
+    tiering = None
+    if tiered:
+        tp = scenario.tiers
+        tiering = TierDirector(
+            down_pressure=tp.down_pressure, up_slack=tp.up_slack,
+            window=tp.window, cooldown=tp.cooldown,
+            max_burst=tp.max_burst,
+            scale_out_pressure=tp.scale_out_pressure,
+            scale_in_slack=tp.scale_in_slack,
+            scale_window=tp.scale_window,
+            deadline_ms=scenario.deadline_ms)
     # event/alert plane: constructed only when the scenario declares one
     # — an absent plane leaves every hook dormant and the trace digest
     # byte-identical to pre-event-plane builds
@@ -253,7 +287,8 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
                       overcommit=scenario.overcommit,
                       parallel=parallel, fleet_mode=fleet_mode,
                       token_replicas=build_token_replicas(scenario),
-                      metrics=metrics, tracer=tracer, events=events)
+                      metrics=metrics, tracer=tracer, events=events,
+                      tiering=tiering, standby=tuple(standby_names))
     # install the heterogeneous HW priors (the gateway defaults to a
     # cores-only prior; scenarios speak full HardwareInfo — the paper's
     # HW_INFO handshake, refined by measurement as the run progresses)
@@ -265,15 +300,7 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
 
 
 def _stream_thresh(eng: VisionServeEngine, key: str) -> Optional[float]:
-    st = eng.streams[key]
-    gate = eng.gates[st.kind]
-    if gate is None:
-        return None
-    if st.bound:
-        return float(gate.thresh[st.lane])
-    if st.gate_state is not None:
-        return float(st.gate_state["thresh"])
-    return float(gate.init_thresh)
+    return stream_thresh(eng, key)
 
 
 class ScenarioRunner:
@@ -288,7 +315,7 @@ class ScenarioRunner:
                               fleet_mode=fleet_mode,
                               metrics=metrics, tracer=tracer)
         self.trace = Trace()
-        self.inv = InvariantSuite(self.gw)
+        self.inv = InvariantSuite(self.gw, tiers=scenario.tiers)
         self.energy = EnergyModel()
         self.rng = np.random.default_rng(scenario.seed)
         self.vehicles: Dict[str, _Vehicle] = {}
@@ -511,6 +538,27 @@ class ScenarioRunner:
                 wait=sum(len(r.waiting)
                          for r in self.gw.live_replicas()),
                 live=len(self.vehicles))
+            if self.gw.tiering is not None:
+                # emitted only for tiered scenarios, so every pre-tier
+                # scenario digest is untouched
+                for act in self.gw.tiering.drain_actions():
+                    if act["kind"] in ("downshift", "upshift"):
+                        self.inv.on_migrate(tick, act)
+                        self.trace.emit(
+                            tick, "shift", op=act["kind"],
+                            key=act["key"], src=act["src"],
+                            dst=act["dst"], tier_from=act["tier_from"],
+                            tier_to=act["tier_to"])
+                    else:                     # scale_out / scale_in
+                        self.trace.emit(
+                            tick, "scale", op=act["kind"],
+                            replica=act["replica"], tier=act["tier"],
+                            pressure=round(act["pressure"], 4))
+                        for key, src, dst, tb, ta in act.get("moved", ()):
+                            self.inv.on_rebind(tick, key, tb, ta)
+                            self.trace.emit(
+                                tick, "rebind", key=key, src=src, dst=dst,
+                                thresh=-1.0 if ta is None else ta)
             if self.gw.token_replicas:
                 # emitted only for mixed scenarios, so vision-only trace
                 # digests are untouched by the token extension

@@ -46,11 +46,20 @@ FLOPS_PER_FRAME = {"outer": 0.8e9, "inner": 0.5e9}
 
 @dataclass(frozen=True)
 class ReplicaSpec:
-    """One engine replica; speed derives from the HW_INFO prior."""
+    """One engine replica; speed derives from the HW_INFO prior.
+
+    ``tier`` / ``standby`` only take effect when the scenario declares a
+    :class:`TierPlanSpec` (``Scenario.tiers``); otherwise they are
+    ignored and the replica serves the scenario-wide ``input_res`` at
+    float32 — so untiered scenario digests are untouched by the fields'
+    existence.  A standby replica starts parked (dead to placement) and
+    joins the fleet only when the autoscaler activates it."""
     name: str
     slots: int = 4
     hw: HardwareInfo = field(default_factory=HardwareInfo)
     frame_cost_ms: Optional[float] = None    # explicit override
+    tier: str = "base"                       # streams.tiers.TIERS key
+    standby: bool = False
 
     def virtual_frame_cost_ms(self) -> float:
         if self.frame_cost_ms is not None:
@@ -134,6 +143,26 @@ class EventPlaneSpec:
 
 
 @dataclass(frozen=True)
+class TierPlanSpec:
+    """Declarative tier/autoscaling control plane: turning this on gives
+    replicas their advertised tiers (``ReplicaSpec.tier``), parks the
+    ``standby`` replicas, and attaches a
+    :class:`~repro.streams.tiers.TierDirector` to the gateway.  Off
+    (``Scenario.tiers = None``) the director does not exist and scenario
+    digests are byte-identical to pre-tier builds."""
+    down_pressure: float = 1.5      # backlog/slot that triggers downshift
+    up_slack: float = 0.25          # fleet-wide slack needed to upshift
+    window: int = 4                 # ticks between migration evaluations
+    cooldown: int = 8               # per-stream ticks between shifts
+    max_burst: int = 8              # AIMD downshift burst ceiling
+    scale_out_pressure: float = 2.5  # EWMA pressure to activate a standby
+    scale_in_slack: float = 0.1     # EWMA slack to retire a scale-out
+    scale_window: int = 6           # consecutive hot/calm ticks required
+    p95_bound_ms: float = 0.0       # finalize-time p95 turnaround bound
+    #                                 (0 = no bound check)
+
+
+@dataclass(frozen=True)
 class ScriptedEvent:
     # action: fail_replica | restore_replica (vision OR token replica)
     #         | partition_vehicle | reconnect_vehicle (uplink, needs events)
@@ -173,6 +202,10 @@ class Scenario:
     # event/alert plane: None leaves the plane off (digests untouched);
     # a spec attaches EventPlane+DedupSink and enables partition scripting
     events: Optional[EventPlaneSpec] = None
+    # model-tier control plane: None leaves replicas untiered (digests
+    # untouched); a spec activates ReplicaSpec.tier/standby and attaches
+    # a TierDirector (AIMD migration + standby autoscaling)
+    tiers: Optional[TierPlanSpec] = None
     description: str = ""
 
 
@@ -452,6 +485,36 @@ def token_failover() -> Scenario:
                     "evacuates + requeues decodes onto the survivor "
                     "(blocks conserved), restore re-derives worker state "
                     "— placement resumes on both replicas.")
+
+
+@_scenario
+def traffic_spike() -> Scenario:
+    return Scenario(
+        name="traffic_spike", seed=3131, ticks=240,
+        replicas=(
+            # the steady fleet: two base-tier replicas + one low-tier
+            ReplicaSpec("base0", tier="base"),
+            ReplicaSpec("base1", tier="base"),
+            ReplicaSpec("low0", tier="low"),
+            # parked capacity the autoscaler may activate under sustained
+            # pressure (the frugal bf16 tier is cheapest per frame and
+            # wins the energy-guided pick)
+            ReplicaSpec("sb_low", tier="low", standby=True),
+            ReplicaSpec("sb_frugal", tier="frugal", standby=True),
+        ),
+        profiles=(VehicleProfile(duplicate_prob=0.3),),
+        initial_vehicles=3, join_rate=0.5, leave_rate=0.02,
+        max_vehicles=14, overcommit=3.0,
+        deadline_ms=600.0, esd=2.0,
+        tiers=TierPlanSpec(down_pressure=1.5, up_slack=0.25,
+                           window=4, cooldown=8,
+                           scale_out_pressure=2.5, scale_in_slack=0.1,
+                           scale_window=5, p95_bound_ms=5000.0),
+        description="Traffic spike onto a tiered fleet: joins outrun the "
+                    "base tier, the director AIMD-downshifts streams onto "
+                    "low/frugal replicas and scales out the standbys, "
+                    "holding p95 turnaround bounded (invariant-certified, "
+                    "serial == parallel digests).")
 
 
 @_scenario

@@ -15,16 +15,24 @@ leading ``replica`` axis —
     model params  pytrees stacked to (R, ...)
 
 — and runs ingest → gate-score → admit-threshold → model forward for *all*
-replicas in one jit containing one mapped computation:
+replicas in one jit containing one mapped computation per **tier group**:
 
+  * replicas are grouped by model geometry — ``(dc, pc, input_res,
+    batch dtype)``, i.e. by :class:`~repro.streams.tiers.TierSpec` in a
+    tiered fleet.  A uniform fleet is one group and compiles to exactly
+    the pre-tier program; a mixed-tier fleet gets one vmapped body per
+    group, all inside the *same* jit, so a whole heterogeneous fleet tick
+    is still a single device dispatch (the 1-dispatch-per-tick contract
+    ``tests/test_fleet_step`` pins);
   * ``mode="shard_map"``: ``shard_map`` over a ``mesh(("replica",))``
     built with ``sharding/compat.make_mesh``; each device executes exactly
     the single-replica program (the mapped body indexes away its size-1
     replica block), so per-replica math is token-for-token the serial
-    program and results are bit-identical;
+    program and results are bit-identical.  Requires a single tier group
+    (a mesh axis cannot mix program shapes);
   * ``mode="vmap"``: the same stacked state through ``jax.vmap`` of the
-    same body — the single-device / CPU / interpret fallback, so the code
-    path is identical off-TPU.
+    same body — the single-device / CPU / interpret fallback and the only
+    mode for mixed-tier fleets.
 
 Inside the mapped body the existing kernels are reused unchanged:
 ``kernels.vision_ops.ingest_frame`` / ``scatter_admit`` on the Pallas
@@ -32,7 +40,7 @@ path, the ``streams.filter`` jnp gate ops + ``models.vision`` analysis
 jits on the legacy path.  Replica-stacking and per-replica unstacking both
 live *inside* the jit, and frames stage into pinned host buffers
 (``VisionServeEngine.enable_host_staging``), so a whole fleet tick issues
-exactly one device dispatch however many replicas/lanes are live.
+exactly one device dispatch however many replicas/lanes/tiers are live.
 
 Host/device split: everything the serial path does on the host stays on
 the host, per replica, in the same order — lane rebalancing, deadline
@@ -42,9 +50,10 @@ counter/EWMA/ledger bookkeeping (``commit_class``/``end_tick``).  Only the
 O(pixels) work (normalize, resample, score, scatter, conv forward) and the
 admit *threshold* (a compare against the host-owned per-lane thresholds,
 shipped in as data) move into the fused dispatch.  Churn — join/leave/
-fail/rebind — therefore works exactly as in serial mode; a dead replica's
-rows ride along with an all-False lane mask and its host phases are
-skipped, so shapes never change and nothing recompiles.
+fail/rebind/tier-migration — therefore works exactly as in serial mode; a
+dead (or standby) replica's rows ride along with an all-False lane mask
+and its host phases are skipped, so shapes never change and nothing
+recompiles.
 
 Under virtual clocks (``repro.simulate``) the parallel tick is
 bit-identical to the serial tick: same admit decisions, same ledger
@@ -54,7 +63,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -105,77 +114,92 @@ def _stack_trees(trees: Sequence[dict]):
 
 
 @functools.lru_cache(maxsize=None)
-def _build_fused(mode: str, mesh, n_replicas: int, dc, pc, input_res: int,
-                 use_pallas: bool, use_gate: bool, gate_res: int,
-                 block: int, interpret: bool):
-    """Build (and memoise) the fused fleet-tick jit for one geometry.
+def _build_fused(mode: str, mesh, members: Tuple[Tuple[int, ...], ...],
+                 group_keys: tuple, use_pallas: bool, use_gate: bool,
+                 gate_res: int, block: int, interpret: bool):
+    """Build (and memoise) the fused fleet-tick jit for one fleet layout.
 
-    Keyed on everything the closure captures — mode/mesh/replica count,
-    model configs, resolutions, gate geometry, kernel path — so repeated
-    ``FleetStep`` construction (bench repeats, test sweeps, gateway
-    rebuilds) reuses one compiled XLA program instead of recompiling per
-    instance.  Model params are call arguments, never captured."""
+    Keyed on everything the closure captures — mode/mesh, the tier-group
+    layout (``members`` = replica indices per group, ``group_keys`` =
+    each group's (dc, pc, input_res, dtype)), gate geometry, kernel
+    path — so repeated ``FleetStep`` construction (bench repeats, test
+    sweeps, gateway rebuilds) reuses one compiled XLA program instead of
+    recompiling per instance.  Model params are call arguments, never
+    captured."""
     if use_pallas:
         from repro.kernels import vision_ops
-    R = n_replicas
+    R = sum(len(m) for m in members)
 
-    def one_class(forward, batch, stage, refs, thr, href, act):
-        """Single replica, single model class — mirrors the device
-        half of ``VisionServeEngine._step_class`` exactly."""
-        if use_pallas:
-            if use_gate:
-                model, small, scores = vision_ops.ingest_frame(
-                    stage, refs, model_res=input_res, gate_res=gate_res,
-                    block=block, interpret=interpret)
-                admit = act & ((scores > thr) | ~href)
-                batch, refs = vision_ops.scatter_admit(
-                    batch, model, refs, small, admit, interpret=interpret)
+    def make_single(dc, pc, input_res):
+        """Per-group single-replica tick body (both classes, no replica
+        axis) — mirrors the device half of
+        ``VisionServeEngine._step_class`` exactly, at this group's model
+        geometry."""
+
+        def one_class(forward, batch, stage, refs, thr, href, act):
+            if use_pallas:
+                if use_gate:
+                    model, small, scores = vision_ops.ingest_frame(
+                        stage, refs, model_res=input_res, gate_res=gate_res,
+                        block=block, interpret=interpret)
+                    admit = act & ((scores > thr) | ~href)
+                    batch, refs = vision_ops.scatter_admit(
+                        batch, model, refs, small, admit,
+                        interpret=interpret)
+                else:
+                    model = vision_ops.downscale(stage, input_res,
+                                                 interpret=interpret)
+                    admit = act
+                    batch, _ = vision_ops.scatter_admit(
+                        batch, model, refs, refs, admit,
+                        interpret=interpret)
             else:
-                model = vision_ops.downscale(stage, input_res,
-                                             interpret=interpret)
-                admit = act
-                batch, _ = vision_ops.scatter_admit(
-                    batch, model, refs, refs, admit, interpret=interpret)
-        else:
-            # the one masked-scatter expression the bit-parity contract
-            # rests on — shared with the engine's serial host-staging path
-            batch = _scatter_stage_impl(batch, stage, act)
-            if use_gate:
-                small = V.downscale(sfilter._normalize(batch), gate_res)
-                scores = sfilter._block_sad_jnp(refs, small, block)
-                admit = act & ((scores > thr) | ~href)
-                refs = sfilter._gate_update(refs, small, admit)
-            else:
-                admit = act
-        return admit, forward(batch), batch, refs
+                # the one masked-scatter expression the bit-parity
+                # contract rests on — shared with the engine's serial
+                # host-staging path
+                batch = _scatter_stage_impl(batch, stage, act)
+                if use_gate:
+                    small = V.downscale(sfilter._normalize(batch), gate_res)
+                    scores = sfilter._block_sad_jnp(refs, small, block)
+                    admit = act & ((scores > thr) | ~href)
+                    refs = sfilter._gate_update(refs, small, admit)
+                else:
+                    admit = act
+            return admit, forward(batch), batch, refs
 
-    def single(ops: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-        """One replica's whole tick (both classes), no replica axis."""
-        dp, pp = ops["dp"], ops["pp"]
+        def single(ops: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+            dp, pp = ops["dp"], ops["pp"]
 
-        def fwd_outer(batch):
-            flags, _ = V.analyse_outer(dc, dp, batch)
-            return flags.any(axis=1)                    # (slots,)
+            def fwd_outer(batch):
+                flags, _ = V.analyse_outer(dc, dp, batch)
+                return flags.any(axis=1)                    # (slots,)
 
-        def fwd_inner(batch):
-            distracted, _ = V.analyse_inner(pc, pp, batch)
-            return distracted
+            def fwd_inner(batch):
+                distracted, _ = V.analyse_inner(pc, pp, batch)
+                return distracted
 
-        out: Dict[str, jax.Array] = {}
-        for kind, forward in ((OUTER, fwd_outer), (INNER, fwd_inner)):
-            admit, flags, batch, refs = one_class(
-                forward, ops[f"batch_{kind}"], ops["stage"],
-                ops[f"refs_{kind}"], ops[f"thr_{kind}"],
-                ops[f"href_{kind}"], ops[f"act_{kind}"])
-            out[f"admit_{kind}"] = admit
-            out[f"flags_{kind}"] = flags
-            out[f"batch_{kind}"] = batch
-            if use_gate:
-                out[f"refs_{kind}"] = refs
-        return out
+            out: Dict[str, jax.Array] = {}
+            for kind, forward in ((OUTER, fwd_outer), (INNER, fwd_inner)):
+                admit, flags, batch, refs = one_class(
+                    forward, ops[f"batch_{kind}"], ops["stage"],
+                    ops[f"refs_{kind}"], ops[f"thr_{kind}"],
+                    ops[f"href_{kind}"], ops[f"act_{kind}"])
+                out[f"admit_{kind}"] = admit
+                out[f"flags_{kind}"] = flags
+                out[f"batch_{kind}"] = batch
+                if use_gate:
+                    out[f"refs_{kind}"] = refs
+            return out
+
+        return single
+
+    singles = [make_single(dc, pc, ires)
+               for (dc, pc, ires, _dtype) in group_keys]
 
     if mode == "shard_map":
+        assert len(singles) == 1, "shard_map requires one tier group"
         spec = PartitionSpec("replica")
+        single = singles[0]
 
         def shard_body(ops):
             # each device holds a size-1 replica block: index it away,
@@ -183,32 +207,48 @@ def _build_fused(mode: str, mesh, n_replicas: int, dc, pc, input_res: int,
             res = single(jax.tree_util.tree_map(lambda x: x[0], ops))
             return jax.tree_util.tree_map(lambda x: x[None], res)
 
-        mapped = _shard_map()(shard_body, mesh=mesh, in_specs=spec,
-                              out_specs=spec, check_rep=False)
+        mapped = [_shard_map()(shard_body, mesh=mesh, in_specs=spec,
+                               out_specs=spec, check_rep=False)]
     else:
-        mapped = jax.vmap(single)
+        mapped = [jax.vmap(s) for s in singles]
 
-    def fused(ops):
-        """Stack per-replica state, run the mapped tick, hand back the
-        engine-owned arrays unstacked — so the host round-trip costs
-        zero eager dispatches either side of the one jit call."""
-        stacked = {"dp": ops["dp"], "pp": ops["pp"],
-                   "stage": jnp.asarray(ops["stage"])}
-        for k in ("thr", "href", "act"):
-            for kind in (OUTER, INNER):
-                stacked[f"{k}_{kind}"] = jnp.asarray(ops[f"{k}_{kind}"])
-        for k in ("batch", "refs"):
-            for kind in (OUTER, INNER):
-                stacked[f"{k}_{kind}"] = jnp.stack(ops[f"{k}_{kind}"])
-        out = mapped(stacked)
+    # replica order of the group-concatenated rows, and its inverse: the
+    # gather that restores replica order for the fleet-wide mask output
+    concat = np.concatenate([np.asarray(m, int) for m in members])
+    inv = np.argsort(concat)
+
+    def fused(gops):
+        """Stack per-group state, run each group's mapped tick, hand back
+        the engine-owned arrays per replica — so the host round-trip
+        costs zero eager dispatches either side of the one jit call."""
+        outs = []
+        for g, ops in enumerate(gops):
+            stacked = {"dp": ops["dp"], "pp": ops["pp"],
+                       "stage": jnp.asarray(ops["stage"])}
+            for k in ("thr", "href", "act"):
+                for kind in (OUTER, INNER):
+                    stacked[f"{k}_{kind}"] = jnp.asarray(ops[f"{k}_{kind}"])
+            for k in ("batch", "refs"):
+                for kind in (OUTER, INNER):
+                    stacked[f"{k}_{kind}"] = jnp.stack(ops[f"{k}_{kind}"])
+            outs.append(mapped[g](stacked))
         # one (4, R, slots) bool mask output = one host transfer for
-        # everything the commit loop reads
-        res = {"masks": jnp.stack(
-            [out[f"admit_{OUTER}"], out[f"admit_{INNER}"],
-             out[f"flags_{OUTER}"], out[f"flags_{INNER}"]])}
-        for key, v in out.items():
-            if not key.startswith(("admit", "flags")):
-                res[key] = tuple(v[i] for i in range(R))
+        # everything the commit loop reads, whatever the tier mix
+        masks = jnp.concatenate(
+            [jnp.stack([out[f"admit_{OUTER}"], out[f"admit_{INNER}"],
+                        out[f"flags_{OUTER}"], out[f"flags_{INNER}"]])
+             for out in outs], axis=1)[:, inv]
+        res = {"masks": masks}
+        per_rep: Dict[str, list] = {}
+        for g, out in enumerate(outs):
+            for key, v in out.items():
+                if key.startswith(("admit", "flags")):
+                    continue
+                rows = per_rep.setdefault(key, [None] * R)
+                for j, i in enumerate(members[g]):
+                    rows[i] = v[j]
+        for key, rows in per_rep.items():
+            res[key] = tuple(rows)
         return res
 
     return jax.jit(fused)
@@ -224,7 +264,10 @@ class FleetStep:
         self.replicas: List[VisionServeEngine] = list(replicas)
         ref = self.replicas[0]
         for r in self.replicas:
-            for attr in ("slots", "frame_res", "input_res", "use_pallas"):
+            # fleet-wide uniform: slot width, source frame geometry, and
+            # kernel path.  Model geometry (dc/pc/input_res/batch dtype)
+            # may differ per replica — those split into tier groups below.
+            for attr in ("slots", "frame_res", "use_pallas"):
                 if getattr(r, attr) != getattr(ref, attr):
                     raise ValueError(
                         f"fleet-parallel tick needs uniform engine geometry: "
@@ -233,9 +276,6 @@ class FleetStep:
             if (r.gates[OUTER] is None) != (ref.gates[OUTER] is None):
                 raise ValueError("fleet-parallel tick needs a uniform "
                                  "use_gate setting across replicas")
-            if r.dc != ref.dc or r.pc != ref.pc:
-                raise ValueError("fleet-parallel tick needs identical model "
-                                 "configs across replicas")
         self.slots = ref.slots
         self.use_pallas = ref.use_pallas
         self.use_gate = ref.gates[OUTER] is not None
@@ -252,26 +292,57 @@ class FleetStep:
         else:
             self.gate_res, self.block = 1, 8
         R = len(self.replicas)
+        # tier groups: replicas sharing one model geometry map together.
+        # Grouping is by first appearance, so a uniform fleet is exactly
+        # one group in replica order (the pre-tier layout).
+        sigs = [(r.dc, r.pc, r.input_res, str(r.batches[OUTER].dtype))
+                for r in self.replicas]
+        self._group_keys: List[tuple] = []
+        self._members: List[List[int]] = []
+        for i, sig in enumerate(sigs):
+            if sig in self._group_keys:
+                self._members[self._group_keys.index(sig)].append(i)
+            else:
+                self._group_keys.append(sig)
+                self._members.append([i])
         self.mode = resolve_mode(R, mode)
+        if len(self._members) > 1 and self.mode == "shard_map":
+            if mode == "shard_map":
+                raise ValueError(
+                    "shard_map maps one program over the replica mesh and "
+                    "cannot mix tier geometries; mixed-tier fleets run "
+                    "mode='vmap'")
+            self.mode = "vmap"          # auto-resolved: fall back quietly
         self.mesh = (make_mesh((R,), ("replica",))
                      if self.mode == "shard_map" else None)
-        # one pinned fleet staging buffer; each engine's _stage is a view
-        # of its replica row, so the host never copies frames again and
-        # the fused call uploads the whole fleet's staging in one piece
-        self._stage_all = np.zeros(
-            (R, self.slots, ref.frame_res, ref.frame_res, 3), np.float32)
-        for i, r in enumerate(self.replicas):
-            r.enable_host_staging()
-            r._stage = self._stage_all[i]
-        # engines never retrain: stack the per-replica model params once
-        self._dp = _stack_trees([r.dp for r in self.replicas])
-        self._pp = _stack_trees([r.pp for r in self.replicas])
+        # one pinned staging buffer per tier group; each engine's _stage
+        # is a view of its group row, so the host never copies frames
+        # again and the fused call uploads each group's staging in one
+        # piece (frames always arrive at the uniform frame_res, f32)
+        self._stage_groups: List[np.ndarray] = []
+        for g, mem in enumerate(self._members):
+            buf = np.zeros((len(mem), self.slots, ref.frame_res,
+                            ref.frame_res, 3), np.float32)
+            self._stage_groups.append(buf)
+            for j, i in enumerate(mem):
+                r = self.replicas[i]
+                r.enable_host_staging()
+                r._stage = buf[j]
+        # engines never retrain: stack the per-group model params once
+        self._dp = [_stack_trees([self.replicas[i].dp for i in mem])
+                    for mem in self._members]
+        self._pp = [_stack_trees([self.replicas[i].pp for i in mem])
+                    for mem in self._members]
         # gateless ref/scatter operands keep a fixed (tiny) shape
-        self._null_refs = tuple(
-            jnp.zeros((self.slots, self.gate_res, self.gate_res, 3),
-                      jnp.float32) for _ in range(R))
-        self._zeros_rs = np.zeros((R, self.slots), np.float32)
-        self._false_rs = np.zeros((R, self.slots), bool)
+        self._null_refs = [
+            tuple(jnp.zeros((self.slots, self.gate_res, self.gate_res, 3),
+                            jnp.float32) for _ in mem)
+            for mem in self._members]
+        self._zeros_gs = [np.zeros((len(mem), self.slots), np.float32)
+                          for mem in self._members]
+        self._false_gs = [np.zeros((len(mem), self.slots), bool)
+                          for mem in self._members]
+        self._mem_idx = [np.asarray(mem, int) for mem in self._members]
         self._fused = self._build()
         self.dispatches = 0            # fused device dispatches issued
         self.last_dispatch_s = 0.0     # wall time of the last fused call
@@ -284,43 +355,49 @@ class FleetStep:
     def _build(self):
         ref = self.replicas[0]
         return _build_fused(
-            self.mode, self.mesh, len(self.replicas), ref.dc, ref.pc,
-            ref.input_res, self.use_pallas, self.use_gate, self.gate_res,
-            self.block, ref._interpret if self.use_pallas else False)
+            self.mode, self.mesh,
+            tuple(tuple(m) for m in self._members),
+            tuple(self._group_keys),
+            self.use_pallas, self.use_gate, self.gate_res, self.block,
+            ref._interpret if self.use_pallas else False)
 
     # ------------------------------------------------------------------
     # host orchestration
     # ------------------------------------------------------------------
-    def _gather(self, act: Dict[str, np.ndarray]) -> Dict[str, object]:
-        """Collect per-replica engine state for the fused call (tuples of
+    def _gather(self, act: Dict[str, np.ndarray]) -> List[Dict[str, object]]:
+        """Collect per-group engine state for the fused call (tuples of
         device arrays + host numpy masks; stacking happens inside the jit).
         """
-        ops: Dict[str, object] = {"dp": self._dp, "pp": self._pp}
-        ops["stage"] = self._stage_all
-        for kind in (OUTER, INNER):
-            ops[f"batch_{kind}"] = tuple(
-                r.batches[kind] for r in self.replicas)
-            if self.use_gate:
-                ops[f"refs_{kind}"] = tuple(
-                    r.gates[kind].refs for r in self.replicas)
-                ops[f"thr_{kind}"] = np.stack(
-                    [r.gates[kind].thresh for r in self.replicas])
-                ops[f"href_{kind}"] = np.stack(
-                    [r.gates[kind].has_ref for r in self.replicas])
-            else:
-                ops[f"refs_{kind}"] = self._null_refs
-                ops[f"thr_{kind}"] = self._zeros_rs
-                ops[f"href_{kind}"] = self._false_rs
-            ops[f"act_{kind}"] = act[kind]
-        return ops
+        gops: List[Dict[str, object]] = []
+        for g, mem in enumerate(self._members):
+            ops: Dict[str, object] = {"dp": self._dp[g], "pp": self._pp[g],
+                                      "stage": self._stage_groups[g]}
+            for kind in (OUTER, INNER):
+                ops[f"batch_{kind}"] = tuple(
+                    self.replicas[i].batches[kind] for i in mem)
+                if self.use_gate:
+                    ops[f"refs_{kind}"] = tuple(
+                        self.replicas[i].gates[kind].refs for i in mem)
+                    ops[f"thr_{kind}"] = np.stack(
+                        [self.replicas[i].gates[kind].thresh for i in mem])
+                    ops[f"href_{kind}"] = np.stack(
+                        [self.replicas[i].gates[kind].has_ref for i in mem])
+                else:
+                    ops[f"refs_{kind}"] = self._null_refs[g]
+                    ops[f"thr_{kind}"] = self._zeros_gs[g]
+                    ops[f"href_{kind}"] = self._false_gs[g]
+                ops[f"act_{kind}"] = act[kind][self._mem_idx[g]]
+            gops.append(ops)
+        return gops
 
     def _warm(self) -> None:
         """Compile the fused tick at construction (all-inactive masks, the
         exact shapes/dtypes every later tick uses) so churn mid-run never
         observes a compile — the same never-recompile contract the serial
         engines keep."""
-        act = {OUTER: np.array(self._false_rs),
-               INNER: np.array(self._false_rs)}
+        R = len(self.replicas)
+        act = {OUTER: np.zeros((R, self.slots), bool),
+               INNER: np.zeros((R, self.slots), bool)}
         jax.block_until_ready(self._fused(self._gather(act)))
 
     def tick(self, gw) -> int:

@@ -21,7 +21,14 @@ the paper's paired-download protocol, scaled out.  The gateway:
     measured tokens/s), :meth:`tick` steps token replicas alongside the
     vision fleet (in both serial and mesh-parallel modes), and finished
     requests flush into the same shared ledger — one scheduling
-    substrate, heterogeneous analytics classes.
+    substrate, heterogeneous analytics classes;
+  * **trades accuracy for latency** (``tiering``): replicas may advertise
+    a model tier (``streams.tiers``); a :class:`~repro.streams.tiers.
+    TierDirector` then runs at the top of every tick, migrating streams
+    across tiers under backlog/deadline pressure (:meth:`migrate_stream`
+    — the detach/adopt state travel of :meth:`fail_replica`, so gate
+    thresholds, ordinals, and event spools survive) and activating /
+    retiring ``standby`` replicas from sustained fleet pressure.
 """
 from __future__ import annotations
 
@@ -125,7 +132,8 @@ class FleetGateway:
                  fleet_mode: Optional[str] = None,
                  token_replicas: Sequence["ServeEngine"] = (),
                  metrics=None, tracer=None,
-                 events: Optional["EventPlane"] = None) -> None:
+                 events: Optional["EventPlane"] = None,
+                 tiering=None, standby: Sequence[str] = ()) -> None:
         if not replicas:
             raise ValueError("need at least one engine replica")
         if deadline_ms > 0 and not any(r.policy.enabled for r in replicas):
@@ -162,6 +170,29 @@ class FleetGateway:
         self.refused = 0
         self.rebinds: List[Tuple[str, str, str]] = []  # (key, from, to)
         self.closed: List[SegmentRecord] = []
+
+        # model-tier control plane (``streams.tiers``): the director runs
+        # at the top of every tick; ``standby`` replicas start parked —
+        # dead to placement, rows riding the fused tick with all-False
+        # masks — until sustained pressure scales them out
+        self.tiering = tiering
+        if tiering is not None:
+            for r in self.replicas:
+                if r.tier is None:
+                    raise ValueError(
+                        f"tiering enabled but replica {r.name!r} "
+                        f"advertises no tier (VisionServeEngine(tier=...))")
+                tiering.register(r.name, r.tier)
+        for sb in standby:
+            if sb not in self._by_name:
+                raise KeyError(f"standby replica {sb!r} is not in the fleet")
+            self.dead.add(sb)
+            self.sched.down.add(sb)
+            w = self.sched.by_name(sb)
+            w.busy_until_ms = float("inf")
+            w.queue_len = 10 ** 9
+            if tiering is not None:
+                tiering.add_standby(sb)
         # parallel=True fuses every live replica's device work into one
         # mesh-parallel dispatch per tick (streams.fleet_step); host-side
         # churn/placement/bookkeeping above is identical in both modes
@@ -420,6 +451,45 @@ class FleetGateway:
         self.sched.down.discard(name)
         self._sync_load(now_ms)       # re-derives the worker's free state
 
+    def migrate_stream(self, sess: StreamSession, target: str,
+                       now_ms: float = 0.0) -> dict:
+        """Move one live stream to another live replica (tier up/downshift).
+
+        The same detach/adopt state travel :meth:`fail_replica` performs
+        per orphan — counters, backlog, the adapted gate threshold, and
+        the event spool all move — plus the session bookkeeping (capacity
+        credits, assignment rewrite, scheduler commit, rebind log).
+        Returns a migration record with the gate threshold and consumed
+        ordinal on both sides, which the simulator's ``gate-travel`` /
+        ``tier-migration`` invariants certify."""
+        from repro.streams.tiers import stream_thresh
+        src = sess.engine
+        if target == src:
+            raise ValueError(f"stream {sess.key!r} is already on {target!r}")
+        if target not in self._by_name:
+            raise KeyError(target)
+        if src in self.dead or target in self.dead:
+            raise ValueError(f"migrate {sess.key!r}: {src!r} -> {target!r} "
+                             f"must both be live")
+        src_eng = self._by_name[src]
+        dst_eng = self._by_name[target]
+        thresh_before = stream_thresh(src_eng, sess.key)
+        ordinal_before = src_eng.streams[sess.key].consumed
+        st = src_eng.detach_stream(sess.key)
+        dst_eng.adopt_stream(st)
+        sess.engine = target
+        sess.assignment = Assignment(sess.assignment.segment, target)
+        sess.credit_frames = st.processed
+        sess.credit_ms = st.processing_ms
+        self._sync_load(now_ms)
+        self.sched.commit(sess.assignment, busy_until_ms=now_ms)
+        self.rebinds.append((sess.key, src, target))
+        return {"key": sess.key, "src": src, "dst": target,
+                "thresh_before": thresh_before,
+                "thresh_after": stream_thresh(dst_eng, sess.key),
+                "ordinal_before": ordinal_before,
+                "ordinal_after": st.consumed}
+
     def backlog(self, vehicle: str) -> int:
         """Frames still queued across the vehicle's two streams."""
         return sum(len(self._by_name[s.engine].streams[s.key].pending)
@@ -527,6 +597,11 @@ class FleetGateway:
         identical host phases, identical accounting, bit-identical results
         under virtual clocks.  Token replicas (if any) are stepped in both
         modes; the return value counts frames + tokens served."""
+        if self.tiering is not None:
+            # the tier control round runs before any engine work, reading
+            # only host state — so serial and mesh-parallel fleets make
+            # identical migration/scale decisions
+            self.tiering.step(self)
         if self._fleet is not None:
             done = self._fleet.tick(self)
         else:

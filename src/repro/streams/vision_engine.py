@@ -59,6 +59,7 @@ from repro.core.engine_core import INNER, OUTER, EngineCore, LanePool
 from repro.core.telemetry import Ledger, SegmentRecord
 from repro.models import vision as V
 from repro.streams.filter import MotionGate
+from repro.streams.tiers import TierSpec, resolve_tier
 
 
 def _load_impl(batch, frame, lane):
@@ -134,11 +135,19 @@ class VisionServeEngine(EngineCore):
                  use_pallas: bool = False,
                  pallas_interpret: Optional[bool] = None,
                  max_pending: int = 256, quantum: int = 32,
+                 tier=None,
                  ledger: Optional[Ledger] = None,
                  clock: Optional[Clock] = None,
                  rng: Optional[jax.Array] = None) -> None:
         super().__init__(name, slots=slots, eda=eda, ledger=ledger,
                          clock=clock)
+        # a tier (name or TierSpec) pins the replica's model resolution
+        # and batch-pool dtype; the explicit input_res is ignored so a
+        # replica can never advertise one tier and serve another
+        self.tier: Optional[TierSpec] = None
+        if tier is not None:
+            self.tier = resolve_tier(tier)
+            input_res = self.tier.input_res
         self.frame_res = frame_res
         self.input_res = input_res
         self.use_pallas = use_pallas
@@ -158,8 +167,10 @@ class VisionServeEngine(EngineCore):
         # and lets the model jit downscale internally
         res = input_res if use_pallas else frame_res
         shape = (slots, res, res, 3)
-        self.batches = {OUTER: jnp.zeros(shape, jnp.float32),
-                        INNER: jnp.zeros(shape, jnp.float32)}
+        batch_dtype = (self.tier.jnp_dtype() if self.tier is not None
+                       else jnp.float32)
+        self.batches = {OUTER: jnp.zeros(shape, batch_dtype),
+                        INNER: jnp.zeros(shape, batch_dtype)}
         if use_pallas:
             from repro.kernels import vision_ops
             self._vk = vision_ops
@@ -387,6 +398,10 @@ class VisionServeEngine(EngineCore):
     def has_work(self) -> bool:
         return any(st.pending for st in self.streams.values())
 
+    def backlog_units(self) -> int:
+        """Frames queued across every stream (the core pressure signal)."""
+        return sum(len(st.pending) for st in self.streams.values())
+
     def stats(self) -> dict:
         """Serving-loop telemetry (throughput vs latency cost estimators)."""
         return {
@@ -415,12 +430,15 @@ class VisionServeEngine(EngineCore):
             st.dropped += 1
             st.deadline_dropped += 1
             trimmed += 1
-        if trimmed and self.emitter is not None:
-            # one deadline-miss event per trim batch (cooldown suppresses
-            # sustained-pressure spam); the ordinal names the first frame
-            # sacrificed, so the id is stable under replay
-            self.emitter.emit(st.key, DEADLINE_MISS, first_ord,
-                              emit_s=self.clock.now_s(), n=trimmed)
+        if trimmed:
+            self.note_deadline_drops(trimmed)
+            if self.emitter is not None:
+                # one deadline-miss event per trim batch (cooldown
+                # suppresses sustained-pressure spam); the ordinal names
+                # the first frame sacrificed, so the id is stable under
+                # replay
+                self.emitter.emit(st.key, DEADLINE_MISS, first_ord,
+                                  emit_s=self.clock.now_s(), n=trimmed)
 
     def rebalance(self) -> None:
         """Tick-start lane rebalancing (the core's ``begin_tick`` hook —

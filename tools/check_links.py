@@ -1,0 +1,99 @@
+"""Intra-repo markdown link checker (stdlib only — runs in CI with no
+installs).  Scans the repo's markdown surface for ``[text](target)``
+links and fails loudly when a relative target does not exist on disk,
+so README/docs cross-references cannot rot silently as files move.
+
+    python tools/check_links.py            # check the default doc set
+    python tools/check_links.py a.md b.md  # check specific files
+
+Rules:
+  * ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+  * pure ``#fragment`` targets are skipped (same-file anchors);
+  * a ``#fragment`` suffix on a file target is stripped before the
+    existence check (anchor validity is not checked — file moves are
+    the rot mode this guards against, not heading renames);
+  * fenced code blocks are ignored (ASCII diagrams contain ``](``-free
+    bracket art, but better safe);
+  * relative targets resolve against the markdown file's own directory.
+
+Exit status 0 when every link resolves, 1 with a listing otherwise.
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# default surface: top-level markdown + the docs/ and benchmarks/ sets
+DEFAULT_GLOBS = ["*.md", "docs/*.md", "benchmarks/*.md"]
+
+# [text](target) — non-greedy text, target up to the first unescaped ')'
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(md: Path):
+    """Yield (lineno, target) for every markdown link outside fences."""
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    for lineno, target in iter_links(md):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            try:
+                shown = md.relative_to(REPO)
+            except ValueError:       # explicit file outside the repo
+                shown = md
+            broken.append((shown, lineno, target))
+    return broken
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    if args:
+        files = [Path(a).resolve() for a in args]
+    else:
+        files = sorted({Path(p).resolve()
+                        for pat in DEFAULT_GLOBS
+                        for p in glob.glob(str(REPO / pat))})
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"no such file: {f}", file=sys.stderr)
+        return 1
+
+    broken = []
+    for md in files:
+        broken.extend(check_file(md))
+    print(f"checked {len(files)} file(s)")
+    if broken:
+        for rel, lineno, target in broken:
+            print(f"BROKEN  {rel}:{lineno}  -> {target}")
+        print(f"{len(broken)} broken link(s)", file=sys.stderr)
+        return 1
+    print("all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
