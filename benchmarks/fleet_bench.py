@@ -441,6 +441,104 @@ def event_plane(rows, repeats: int = 3):
         f"{plane.sink.accepted_count}/{n_events} accepted")
 
 
+def _region_drain(n_cells: int, per_cell: int, n_vehicles: int,
+                  frames: int, parallel: bool):
+    """Drive a hierarchical cell/region gateway and drain it once."""
+    from repro.core.telemetry import Ledger
+    from repro.streams.cells import CellGateway, RegionGateway
+    cells = []
+    for c in range(n_cells):
+        replicas = [VisionServeEngine(f"c{c}r{i}", slots=4, frame_res=RES,
+                                      input_res=16, fps=FPS, use_gate=True,
+                                      rng=jax.random.key(8 * c + i))
+                    for i in range(per_cell)]
+        cells.append(CellGateway(f"cell{c}", replicas, overcommit=2.0,
+                                 ledger=Ledger(aggregate=True),
+                                 parallel=parallel))
+    gw = RegionGateway(cells)
+    src = DashCamSource(granularity_s=frames / FPS, fps=FPS, res=RES,
+                        seed=13)
+    clips = [src.pair(v) for v in range(n_vehicles)]
+    for v in range(n_vehicles):
+        gw.join(f"v{v:03d}")
+    for v, pair in enumerate(clips):
+        for outer, inner in zip(pair.outer[:frames], pair.inner[:frames]):
+            gw.push(f"v{v:03d}", outer, inner)
+    t0 = time.perf_counter()
+    done = gw.drain()
+    wall = time.perf_counter() - t0
+    outcome = []
+    for v in range(n_vehicles):
+        for rec in gw.leave(f"v{v:03d}"):
+            outcome.append((rec.video_id, rec.stream, rec.frames_processed,
+                            rec.frames_gated))
+    rollup = gw.rollup()
+    rollup.check()
+    return done, wall, sorted(outcome)
+
+
+def fleet_scale(rows, repeats: int = 2):
+    """Hierarchical control plane: bounded host time per frame at scale.
+
+    Two columns.  ``fleet_host_us_per_frame_{8,64}r`` drains the same
+    per-vehicle workload through one 8-replica cell vs 8 cells x 8
+    replicas with 8x the vehicles (the ``streams.cells`` region path,
+    fused cell ticks) and reports wall us per offered frame — the
+    sublinearity bar is **64r <= 2x 8r**: if any per-tick host path were
+    still O(fleet) instead of O(cell), the 8x-fleet figure would blow
+    straight past it.  ``fleet_scale_parity`` runs a shrunk ``city_scale``
+    scenario (4 cells x 2 replicas, scripted replica failure forcing
+    cross-cell handoffs) serial vs mesh-parallel and demands identical
+    golden-trace digests with zero invariant violations — the hierarchy
+    must not fork the digest contract the flat gateway certifies.
+    """
+    print("\n== hierarchical fleet scale: host us/frame, 8r vs 64r ==")
+    frames = 6
+    shapes = {8: (1, 8, 16), 64: (8, 8, 128)}
+    us = {}
+    for n_rep, (n_cells, per_cell, n_veh) in shapes.items():
+        offered = n_veh * 2 * frames
+        _region_drain(n_cells, per_cell, n_veh, frames, True)  # warm
+        best = None
+        for _ in range(repeats):
+            done, wall, _ = _region_drain(n_cells, per_cell, n_veh,
+                                          frames, True)
+            if best is None or wall < best[1]:
+                best = (done, wall)
+        us[n_rep] = 1e6 * best[1] / offered
+        print(f"{n_rep:2d} replicas ({n_cells} cells x {per_cell}): "
+              f"{us[n_rep]:8.1f} us/offered-frame   "
+              f"inferred {best[0]}/{offered}   {best[1] * 1000:.0f} ms")
+        rows.append((f"fleet_host_us_per_frame_{n_rep}r", us[n_rep],
+                     "us_per_offered_frame"))
+    ratio = us[64] / us[8]
+    print(f"scale ratio (64r / 8r per-frame host time): {ratio:.2f}x "
+          f"(bar: <= 2.0x)")
+    assert ratio <= 2.0, (
+        f"per-frame host time grew {ratio:.2f}x from 8 to 64 replicas — "
+        f"an O(fleet) host path is back")
+
+    from repro.simulate import get_scenario, run_scenario
+    from repro.simulate.scenario import ScriptedEvent, city_replicas
+    s = get_scenario(
+        "city_scale",
+        replicas=city_replicas(cells=4, per_cell=2, slots=4),
+        initial_vehicles=40, max_vehicles=60, ticks=12,
+        scripted=(ScriptedEvent(3, "fail_replica", "c0r0"),
+                  ScriptedEvent(9, "restore_replica", "c0r0")))
+    ser = run_scenario(s)
+    par = run_scenario(s, parallel=True)
+    parity = (not ser.violations and not par.violations
+              and ser.digest == par.digest)
+    print(f"cell-granular serial vs parallel digest parity: "
+          f"{'OK' if parity else 'MISMATCH'} ({ser.digest[:12]})")
+    rows.append(("fleet_scale_parity", float(parity), "1=identical"))
+    assert parity, (
+        f"hierarchical digests diverged: serial {ser.digest} "
+        f"parallel {par.digest} violations {ser.violations} "
+        f"{par.violations}")
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     batching_scaling(rows)
@@ -449,6 +547,7 @@ def main(rows=None):
     ingest_path(rows)
     parallel_fleet(rows)
     mixed_tier_fleet(rows)
+    fleet_scale(rows)
     obs_overhead(rows)
     event_plane(rows)
     return rows

@@ -46,6 +46,7 @@ GATE_RULES = [
     ("fleet_ingest_parity", "equal", 0.0, 0.0),
     ("fleet_obs_parity", "equal", 0.0, 0.0),
     ("fleet_event_parity", "equal", 0.0, 0.0),
+    ("fleet_scale_parity", "equal", 0.0, 0.0),
     ("scenario_soak_deterministic", "equal", 0.0, 0.0),
     ("scenario_soak_violations", "equal", 0.0, 0.0),
     # obs-overhead wall ratio: generous tolerance (tiny CPU workload,
@@ -80,6 +81,10 @@ GATE_RULES = [
     ("fleet_parallel_fps", "higher", 0.75, 0.0),
     ("fleet_mixed_tier_fps", "higher", 0.75, 0.0),
     ("fleet_slots", "lower", 2.0, 0.0),
+    # hierarchical host time per frame: absolute wall on a CI runner, so
+    # catastrophic-only — the in-bench 64r <= 2x 8r sublinearity assert
+    # is the hard bar
+    ("fleet_host_us_per_frame", "lower", 3.0, 0.0),
     ("fleet_streams", "higher", 0.75, 0.0),
     ("fleet_ingest_", "higher", 0.75, 0.0),
     ("ingest_cpu_3pass", "lower", 3.0, 0.0),

@@ -19,6 +19,11 @@ obs plane only reads clocks), so what you watch IS the golden behaviour.
 view; the default appends snapshots.  ``--trace`` dumps the Perfetto/
 chrome://tracing JSON at the end; ``--metrics`` dumps the Prometheus
 text exposition.
+
+Hierarchical scenarios (``city_scale``: 64 replicas in 8 cells) render
+bounded: one aggregate row per cell plus the ``--top-k``
+highest-pressure replicas — the repaint stays O(cells + K), not
+O(fleet), so ``--follow`` keeps up at 10k streams.
 """
 import argparse
 
@@ -42,6 +47,9 @@ def main() -> None:
                     help="trace 1 tick in N (1 = trace every tick)")
     ap.add_argument("--follow", action="store_true",
                     help="redraw in place (ANSI) instead of appending")
+    ap.add_argument("--top-k", type=int, default=8,
+                    help="replica rows to keep when the snapshot is "
+                         "bounded (hierarchical or 64+ replica fleets)")
     ap.add_argument("--trace", default="", metavar="PATH",
                     help="write the Chrome trace-event JSON here at the "
                          "end (open in https://ui.perfetto.dev)")
@@ -70,7 +78,8 @@ def main() -> None:
             return
         energy = {name: (v.energy_j, v.profile.battery_j)
                   for name, v in r.vehicles.items()}
-        fs = FleetStatus.from_gateway(r.gw, vehicle_energy=energy)
+        fs = FleetStatus.from_gateway(r.gw, vehicle_energy=energy,
+                                      top_k=args.top_k)
         if args.follow:
             print("\x1b[H\x1b[2J", end="")
         print(f"=== {scenario.name} @ tick {tick}/{scenario.ticks} ===")

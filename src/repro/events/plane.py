@@ -64,6 +64,12 @@ class EventEmitter:
         self.plane = plane
         self.owner = owner
         self.streams: Dict[str, _StreamEvents] = {}
+        # pump index: keys whose spool may hold work (pending OR
+        # inflight).  ``record_frame`` creates per-stream state for every
+        # consumed frame — at city scale that is 10k+ entries — but only
+        # streams that actually emitted need a delivery round, so the
+        # pump walks this set instead of ``streams``
+        self.dirty: set = set()
 
     def _state(self, key: str) -> _StreamEvents:
         st = self.streams.get(key)
@@ -103,6 +109,7 @@ class EventEmitter:
                 ev.clip_digest = clip_digest(clip)
                 ev.evidence = clip
         st.spool.append(ev)
+        self.dirty.add(key)
         self.plane._note_emit(ev)
         return ev
 
@@ -119,6 +126,10 @@ class EventEmitter:
         if st.spool.depth == 0:
             self.plane._retire_spool(st.spool)
             del self.streams[key]
+            self.dirty.discard(key)
+        else:
+            # still draining: the pump retires it once depth hits zero
+            self.dirty.add(key)
 
     # ------------------------------------------------------------------
     # failure-rebind state travel
@@ -128,6 +139,7 @@ class EventEmitter:
         inflight sends rewind to pending — the origin replica is gone, so
         their acks can never arrive (classic at-least-once rewind)."""
         st = self.streams.pop(key, None)
+        self.dirty.discard(key)
         if st is None:
             return None
         st.spool.on_partition()
@@ -144,6 +156,8 @@ class EventEmitter:
         st.last_emit = state["last_emit"]
         st.ring = state["ring"]
         self.streams[key] = st
+        if st.spool.depth:
+            self.dirty.add(key)
 
     def depth(self) -> int:
         return sum(st.spool.depth for st in self.streams.values())
@@ -199,6 +213,8 @@ class EventPlane:
             for key, st in em.streams.items():
                 if key.split("/", 1)[0] == vehicle:
                     rewound += st.spool.on_partition()
+                    if st.spool.depth:
+                        em.dirty.add(key)   # pump after reconnect
         return rewound
 
     def reconnect(self, vehicle: str) -> None:
@@ -214,33 +230,43 @@ class EventPlane:
         self.rounds += 1
         sent = accepted = dups = 0
         for em in self.emitters:
-            for key in sorted(em.streams):
+            # walk the dirty index, not every stream: only keys with
+            # spooled work need a round.  A skipped key has depth 0 —
+            # nothing to ack, nothing to deliver — so skipping it cannot
+            # change delivery order (the walk stays sorted) or outcome,
+            # and the digest parity tests pin exactly that
+            drained = []
+            for key in sorted(em.dirty):
                 st = em.streams[key]
                 spool = st.spool
                 if key.split("/", 1)[0] in self.partitioned:
-                    continue
+                    continue          # stays dirty; pumps after reconnect
                 spool.ack_inflight()
-                if not spool.ready(self.rounds):
-                    continue
-                while spool.pending:
-                    ev = spool.pending[0]
-                    try:
-                        ok = self.sink.deliver(ev)
-                    except SinkUnavailable:
-                        spool.on_send_failure(self.rounds)
-                        break
-                    spool.pending.popleft()
-                    spool.mark_sent(ev)
-                    spool.on_send_success()
-                    sent += 1
-                    accepted += ok
-                    dups += not ok
-            # drop closed streams once fully drained (incl. acked): soak
-            # runs must not grow emitter state with churned-away vehicles
-            for key in [k for k, st in em.streams.items()
-                        if st.spool.closed and st.spool.depth == 0]:
-                self._retire_spool(em.streams[key].spool)
-                del em.streams[key]
+                if spool.ready(self.rounds):
+                    while spool.pending:
+                        ev = spool.pending[0]
+                        try:
+                            ok = self.sink.deliver(ev)
+                        except SinkUnavailable:
+                            spool.on_send_failure(self.rounds)
+                            break
+                        spool.pending.popleft()
+                        spool.mark_sent(ev)
+                        spool.on_send_success()
+                        sent += 1
+                        accepted += ok
+                        dups += not ok
+                if spool.depth == 0:
+                    drained.append(key)
+            # drained keys leave the index; drained AND closed streams
+            # retire entirely — soak runs must not grow emitter state
+            # with churned-away vehicles
+            for key in drained:
+                em.dirty.discard(key)
+                st = em.streams[key]
+                if st.spool.closed:
+                    self._retire_spool(st.spool)
+                    del em.streams[key]
         if self.metrics is not None and sent:
             self.metrics.counter(
                 "events_delivered_total",
@@ -299,6 +325,13 @@ class EventPlane:
                 self._retire_spool(state["spool"])
             else:
                 home.adopt(key, state)
-            home.streams[key].spool.closed = True
+            st = home.streams[key]
+            st.spool.closed = True
+            if st.spool.depth:
+                home.dirty.add(key)
+            else:                      # nothing to drain: retire now
+                self._retire_spool(st.spool)
+                del home.streams[key]
+                home.dirty.discard(key)
             moved += 1
         return moved

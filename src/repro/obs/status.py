@@ -74,23 +74,41 @@ class FleetStatus:
     tiers: Dict[str, dict] = field(default_factory=dict)
     last_shift: Optional[dict] = None
     last_scale: Optional[dict] = None
+    # hierarchical fleets (streams.cells): one aggregate row per cell,
+    # cross-cell handoff count, and the full fleet size when the replica
+    # rows below are a bounded top-K selection
+    cells: Dict[str, dict] = field(default_factory=dict)
+    handoffs: int = 0
+    total_replicas: int = 0
 
     # ------------------------------------------------------------------
     @classmethod
     def from_gateway(cls, gw, *,
                      vehicle_energy: Optional[Dict[str, Tuple[float, float]]]
-                     = None) -> "FleetStatus":
+                     = None, top_k: int = 8) -> "FleetStatus":
         """Snapshot a live :class:`~repro.streams.gateway.FleetGateway`
-        (plus its token replicas, if any).  ``vehicle_energy`` maps
-        vehicle name -> (energy_spent_j, battery_budget_j)."""
+        or :class:`~repro.streams.cells.RegionGateway` (plus token
+        replicas, if any).  ``vehicle_energy`` maps vehicle name ->
+        (energy_spent_j, battery_budget_j).
+
+        The snapshot stays bounded at fleet scale: hierarchical gateways
+        (and flat fleets past 64 replicas) keep one aggregate row per
+        cell and only the ``top_k`` highest-pressure replicas
+        (backlog + waiting) as individual rows — a 64-replica snapshot
+        renders in the same space as an 8-replica one."""
         replicas = []
         ev = getattr(gw, "events", None)
 
+        # one pass over the emitters — the per-replica closure used to
+        # rescan every emitter per replica, O(replicas x emitters)
+        depth_by_owner: Dict[str, int] = {}
+        if ev is not None:
+            for em in ev.emitters:
+                depth_by_owner[em.owner] = (
+                    depth_by_owner.get(em.owner, 0) + em.depth())
+
         def _spool_depth(name: str) -> int:
-            if ev is None:
-                return 0
-            return sum(em.depth() for em in ev.emitters
-                       if em.owner == name)
+            return depth_by_owner.get(name, 0)
 
         for r in gw.replicas:
             gates = [g for g in r.gates.values() if g is not None]
@@ -162,6 +180,30 @@ class FleetStatus:
                     agg["slots"] += r.slots
             last_shift = director.last_shift
             last_scale = director.last_scale
+        cells: Dict[str, dict] = {}
+        gw_cells = getattr(gw, "cells", None)
+        if gw_cells is not None:
+            for cell in gw_cells:
+                live = cell.live_replicas()
+                cells[cell.cell_name] = dict(
+                    replicas=len(cell.replicas), live=len(live),
+                    sessions=cell.active_streams(),
+                    slots=cell.capacity(),
+                    bound=sum(r.bound_count for r in live),
+                    backlog=sum(len(st.pending) for r in live
+                                for st in r.streams.values()),
+                    waiting=sum(len(r.waiting) for r in live),
+                    refused=cell.refused, rebinds=len(cell.rebinds),
+                    load=round(cell.load_factor(), 4))
+        total_replicas = len(replicas)
+        if (gw_cells is not None or total_replicas > 64) \
+                and total_replicas > top_k:
+            # bounded rows: the highest-pressure replicas are the ones
+            # an operator is looking for; the cell rows keep the rest
+            replicas.sort(
+                key=lambda r: (-(r.backlog + r.waiting), r.name))
+            replicas = replicas[:top_k]
+        ledger = gw.ledger
         return cls(
             replicas=replicas,
             sessions=len(gw.sessions),
@@ -170,10 +212,12 @@ class FleetStatus:
             fused_dispatches=gw._fleet.dispatches if gw._fleet else 0,
             jit_cache=jit_cache_entries(),
             token_done=len(gw.token_done),
-            ledger_records=len(gw.ledger),
-            ledger_energy_j=gw.ledger.totals["energy_j"],
+            ledger_records=int(ledger.totals["records"]),
+            ledger_energy_j=ledger.totals["energy_j"],
             vehicle_energy=dict(vehicle_energy or {}),
             tiers=tiers, last_shift=last_shift, last_scale=last_scale,
+            cells=cells, handoffs=len(getattr(gw, "handoffs", ())),
+            total_replicas=total_replicas,
             **evt_counts)
 
     # ------------------------------------------------------------------
@@ -211,6 +255,9 @@ class FleetStatus:
             "tiers": self.tiers,
             "last_shift": self.last_shift,
             "last_scale": self.last_scale,
+            "cells": self.cells,
+            "handoffs": self.handoffs,
+            "total_replicas": self.total_replicas,
         }
 
     def render(self) -> str:
@@ -220,6 +267,10 @@ class FleetStatus:
                 f"{'served':>7s} {'unit_ms':>8s} {'tick_ms':>8s} "
                 f"{'gate_thresh (min/mean/max)':26s}")
         lines = [head, "-" * len(head)]
+        if self.total_replicas > len(self.replicas):
+            lines.append(f"(top {len(self.replicas)} of "
+                         f"{self.total_replicas} replicas by pressure; "
+                         f"cell rows aggregate the rest)")
         for r in self.replicas:
             state = "DEAD" if r.dead else "live"
             gate = ("-" if r.gate_thresh is None else
@@ -246,6 +297,14 @@ class FleetStatus:
                 f"{self.events_suppressed} suppressed  "
                 f"spool={self.events_spool_depth}  "
                 f"overflow={self.events_overflow}")
+        if self.cells:
+            lines.append("cells: " + "  ".join(
+                f"{name}[{agg['live']}/{agg['replicas']}r "
+                f"{agg['sessions']}sess load={agg['load']:.2f} "
+                f"bkl={agg['backlog']} reb={agg['rebinds']}]"
+                for name, agg in sorted(self.cells.items())))
+            if self.handoffs:
+                lines.append(f"handoffs: {self.handoffs} cross-cell")
         if self.tiers:
             lines.append("tiers: " + "  ".join(
                 f"{name}[{agg['live']}l/{agg['standby']}s "

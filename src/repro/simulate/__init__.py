@@ -22,9 +22,10 @@ from repro.simulate.invariants import (InvariantSuite, Violation,  # noqa: F401
 from repro.simulate.runner import (ScenarioResult, ScenarioRunner,  # noqa: F401
                                    build_fleet, build_token_replicas,
                                    run_scenario)
-from repro.simulate.scenario import (SCENARIOS, ReplicaSpec,  # noqa: F401
-                                     Scenario, ScriptedEvent,
-                                     TokenReplicaSpec, TokenWorkload,
-                                     VehicleProfile, get_scenario,
+from repro.simulate.scenario import (SCENARIOS, CellPlanSpec,  # noqa: F401
+                                     ReplicaSpec, Scenario,
+                                     ScriptedEvent, TokenReplicaSpec,
+                                     TokenWorkload, VehicleProfile,
+                                     city_replicas, get_scenario,
                                      list_scenarios)
 from repro.simulate.trace import Event, Trace  # noqa: F401

@@ -44,7 +44,18 @@ the paper's transient-fleet claim rests on:
   tier p95       (tiered scenarios with a bound) the fleet's p95 stream
                  turnaround stays under the scenario's declared
                  ``p95_bound_ms`` — the paper's bounded-latency claim
-                 under spike load.
+                 under spike load;
+  cell placement (hierarchical scenarios) the region's O(1) vehicle→cell
+                 routing map and the cells' session books agree — a
+                 handoff never loses, duplicates, or mis-routes a
+                 vehicle;
+  cell handoff   a cross-cell handoff preserves each moved stream's gate
+                 threshold bit-identically and never rewinds its
+                 consumed-frame ordinal;
+  cell conserv.  every cell's ledger passes its own conservation check
+                 and the region roll-up (``Ledger.merge_from`` over the
+                 cells) holds exactly the sum of the cell totals and
+                 sketch observations.
 
 ``docs/INVARIANTS.md`` catalogues each invariant with its precise
 property statement and the test/CI job that enforces it.
@@ -78,9 +89,11 @@ from repro.obs.probes import jit_cache_entries as jit_cache_sizes  # noqa: E402,
 class InvariantSuite:
     """Online + final invariant checks for one scenario run."""
 
-    def __init__(self, gw: FleetGateway, *, tiers=None) -> None:
+    def __init__(self, gw: FleetGateway, *, tiers=None,
+                 cells=None) -> None:
         self.gw = gw
         self.tiers = tiers        # the scenario's TierPlanSpec, or None
+        self.cells = cells        # the scenario's CellPlanSpec, or None
         self.violations: List[Violation] = []
 
     def _flag(self, tick: int, invariant: str, detail: str) -> None:
@@ -99,6 +112,36 @@ class InvariantSuite:
             self._check_events(tick)
         if self.gw.tiering is not None:
             self._check_tiers(tick)
+        if self.cells is not None:
+            self._check_cells(tick)
+
+    def _check_cells(self, tick: int) -> None:
+        """Hierarchical placement conservation: the region's O(1) routing
+        map and the cells' session books agree — every placed vehicle
+        lives in exactly the cell the region thinks it does, no cell
+        holds a vehicle the region forgot, and no vehicle appears in two
+        cells (a handoff that lost or duplicated a session would flag
+        here the tick it happened)."""
+        gw = self.gw
+        seen: dict = {}
+        for cell in gw.cells:
+            for vehicle in cell.sessions:
+                if vehicle in seen:
+                    self._flag(tick, "cell-placement",
+                               f"vehicle {vehicle} appears in cells "
+                               f"{seen[vehicle]} and {cell.cell_name}")
+                seen[vehicle] = cell.cell_name
+        placed = {v: c.cell_name for v, c in gw.placements.items()}
+        if placed != seen:
+            extra = set(placed) - set(seen)
+            missing = set(seen) - set(placed)
+            moved = {v for v in set(placed) & set(seen)
+                     if placed[v] != seen[v]}
+            self._flag(tick, "cell-placement",
+                       f"region routing disagrees with cell books: "
+                       f"routed-but-unplaced={sorted(extra)[:4]} "
+                       f"placed-but-unrouted={sorted(missing)[:4]} "
+                       f"wrong-cell={sorted(moved)[:4]}")
 
     def _check_tiers(self, tick: int) -> None:
         """Tier conservation: the director's view of the fleet matches
@@ -229,8 +272,14 @@ class InvariantSuite:
     # event-driven checks
     # ------------------------------------------------------------------
     def on_join(self, tick: int, admitted: bool, active_before: int,
-                capacity: int, overcommit: float) -> None:
-        fits = active_before + 2 <= capacity * overcommit
+                capacity: int, overcommit: float,
+                fits: bool = None) -> None:
+        """``fits`` overrides the flat-fleet arithmetic: a hierarchical
+        region admits per cell, so region-total ``active+2 <= cap*oc``
+        can hold while every individual cell is full (fragmentation) —
+        the runner passes the region's own admission predicate."""
+        if fits is None:
+            fits = active_before + 2 <= capacity * overcommit
         if admitted and not fits:
             self._flag(tick, "capacity",
                        f"admission past overcommit: {active_before}+2 > "
@@ -239,6 +288,25 @@ class InvariantSuite:
             self._flag(tick, "capacity",
                        f"spurious refusal: {active_before}+2 <= "
                        f"{capacity}*{overcommit}")
+
+    def on_handoff(self, tick: int, rec: dict) -> None:
+        """Cross-cell handoff state-travel: for every moved stream the
+        adaptive gate threshold is bit-identical across the move and the
+        consumed-frame ordinal never goes backwards — a handoff replays
+        nothing and loses nothing, exactly like a failure rebind."""
+        for st in rec["streams"]:
+            tb, ta = st["thresh_before"], st["thresh_after"]
+            if not (tb is None and ta is None) and tb != ta:
+                self._flag(tick, "cell-handoff",
+                           f"{st['key']} threshold changed across "
+                           f"{rec['src_cell']}->{rec['dst_cell']}: "
+                           f"{tb} -> {ta}")
+            if st["ordinal_after"] < st["ordinal_before"]:
+                self._flag(tick, "cell-handoff",
+                           f"{st['key']} consumed ordinal went backwards "
+                           f"across {rec['src_cell']}->"
+                           f"{rec['dst_cell']}: {st['ordinal_before']} "
+                           f"-> {st['ordinal_after']}")
 
     def on_rebind(self, tick: int, key: str, thresh_before,
                   thresh_after) -> None:
@@ -288,6 +356,8 @@ class InvariantSuite:
                        f"ledger offered {offered} != frames pushed "
                        f"{pushes} — a push vanished unaccounted")
         self._check_metrics(tick, ledger)
+        if self.cells is not None:
+            self._finalize_cells(tick, ledger)
         if self.gw.token_replicas:
             for e in self.gw.token_replicas:
                 if getattr(e, "paged", False) and e.block_pool.used_blocks:
@@ -313,6 +383,38 @@ class InvariantSuite:
             self._flag(tick, "recompile",
                        f"jit caches grew after warmup: "
                        f"{cache_after_warmup} -> {cache_now}")
+
+    def _finalize_cells(self, tick: int, ledger: Ledger) -> None:
+        """Cell-level ledger conservation: every cell's own ledger passes
+        its conservation check, and the region roll-up
+        (``Ledger.merge_from`` over the cells) holds exactly the sum of
+        the cell totals and the sum of the cell sketch observations — the
+        replica->cell->region aggregation path loses and invents
+        nothing."""
+        cell_totals: dict = {}
+        sketch_counts: dict = {}
+        for cell in self.gw.cells:
+            try:
+                cell.ledger.check()
+            except AssertionError as e:
+                self._flag(tick, "cell-conservation",
+                           f"cell {cell.cell_name}: {e}")
+            for k, v in cell.ledger.totals.items():
+                cell_totals[k] = cell_totals.get(k, 0) + v
+            for m, sk in cell.ledger.sketches.items():
+                sketch_counts[m] = sketch_counts.get(m, 0) + sk.count
+        for k, v in cell_totals.items():
+            got = ledger.totals.get(k, 0)
+            if abs(got - v) > 1e-6 * max(1.0, abs(v)):
+                self._flag(tick, "cell-conservation",
+                           f"region total {k}={got} but cells sum to "
+                           f"{v} — the roll-up lost or invented work")
+        for m, want in sketch_counts.items():
+            got = ledger.sketches[m].count
+            if got != want:
+                self._flag(tick, "cell-conservation",
+                           f"region {m} sketch holds {got} observations "
+                           f"but cells hold {want}")
 
     def _finalize_events(self, tick: int) -> None:
         """At-least-once conservation after the end-of-run flush: every

@@ -40,6 +40,7 @@ from repro.simulate.invariants import InvariantSuite, Violation, \
 from repro.simulate.scenario import (FLOPS_PER_FRAME, TICK_OVERHEAD_MS,
                                      Scenario, VehicleProfile)
 from repro.simulate.trace import Trace
+from repro.streams.cells import CellGateway, RegionGateway
 from repro.streams.gateway import FleetGateway
 from repro.streams.tiers import TierDirector, resolve_tier, stream_thresh
 from repro.streams.vision_engine import VisionServeEngine
@@ -283,6 +284,10 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
                         evidence_frames=es.evidence_frames,
                         backoff_cap=es.backoff_cap),
             DedupSink(), metrics=metrics)
+    if scenario.cells is not None:
+        return _build_region(scenario, replicas, events=events,
+                             parallel=parallel, fleet_mode=fleet_mode,
+                             metrics=metrics, tracer=tracer)
     gw = FleetGateway(replicas, deadline_ms=scenario.deadline_ms,
                       overcommit=scenario.overcommit,
                       parallel=parallel, fleet_mode=fleet_mode,
@@ -296,6 +301,64 @@ def build_fleet(scenario: Scenario, *, parallel: bool = False,
         gw.sched.by_name(spec.name).hw = spec.hw
     for spec in scenario.token_replicas:
         gw.token_sched.by_name(spec.name).hw = spec.hw
+    return gw
+
+
+def _build_region(scenario: Scenario, replicas: List[VisionServeEngine],
+                  *, events, parallel: bool, fleet_mode: Optional[str],
+                  metrics, tracer) -> RegionGateway:
+    """Hierarchical build path (``Scenario.cells``): group the already-
+    constructed engines by ``ReplicaSpec.cell`` into CellGateways — each
+    with its own aggregate-mode ledger and (when tiered) its own
+    cell-local TierDirector — under one RegionGateway sharing a single
+    event plane.  The runtime gauges register once, against the region,
+    so the probe closures span every cell."""
+    if scenario.token_replicas:
+        raise ValueError("Scenario.cells does not compose with "
+                         "token_replicas: the region control plane "
+                         "places vision sessions only")
+    cp = scenario.cells
+    tiered = scenario.tiers is not None
+    by_cell: Dict[str, List[Tuple["ReplicaSpec", VisionServeEngine]]] = {}
+    for spec, eng in zip(scenario.replicas, replicas):
+        by_cell.setdefault(spec.cell or "cell0", []).append((spec, eng))
+    cells = []
+    for cname in sorted(by_cell):
+        members = by_cell[cname]
+        cell_tiering = None
+        if tiered:
+            tp = scenario.tiers
+            cell_tiering = TierDirector(
+                down_pressure=tp.down_pressure, up_slack=tp.up_slack,
+                window=tp.window, cooldown=tp.cooldown,
+                max_burst=tp.max_burst,
+                scale_out_pressure=tp.scale_out_pressure,
+                scale_in_slack=tp.scale_in_slack,
+                scale_window=tp.scale_window,
+                deadline_ms=scenario.deadline_ms)
+        cells.append(CellGateway(
+            cname, [eng for _, eng in members],
+            deadline_ms=scenario.deadline_ms,
+            overcommit=scenario.overcommit,
+            ledger=Ledger(aggregate=cp.aggregate_ledgers,
+                          rel_err=cp.rel_err),
+            parallel=parallel, fleet_mode=fleet_mode,
+            metrics=metrics, tracer=tracer, events=events,
+            tiering=cell_tiering,
+            standby=tuple(spec.name for spec, _ in members
+                          if tiered and spec.standby)))
+    gw = RegionGateway(cells, events=events,
+                       pump_budget=cp.pump_budget,
+                       rebalance_margin=cp.rebalance_margin,
+                       metrics=metrics, tracer=tracer)
+    for spec in scenario.replicas:
+        gw.sched.by_name(spec.name).hw = spec.hw
+    if metrics is not None:
+        # last registration wins the probe closures: the per-cell
+        # gateways each registered cell-scoped gauges above; re-register
+        # against the region so exposition spans the whole hierarchy
+        from repro.obs.probes import register_runtime_gauges
+        register_runtime_gauges(metrics, gw)
     return gw
 
 
@@ -315,7 +378,8 @@ class ScenarioRunner:
                               fleet_mode=fleet_mode,
                               metrics=metrics, tracer=tracer)
         self.trace = Trace()
-        self.inv = InvariantSuite(self.gw, tiers=scenario.tiers)
+        self.inv = InvariantSuite(self.gw, tiers=scenario.tiers,
+                                  cells=scenario.cells)
         self.energy = EnergyModel()
         self.rng = np.random.default_rng(scenario.seed)
         self.vehicles: Dict[str, _Vehicle] = {}
@@ -359,9 +423,14 @@ class ScenarioRunner:
         name = f"v{self._counter:03d}"
         profile = self.s.profiles[self._counter % len(self.s.profiles)]
         act, cap = self.gw.active_streams(), self.gw.capacity()
+        # hierarchical fleets admit per cell: region-total arithmetic can
+        # say a pair fits while every individual cell is full, so the
+        # spurious-refusal check asks the region's admission predicate
+        fits = (self.gw.can_admit()
+                if self.s.cells is not None else None)
         pair = self.gw.join(name, now_ms=float(tick))
         self.inv.on_join(tick, pair is not None, act, cap,
-                         self.s.overcommit)
+                         self.s.overcommit, fits=fits)
         if pair is None:
             self.trace.emit(tick, "refuse", veh=name, act=act, cap=cap)
             return
@@ -471,6 +540,23 @@ class ScenarioRunner:
             if veh.energy_j >= veh.profile.battery_j:
                 self._leave(tick, name, "battery")
 
+    def _trace_handoffs(self, tick: int) -> None:
+        """Drain the region's cross-cell handoff log: every record runs
+        through the gate-travel/ordinal invariant and lands in the trace
+        (one ``handoff`` event per moved stream)."""
+        for rec in self.gw.drain_handoffs():
+            self.inv.on_handoff(tick, rec)
+            for st in rec["streams"]:
+                self.trace.emit(
+                    tick, "handoff", veh=rec["vehicle"],
+                    key=st["key"], src_cell=rec["src_cell"],
+                    dst_cell=rec["dst_cell"], src=st["src"],
+                    dst=st["dst"],
+                    thresh=(-1.0 if st["thresh_after"] is None
+                            else st["thresh_after"]),
+                    ordinal=st["ordinal_after"],
+                    spool=st["spool_depth"])
+
     # ------------------------------------------------------------------
     # token workload (mixed vision+token scenarios)
     # ------------------------------------------------------------------
@@ -559,6 +645,10 @@ class ScenarioRunner:
                             self.trace.emit(
                                 tick, "rebind", key=key, src=src, dst=dst,
                                 thresh=-1.0 if ta is None else ta)
+            if self.s.cells is not None:
+                # emitted only for hierarchical scenarios, so flat-fleet
+                # trace digests are untouched by the region extension
+                self._trace_handoffs(tick)
             if self.gw.token_replicas:
                 # emitted only for mixed scenarios, so vision-only trace
                 # digests are untouched by the token extension
@@ -581,6 +671,8 @@ class ScenarioRunner:
                 on_tick(tick, self)
         # drain + close every survivor so the ledger holds the whole run
         self.gw.drain(max_ticks=4 * s.ticks + 64)
+        if s.cells is not None:      # drain ticks can still rebalance
+            self._trace_handoffs(s.ticks)
         if self.gw.token_replicas:
             self._harvest_requests(s.ticks)
         if self.gw.events is not None:

@@ -53,13 +53,19 @@ class ReplicaSpec:
     ignored and the replica serves the scenario-wide ``input_res`` at
     float32 — so untiered scenario digests are untouched by the fields'
     existence.  A standby replica starts parked (dead to placement) and
-    joins the fleet only when the autoscaler activates it."""
+    joins the fleet only when the autoscaler activates it.
+
+    ``cell`` only takes effect when the scenario declares a
+    :class:`CellPlanSpec` (``Scenario.cells``): replicas sharing a cell
+    name form one :class:`~repro.streams.cells.CellGateway` mesh under a
+    region gateway.  Without a cell plan the field is ignored."""
     name: str
     slots: int = 4
     hw: HardwareInfo = field(default_factory=HardwareInfo)
     frame_cost_ms: Optional[float] = None    # explicit override
     tier: str = "base"                       # streams.tiers.TIERS key
     standby: bool = False
+    cell: str = ""                           # CellPlanSpec grouping key
 
     def virtual_frame_cost_ms(self) -> float:
         if self.frame_cost_ms is not None:
@@ -163,6 +169,22 @@ class TierPlanSpec:
 
 
 @dataclass(frozen=True)
+class CellPlanSpec:
+    """Declarative hierarchical control plane: turning this on groups
+    replicas by ``ReplicaSpec.cell`` into
+    :class:`~repro.streams.cells.CellGateway` meshes under one
+    :class:`~repro.streams.cells.RegionGateway` — per-cell ledgers in
+    aggregate sketch mode rolled up via ``Ledger.merge_from``, bounded
+    region rebalance rounds, one shared event plane pumped once per
+    region tick.  Off (``Scenario.cells = None``) the hierarchy does not
+    exist and scenario digests are byte-identical to flat-fleet builds."""
+    pump_budget: int = 2            # cells inspected per rebalance round
+    rebalance_margin: float = 0.25  # load-factor gap before a handoff
+    aggregate_ledgers: bool = True  # per-cell Ledger(aggregate=True)
+    rel_err: float = 0.01           # sketch quantile relative error
+
+
+@dataclass(frozen=True)
 class ScriptedEvent:
     # action: fail_replica | restore_replica (vision OR token replica)
     #         | partition_vehicle | reconnect_vehicle (uplink, needs events)
@@ -206,6 +228,10 @@ class Scenario:
     # untouched); a spec activates ReplicaSpec.tier/standby and attaches
     # a TierDirector (AIMD migration + standby autoscaling)
     tiers: Optional[TierPlanSpec] = None
+    # hierarchical control plane: None keeps today's flat FleetGateway
+    # (digests untouched); a spec groups replicas by ReplicaSpec.cell
+    # into CellGateways under a RegionGateway (streams.cells)
+    cells: Optional[CellPlanSpec] = None
     description: str = ""
 
 
@@ -542,3 +568,38 @@ def soak_churn() -> Scenario:
         description="The 2k-tick invariant soak: heterogeneous replicas, "
                     "Poisson churn, bursts, battery departures, two "
                     "fail/restore cycles, gating and deadlines at once.")
+
+
+def city_replicas(cells: int, per_cell: int,
+                  slots: int = 16) -> Tuple[ReplicaSpec, ...]:
+    """Uniform hierarchical fleet: ``cells`` cells of ``per_cell``
+    replicas each, named ``c<cell>r<idx>`` in cell ``cell<cell>``."""
+    return tuple(ReplicaSpec(f"c{c}r{r}", slots=slots, cell=f"cell{c}")
+                 for c in range(cells) for r in range(per_cell))
+
+
+@_scenario
+def city_scale() -> Scenario:
+    return Scenario(
+        name="city_scale", seed=77, ticks=20,
+        # 64 virtual replicas in 8 cells, 1024 slots; overcommit 12x
+        # bounds the region at 12288 streams — 5100 vehicles (10200
+        # streams) load every cell to ~83% of its own bound
+        replicas=city_replicas(cells=8, per_cell=8, slots=16),
+        profiles=(VehicleProfile(duplicate_prob=0.9),),
+        initial_vehicles=5100, join_rate=0.0, leave_rate=0.0,
+        max_vehicles=6000, overcommit=12.0,
+        use_gate=True, frame_res=16, input_res=8, fps=30,
+        max_pending=4, warmup_ticks=2,
+        # organic cross-cell handoffs: failing one replica shrinks its
+        # cell's bound below occupancy, so the region's bounded
+        # rebalance rounds migrate vehicles out until it recovers
+        scripted=(ScriptedEvent(6, "fail_replica", "c0r0"),
+                  ScriptedEvent(14, "restore_replica", "c0r0"),),
+        events=EventPlaneSpec(cooldown_frames=64, spool_cap=16,
+                              evidence_frames=0),
+        cells=CellPlanSpec(pump_budget=2, rebalance_margin=0.1),
+        description="City scale: 10k+ streams over 64 virtual replicas "
+                    "in 8 cells under a region gateway — aggregate "
+                    "ledger roll-up, bounded rebalance, cross-cell "
+                    "handoff under replica failure.")

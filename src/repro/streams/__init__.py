@@ -10,7 +10,11 @@
   fleet_step     mesh-parallel fleet tick: all replicas' device work in one
                  shard_map dispatch over a ("replica",) mesh (vmap fallback
                  on a single device) — FleetGateway(parallel=True)
+  cells          hierarchical control plane: CellGateway meshes under a
+                 RegionGateway — per-cell host paths, bounded region
+                 rebalance, cross-cell handoff with full state travel
 """
+from repro.streams.cells import CellGateway, RegionGateway  # noqa: F401
 from repro.streams.filter import GateStats, MotionGate, block_sad  # noqa: F401
 from repro.streams.fleet_step import FleetStep, resolve_mode  # noqa: F401
 from repro.streams.gateway import FleetGateway, StreamSession  # noqa: F401

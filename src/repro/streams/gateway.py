@@ -585,7 +585,7 @@ class FleetGateway:
     # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
-    def tick(self) -> int:
+    def tick(self, *, pump_events: bool = True) -> int:
         """Step every live replica once; feed measured frames/s back into
         the scheduler's capacity EWMAs (the HW_INFO -> measurement
         handoff).  Timing reads each replica's own clock, so a simulated
@@ -596,7 +596,13 @@ class FleetGateway:
         device work in one fused mesh dispatch (``streams.fleet_step``) —
         identical host phases, identical accounting, bit-identical results
         under virtual clocks.  Token replicas (if any) are stepped in both
-        modes; the return value counts frames + tokens served."""
+        modes; the return value counts frames + tokens served.
+
+        ``pump_events=False`` skips the event-plane delivery round: the
+        hierarchical control plane (``streams.cells``) shares ONE plane
+        across many cell gateways, and the region must pump it exactly
+        once per region tick — per-cell pumps would multiply the backoff
+        round counter and the delivery cadence."""
         if self.tiering is not None:
             # the tier control round runs before any engine work, reading
             # only host state — so serial and mesh-parallel fleets make
@@ -615,7 +621,7 @@ class FleetGateway:
                 done += n
             if self.token_replicas:
                 done += self._tick_tokens()
-        if self.events is not None:
+        if self.events is not None and pump_events:
             # one delivery round per gateway tick, after all engine work
             # — shared by both modes so attaching the plane cannot fork
             # serial vs mesh-parallel traces

@@ -1,0 +1,353 @@
+"""Hierarchical control plane (``streams.cells``): cell/region
+placement, cross-cell handoff state travel, ledger roll-up
+conservation, bounded status snapshots, and the city_scale scenario.
+
+The load-bearing properties:
+
+  * a cross-cell handoff moves a vehicle's whole session pair with full
+    state travel — adapted gate thresholds bit-identical, consumed
+    ordinals monotone, spooled events delivered at-least-once from the
+    destination cell;
+  * the region's O(1) routing map and the cells' session books never
+    disagree (one cell per vehicle, always);
+  * per-cell aggregate ledgers roll up to the region via
+    ``Ledger.merge_from`` without losing or inventing work;
+  * within each cell the serial and mesh-parallel tick paths stay
+    bit-identical — the hierarchy must not fork the digest contract.
+"""
+import numpy as np
+import pytest
+
+from repro.core.telemetry import Ledger
+from repro.events import DedupSink, EventConfig, EventPlane
+from repro.events.envelope import HAZARD
+from repro.obs import FleetStatus
+from repro.simulate import get_scenario, run_scenario
+from repro.simulate.scenario import ScriptedEvent, city_replicas
+from repro.streams import CellGateway, RegionGateway, VisionServeEngine
+from repro.streams.tiers import stream_thresh
+from repro.streams.vision_engine import OUTER
+
+
+# ---------------------------------------------------------------------------
+# direct gateway-level fixtures
+# ---------------------------------------------------------------------------
+
+RES = 16
+
+
+def _engine(name: str, slots: int = 4) -> VisionServeEngine:
+    import jax
+    return VisionServeEngine(name, slots=slots, frame_res=RES,
+                             input_res=8, fps=10,
+                             rng=jax.random.key(hash(name) % 1000))
+
+
+def _region(n_cells: int = 3, per_cell: int = 2, *, events=None,
+            overcommit: float = 2.0, **kw):
+    cells = [
+        CellGateway(f"cell{i}",
+                    [_engine(f"c{i}r{j}") for j in range(per_cell)],
+                    overcommit=overcommit,
+                    ledger=Ledger(aggregate=True), events=events)
+        for i in range(n_cells)]
+    return RegionGateway(cells, events=events, **kw)
+
+
+def _frames(seed: int = 0, n: int = 1):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((RES, RES, 3)).astype(np.float32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_region_places_by_free_capacity_one_cell_per_vehicle():
+    rg = _region()
+    for v in range(6):
+        assert rg.join(f"v{v}") is not None
+    # 3 cells x (4+4 slots x 2.0 overcommit) = room for plenty; the
+    # most-free heuristic spreads pairs across all cells
+    assert len({c.cell_name for c in rg.placements.values()}) == 3
+    seen = {}
+    for cell in rg.cells:
+        for veh in cell.sessions:
+            assert veh not in seen, "vehicle in two cells"
+            seen[veh] = cell.cell_name
+    assert seen == {v: c.cell_name for v, c in rg.placements.items()}
+    assert rg.active_streams() == 12
+
+
+def test_region_refuses_only_when_no_cell_fits():
+    rg = _region(n_cells=2, per_cell=1, overcommit=1.0)
+    # each cell: 4 slots x 1.0 — two pairs per cell
+    admitted = 0
+    while rg.join(f"v{admitted}") is not None:
+        admitted += 1
+    assert admitted == 4
+    assert not rg.can_admit()
+    assert rg.refused == 1
+    rg.leave("v0")
+    assert rg.can_admit()
+    assert rg.join("again") is not None
+
+
+def test_region_routes_push_and_backlog_through_placement():
+    rg = _region()
+    rg.join("v0")
+    (f,) = _frames()
+    rg.push("v0", f, f)
+    assert rg.backlog("v0") == 2          # one pending frame per stream
+    cell = rg.placements["v0"]
+    assert rg.cell_of("v0") == cell.cell_name
+    rg.drain(50)
+    recs = rg.leave("v0")
+    assert len(recs) == 2
+    assert "v0" not in rg.placements
+
+
+# ---------------------------------------------------------------------------
+# cross-cell handoff: full state travel
+# ---------------------------------------------------------------------------
+
+def _adapted_region_with_traffic(events=None):
+    """A region where v0 has processed frames (gate adapted, ordinals
+    advanced) — the interesting state a handoff must carry."""
+    rg = _region(events=events)
+    rg.join("v0")
+    rg.join("v1")
+    for i in range(4):
+        (f,) = _frames(i)
+        rg.push("v0", f, f)
+        rg.push("v1", f, f)
+        rg.tick()
+    rg.drain(100)               # settle: organic emissions all pumped
+    if events is not None:
+        events.flush()
+    return rg
+
+
+def test_handoff_preserves_gate_thresholds_and_ordinals():
+    rg = _adapted_region_with_traffic()
+    src = rg.placements["v0"]
+    dst = next(c for c in rg.cells if c is not src)
+    before = {}
+    for sess in src.sessions["v0"]:
+        eng = src._by_name[sess.engine]
+        before[sess.key] = (stream_thresh(eng, sess.key),
+                            eng.streams[sess.key].consumed)
+    rec = rg.handoff("v0", dst.cell_name, now_ms=5.0)
+    assert rec["src_cell"] == src.cell_name
+    assert rec["dst_cell"] == dst.cell_name
+    assert len(rec["streams"]) == 2
+    for st in rec["streams"]:
+        tb, ord_b = before[st["key"]]
+        assert st["thresh_before"] == tb
+        assert st["thresh_after"] == tb, "gate threshold lost in handoff"
+        assert st["ordinal_before"] == ord_b
+        assert st["ordinal_after"] >= ord_b, "consumed ordinal rewound"
+        # the stream now lives on a destination-cell engine
+        eng = dst._by_name[st["dst"]]
+        assert st["key"] in eng.streams
+        assert stream_thresh(eng, st["key"]) == tb
+    assert "v0" not in src.sessions
+    assert rg.placements["v0"] is dst
+    # work continues in the new cell
+    (f,) = _frames(9)
+    rg.push("v0", f, f)
+    rg.drain(50)
+    rg.leave("v0")
+    rg.leave("v1")
+    rg.rollup().check()
+
+
+def test_handoff_to_full_cell_refuses_loudly():
+    rg = _region(n_cells=2, per_cell=1, overcommit=1.0)
+    rg.join("a"), rg.join("b"), rg.join("c"), rg.join("d")
+    src = rg.placements["a"]
+    dst = next(c for c in rg.cells if c is not src)
+    with pytest.raises(RuntimeError, match="cannot take a pair"):
+        rg.handoff("a", dst.cell_name)
+
+
+def test_handoff_spooled_events_survive_and_deliver_once():
+    """At-least-once across cells: events spooled (undelivered) on the
+    source cell travel with the stream and reach the sink exactly once
+    after the handoff — same contract as failure rebind, but across
+    gateways."""
+    events = EventPlane(EventConfig(evidence_frames=0), DedupSink())
+    rg = _adapted_region_with_traffic(events=events)
+    src = rg.placements["v0"]
+    outer = next(s for s in src.sessions["v0"] if s.stream == OUTER)
+    src_eng = src._by_name[outer.engine]
+    ev = src_eng.emitter.emit(outer.key, HAZARD, 100, emit_s=1.0)
+    assert ev is not None
+    base_accept = events.sink.accepted_count
+    dst = next(c for c in rg.cells if c is not src)
+    rec = rg.handoff("v0", dst.cell_name, now_ms=5.0)
+    moved = next(s for s in rec["streams"] if s["key"] == outer.key)
+    assert moved["spool_depth"] >= 1, "spooled event did not travel"
+    # the event now pumps from the destination engine's emitter
+    rg.tick()
+    events.flush()
+    assert events.sink.accepted_count == base_accept + 1
+    assert ev.eid in events.sink.accepted
+    assert events.depth() == 0
+    # idempotency: nothing delivered twice across the move
+    assert events.sink.duplicates == 0
+
+
+def test_rebalance_is_bounded_and_moves_toward_slack():
+    rg = _region(n_cells=3, per_cell=2, overcommit=2.0,
+                 pump_budget=1, rebalance_margin=0.1)
+    # spike one cell's load factor by failing half its capacity: the
+    # cell rebinds locally, then the region's bounded rounds drain it
+    for v in range(9):
+        rg.join(f"v{v}")
+    victim_cell = rg.cells[0]
+    victim = victim_cell.replicas[0].name
+    rg.fail_replica(victim, now_ms=1.0)
+    gap_before = victim_cell.load_factor() - min(
+        c.load_factor() for c in rg.cells)
+    assert gap_before > 0.1
+    load_before = victim_cell.load_factor()
+    before = dict(rg.placements)
+    moved_total = []
+    for t in range(6):
+        moved = rg.rebalance(now_ms=float(2 + t))
+        # pump_budget=1: at most one handoff per control round
+        assert len(moved) <= 1
+        moved_total.extend(moved)
+    assert moved_total, "imbalance above margin must trigger handoffs"
+    # the overloaded cell drained first
+    assert moved_total[0]["src_cell"] == victim_cell.cell_name
+    assert victim_cell.load_factor() < load_before
+    # and the rounds converge: the residual gap is at most one
+    # session-pair quantum above the margin (a handoff moves 2 streams
+    # at a time — the gap cannot land below that granularity)
+    quantum = 2.0 / (rg.cells[1].capacity() * rg.cells[1].overcommit)
+    loads = sorted(c.load_factor() for c in rg.cells)
+    assert loads[-1] - loads[0] <= max(rg.rebalance_margin, quantum) + 1e-9
+    # routing stays consistent: each vehicle sits where its *last*
+    # handoff left it (a vehicle may ping-pong across rounds once the
+    # gap reaches the quantum)
+    last = {m["vehicle"]: m for m in moved_total}
+    for veh, m in last.items():
+        assert rg.placements[veh].cell_name == m["dst_cell"]
+        assert veh in rg.placements[veh].sessions
+
+
+# ---------------------------------------------------------------------------
+# telemetry roll-up
+# ---------------------------------------------------------------------------
+
+def test_region_rollup_conserves_cell_ledgers():
+    rg = _region()
+    for v in range(4):
+        rg.join(f"v{v}")
+    for i in range(3):
+        (f,) = _frames(i)
+        for v in range(4):
+            rg.push(f"v{v}", f, f)
+        rg.tick()
+    rg.drain(100)
+    for v in range(4):
+        rg.leave(f"v{v}")
+    for cell in rg.cells:
+        cell.ledger.check()
+    rollup = rg.rollup()
+    rollup.check()
+    for key in ("records", "frames_total", "frames_processed"):
+        assert rollup.totals[key] == sum(
+            c.ledger.totals[key] for c in rg.cells), key
+    assert rollup.totals["records"] == 8          # 4 vehicles x 2 streams
+    assert rollup.sketches["turnaround_ms"].count == 8
+
+
+# ---------------------------------------------------------------------------
+# status surface stays bounded
+# ---------------------------------------------------------------------------
+
+def test_fleet_status_bounded_with_cell_rows():
+    rg = _region(n_cells=3, per_cell=2)
+    for v in range(6):
+        rg.join(f"v{v}")
+    fs = FleetStatus.from_gateway(rg, top_k=2)
+    assert fs.total_replicas == 6
+    assert len(fs.replicas) == 2                  # bounded top-K rows
+    assert set(fs.cells) == {"cell0", "cell1", "cell2"}
+    for agg in fs.cells.values():
+        assert agg["replicas"] == 2
+        assert agg["slots"] == 8
+    assert fs.sessions == 6
+    text = fs.render()
+    assert "cells:" in text
+    assert "top 2 of 6 replicas" in text
+    d = fs.to_dict()
+    assert d["total_replicas"] == 6 and len(d["cells"]) == 3
+
+
+def test_flat_fleet_status_stays_unbounded_below_threshold():
+    from repro.streams import FleetGateway
+    gw = FleetGateway([_engine("r0"), _engine("r1")])
+    gw.join("v0")
+    fs = FleetStatus.from_gateway(gw)
+    assert len(fs.replicas) == 2 == fs.total_replicas
+    assert fs.cells == {} and fs.handoffs == 0
+
+
+# ---------------------------------------------------------------------------
+# scenario integration: shrunk city_scale at tier-1 size
+# ---------------------------------------------------------------------------
+
+def _shrunk_city(**over):
+    return get_scenario(
+        "city_scale",
+        replicas=city_replicas(cells=4, per_cell=2, slots=4),
+        initial_vehicles=40, max_vehicles=60, ticks=12,
+        scripted=(ScriptedEvent(3, "fail_replica", "c0r0"),
+                  ScriptedEvent(9, "restore_replica", "c0r0")),
+        **over)
+
+
+def test_shrunk_city_scenario_holds_all_invariants():
+    res = run_scenario(_shrunk_city())
+    assert res.violations == [], "\n".join(map(str, res.violations))
+    assert res.summary["rebinds"] > 0
+    assert res.trace.of_kind("handoff"), \
+        "replica failure should force cross-cell handoffs"
+    res.ledger.check()
+
+
+def test_shrunk_city_serial_parallel_digest_parity():
+    s = _shrunk_city()
+    a = run_scenario(s)
+    b = run_scenario(s, parallel=True)
+    assert a.violations == [] and b.violations == []
+    assert a.digest == b.digest, \
+        "hierarchy forked the serial<->parallel digest contract"
+
+
+def test_city_scenario_determinism():
+    s = _shrunk_city()
+    assert run_scenario(s).digest == run_scenario(s).digest
+
+
+# ---------------------------------------------------------------------------
+# slow: the full city_scale scenario (scenario-soak CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_city_scale_10k_streams_zero_violations():
+    s = get_scenario("city_scale")
+    assert len(s.replicas) >= 64
+    assert len({r.cell for r in s.replicas}) >= 8
+    res = run_scenario(s)
+    assert res.violations == [], "\n".join(map(str, res.violations[:10]))
+    assert res.summary["joined"] * 2 >= 10_000    # 10k+ streams
+    assert res.summary["refused"] == 0
+    assert res.summary["rebinds"] > 0             # failure rebinds fired
+    assert res.trace.of_kind("handoff")           # cross-cell handoffs
+    res.ledger.check()

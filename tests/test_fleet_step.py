@@ -166,8 +166,9 @@ def test_parallel_tick_single_fused_dispatch_per_tick():
 def test_parallel_tick_full_scenario_library():
     from repro.simulate import SCENARIOS
     for name in sorted(SCENARIOS):
-        if name == "soak_churn":          # 2000 ticks x2: soak job budget
-            continue
+        if name in ("soak_churn",   # 2000 ticks x2: soak job budget
+                    "city_scale"):  # 10k streams x2: parity is pinned at
+            continue                # cell granularity in test_cells.py
         s = get_scenario(name)
         try:
             assert_bit_identical(run_scenario(s),

@@ -130,6 +130,102 @@ def test_merge_from_rolls_up_replica_ledgers():
         assert abs(pf[key] - want) <= 0.0101 * abs(want) + 1e-9
 
 
+def test_merge_from_two_level_rollup_is_associative():
+    """The hierarchical aggregation path (streams.cells): replica
+    ledgers -> cell ledgers -> region must answer exactly like merging
+    every replica ledger into the region directly — ``merge_from`` is
+    associative over the tree shape."""
+    n_cells, per_cell = 4, 3
+    replicas = [[Ledger(aggregate=True) for _ in range(per_cell)]
+                for _ in range(n_cells)]
+    for i in range(240):
+        t = 3.0 * (i + 1)
+        cell, rep = i % n_cells, (i // n_cells) % per_cell
+        replicas[cell][rep].add(
+            _rec(i, device=f"d{i % 5}", turnaround=t, ttft=t / 8,
+                 processed=10 - i % 3))
+    # depth 2: replica -> cell -> region
+    cells = []
+    for group in replicas:
+        cl = Ledger(aggregate=True)
+        for rl in group:
+            cl.merge_from(rl)
+        cells.append(cl)
+    region = Ledger(aggregate=True)
+    for cl in cells:
+        region.merge_from(cl)
+    # depth 1: replica -> region directly
+    flat = Ledger(aggregate=True)
+    for group in replicas:
+        for rl in group:
+            flat.merge_from(rl)
+    assert region.totals == flat.totals
+    assert ([s.row() for s in region.summarise()]
+            == [s.row() for s in flat.summarise()])
+    pr, pf = region.percentiles(), flat.percentiles()
+    assert set(pr) == set(pf)
+    for key in pr:
+        assert pr[key] == pytest.approx(pf[key], rel=1e-12), key
+
+
+def test_merge_from_depth2_quantiles_within_rel_err():
+    """Sketch quantiles survive two merge levels loss-free: the region's
+    answers stay within the ledger's ``rel_err`` of the exact row-backed
+    answers computed from every record."""
+    exact = Ledger()
+    replicas = [[Ledger(aggregate=True) for _ in range(4)]
+                for _ in range(3)]
+    for i in range(300):
+        t = 1.5 ** (i % 40) + i          # wide dynamic range
+        r = _rec(i, device=f"d{i % 2}", turnaround=t, ttft=t / 10,
+                 processed=i % 11, total=10 if i % 11 <= 10 else 11)
+        exact.add(r)
+        replicas[i % 3][i % 4].add(
+            _rec(i, device=f"d{i % 2}", turnaround=t, ttft=t / 10,
+                 processed=i % 11, total=10 if i % 11 <= 10 else 11))
+    region = Ledger(aggregate=True)
+    for group in replicas:
+        cl = Ledger(aggregate=True)
+        for rl in group:
+            cl.merge_from(rl)
+        region.merge_from(cl)
+    got, want = region.sketch_percentiles(), exact.percentiles()
+    assert set(got) == set(want)
+    for key, w in want.items():
+        assert abs(got[key] - w) <= 0.0101 * abs(w) + 1e-9, \
+            f"{key}: depth-2 sketch {got[key]} vs exact {w}"
+
+
+def test_merge_from_conservation_holds_at_every_level():
+    """``check()`` passes at replica, cell, and region level, and a
+    conservation-violating record is caught at the replica's add() —
+    the roll-up can never launder an unbalanced record upward."""
+    replicas = [Ledger(aggregate=True) for _ in range(4)]
+    for i in range(80):
+        r = _rec(i, turnaround=2.0 * (i + 1), processed=10 - i % 4)
+        r.frames_gated = i % 4            # processed+gated == total
+        replicas[i % 4].add(r)
+    cells = []
+    for half in (replicas[:2], replicas[2:]):
+        cl = Ledger(aggregate=True)
+        for rl in half:
+            rl.check()                    # replica level
+            cl.merge_from(rl)
+        cl.check()                        # cell level
+        cells.append(cl)
+    region = Ledger(aggregate=True)
+    for cl in cells:
+        region.merge_from(cl)
+    region.check()                        # region level
+    assert region.totals["records"] == 80
+    assert (region.totals["frames_total"]
+            == sum(rl.totals["frames_total"] for rl in replicas))
+    bad = _rec(99, processed=5, total=10)
+    bad.frames_gated, bad.frames_dropped = 1, 1   # 5+1+1 != 10
+    with pytest.raises(AssertionError):
+        replicas[0].add(bad)
+
+
 # ----------------------------------------------------------------------
 # summarise(wall_s) and the table columns
 # ----------------------------------------------------------------------
